@@ -1,0 +1,31 @@
+"""Fig. 15 — modeled energy: host-system W x host time vs CSSD-system W x
+HGNN time (the paper's own W-times-seconds method; clearly modeled, not
+measured)."""
+from __future__ import annotations
+
+import numpy as np
+
+from . import common as C
+from . import fig14_end2end as F14
+from repro.core import gnn
+
+
+def run(workloads=("citeseer", "cs", "physics", "road-tx")):
+    lines = []
+    ratios = []
+    for w in workloads:
+        edges, emb, _ = C.make_workload(w)
+        params = gnn.init_params("gcn", [emb.shape[1], 128, 64], seed=0)
+        targets = np.random.default_rng(0).integers(0, emb.shape[0], 8)
+        th = F14._host_end2end(edges, emb, params, targets)
+        tg = F14._hgnn_end2end(edges, emb, params, targets)
+        e_host = th * C.POWER["gtx1060_system"]
+        e_hgnn = tg * C.POWER["cssd_system"]
+        ratios.append(e_host / e_hgnn)
+        lines.append(C.csv_line(f"fig15.{w}.host_J", e_host / 1e6, "modeled"))
+        lines.append(C.csv_line(f"fig15.{w}.hgnn_J", e_hgnn / 1e6,
+                                f"ratio={e_host/e_hgnn:.1f}x"))
+    lines.append(C.csv_line("fig15.geomean_energy_ratio",
+                            float(np.exp(np.mean(np.log(ratios)))),
+                            "paper_claims=33.2x_vs_rtx3090"))
+    return lines

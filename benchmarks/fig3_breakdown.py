@@ -1,0 +1,36 @@
+"""Fig. 3a — end-to-end GCN inference latency breakdown on the host path:
+GraphPrep / BatchPrep / PureInfer / GraphI/O / BatchI/O per workload.
+Reproduces the paper's claim that PureInfer is a tiny fraction and
+BatchI/O dominates as graphs grow."""
+from __future__ import annotations
+
+import numpy as np
+
+from . import common as C
+from repro.core import gnn
+
+
+def run(workloads=("citeseer", "chmleon", "cs", "physics", "road-tx",
+                   "youtube")):
+    lines = []
+    fractions = {}
+    for w in workloads:
+        edges, emb, bucket = C.make_workload(w)
+        host = C.HostPipeline(edges, emb)
+        params = gnn.init_params("gcn", [emb.shape[1], 128, 64], seed=0)
+        rng = np.random.default_rng(0)
+        targets = rng.integers(0, emb.shape[0], 8)
+        batch = host.batch_preprocess(targets, [10, 10])
+        host.infer("gcn", params, batch)
+        t = host.times
+        tot = t.total
+        lines.append(C.csv_line(
+            f"fig3.{w}.total", tot,
+            f"graphio={t.graph_io/tot:.2f};graphprep={t.graph_prep/tot:.2f};"
+            f"batchio={t.batch_io/tot:.2f};batchprep={t.batch_prep/tot:.2f};"
+            f"pureinfer={t.pure_infer/tot:.2f};bucket={bucket}"))
+        fractions[w] = t.pure_infer / tot
+    mean_pi = float(np.mean(list(fractions.values())))
+    lines.append(C.csv_line("fig3.pure_infer_fraction_mean", mean_pi,
+                            "paper_claims=0.02"))
+    return lines

@@ -1,0 +1,151 @@
+"""Attribution: which ops/computations dominate the loop-expanded bytes and
+flops of a recorded dry-run cell — the §Perf profiling view.
+
+  PYTHONPATH=src:. python -m benchmarks.hlo_breakdown results/dryrun/<cell>.hlo.gz
+"""
+from __future__ import annotations
+
+import gzip
+import re
+import sys
+from collections import defaultdict
+
+from .hlo_analysis import (parse_hlo, _while_trip_count, _operand_names,
+                           _called_comps, _dot_flops, shape_bytes, COLLECTIVES)
+
+
+def breakdown(text: str):
+    comps, entry = parse_hlo(text)
+    by_op_bytes = defaultdict(float)
+    by_comp_bytes = defaultdict(float)
+    by_comp_flops = defaultdict(float)
+    coll = defaultdict(float)
+
+    from . import hlo_analysis as H
+    # reuse the exact byte model by monkey-walking with local accumulation
+    def visit(comp_name, mult, depth):
+        comp = comps.get(comp_name)
+        if comp is None or depth > 16:
+            return
+        for ins in comp.instrs:
+            if ins.op in COLLECTIVES:
+                b = 0
+                for on in _operand_names(ins.args):
+                    src = comp.by_name.get(on)
+                    if src is not None:
+                        b += shape_bytes(src.type_str)
+                b = b or shape_bytes(ins.type_str)
+                coll[f"{ins.op}@{comp_name[:36]}"] += b * mult
+                by_op_bytes[ins.op] += b * mult
+                by_comp_bytes[comp_name] += b * mult
+            elif ins.op == "while":
+                cond = re.search(r"condition=%?([\w\.\-]+)", ins.args)
+                body = re.search(r"body=%?([\w\.\-]+)", ins.args)
+                tc = _while_trip_count(comps, cond.group(1)) if cond else None
+                tc = tc if tc and tc > 0 else 1
+                if body:
+                    visit(body.group(1), mult * tc, depth + 1)
+            else:
+                ea = H.expanded_analysis.__wrapped__ if False else None
+                # replicate the single-op byte model
+                b = _op_bytes_model(comps, comp, ins)
+                if b:
+                    by_op_bytes[ins.op] += b * mult
+                    by_comp_bytes[comp_name] += b * mult
+                if ins.op in ("dot", "convolution"):
+                    by_comp_flops[comp_name] += _dot_flops(comp, ins) * mult
+                if ins.op == "fusion":
+                    for cn in _called_comps(ins.args):
+                        fc = comps.get(cn)
+                        if fc:
+                            for fi in fc.instrs:
+                                if fi.op == "dot":
+                                    by_comp_flops[comp_name] += \
+                                        _dot_flops(fc, fi) * mult
+                if ins.op in ("call", "conditional", "custom-call"):
+                    for cn in _called_comps(ins.args):
+                        visit(cn, mult, depth + 1)
+
+    def _op_bytes_model(comps, comp, ins):
+        import benchmarks.hlo_analysis as H2
+        # mirror expanded_analysis op handling
+        skip = H2._SKIP_BYTES_OPS
+        if ins.op in skip or ins.op in COLLECTIVES or ins.op == "while":
+            return 0.0
+        if ins.op == "fusion":
+            # same fusion model
+            called = _called_comps(ins.args)
+            fc = comps.get(called[0]) if called else None
+            if fc is None:
+                return shape_bytes(ins.type_str)
+            total = 0.0
+            uses = {}
+            for node in fc.instrs:
+                for on in _operand_names(node.args):
+                    uses.setdefault(on, []).append(node)
+            for node in fc.instrs:
+                if node.op != "parameter":
+                    continue
+                u = uses.get(node.name, [])
+                if u and all(x.op in ("dynamic-slice", "gather") for x in u):
+                    total += sum(shape_bytes(x.type_str) for x in u)
+                else:
+                    total += shape_bytes(node.type_str)
+            root = next((x for x in fc.instrs if x.is_root), None)
+            if root is not None and root.op == "tuple":
+                for on in _operand_names(root.args):
+                    nd = fc.by_name.get(on)
+                    total += _w(fc, nd)
+            else:
+                total += _w(fc, root)
+            return total
+        if ins.op in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * shape_bytes(ins.type_str)
+        if ins.op in ("dynamic-update-slice", "scatter"):
+            cand = [shape_bytes(comp.by_name[on].type_str)
+                    for on in _operand_names(ins.args)
+                    if on in comp.by_name]
+            return 2.0 * min(cand) if cand else 0.0
+        if ins.op == "broadcast":
+            return shape_bytes(ins.type_str)
+        b = shape_bytes(ins.type_str)
+        for on in _operand_names(ins.args):
+            src = comp.by_name.get(on)
+            if src is not None:
+                b += shape_bytes(src.type_str)
+        return b
+
+    def _w(fc, node):
+        if node is None:
+            return 0.0
+        if node.op == "dynamic-update-slice":
+            cand = [shape_bytes(fc.by_name[on].type_str)
+                    for on in _operand_names(node.args) if on in fc.by_name]
+            return float(min(cand)) if cand else shape_bytes(node.type_str)
+        return float(shape_bytes(node.type_str))
+
+    visit(entry, 1.0, 0)
+    return by_op_bytes, by_comp_bytes, by_comp_flops, coll
+
+
+def main():
+    path = sys.argv[1]
+    with gzip.open(path, "rt") as f:
+        txt = f.read()
+    ob, cb, cf, coll = breakdown(txt)
+    print("== bytes by op kind ==")
+    for k, v in sorted(ob.items(), key=lambda kv: -kv[1])[:14]:
+        print(f"  {k:28s} {v/1e9:12.2f} GB")
+    print("== bytes by computation ==")
+    for k, v in sorted(cb.items(), key=lambda kv: -kv[1])[:12]:
+        print(f"  {k[:52]:52s} {v/1e9:12.2f} GB")
+    print("== flops by computation ==")
+    for k, v in sorted(cf.items(), key=lambda kv: -kv[1])[:8]:
+        print(f"  {k[:52]:52s} {v/1e12:12.2f} TF")
+    print("== collectives ==")
+    for k, v in sorted(coll.items(), key=lambda kv: -kv[1])[:10]:
+        print(f"  {k:64s} {v/1e9:10.2f} GB")
+
+
+if __name__ == "__main__":
+    main()

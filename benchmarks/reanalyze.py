@@ -1,0 +1,42 @@
+"""Re-derive flops/bytes/collectives for recorded dry-run cells from their
+saved HLO (results/dryrun/*.hlo.gz) without recompiling.
+
+  PYTHONPATH=src:. python -m benchmarks.reanalyze [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from .hlo_analysis import expanded_analysis
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args(argv)
+    n = 0
+    for jf in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        hf = jf[:-5] + ".hlo.gz"
+        if not os.path.exists(hf):
+            continue
+        with gzip.open(hf, "rt") as f:
+            txt = f.read()
+        ea = expanded_analysis(txt)
+        with open(jf) as f:
+            rec = json.load(f)
+        rec["hlo_flops"] = ea["flops"]
+        rec["hlo_bytes"] = ea["bytes"]
+        rec["collectives"] = ea["collectives"]
+        rec["unknown_loops"] = ea["unknown_loops"]
+        with open(jf, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

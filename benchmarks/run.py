@@ -1,0 +1,71 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src:. python -m benchmarks.run [--only fig3,fig14,...]
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract).  The roofline
+table (LM archs) reads the dry-run artifacts; run
+``python -m repro.launch.dryrun --all --both-meshes`` first for §Roofline.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from . import (fig3_breakdown, fig14_end2end, fig15_energy,
+                   fig16_pure_inference, fig17_opbreakdown, fig18_bulk,
+                   fig19_batchprep, fig20_mutable, table5_datasets)
+    suites = {
+        "table5": table5_datasets.run,
+        "fig3": fig3_breakdown.run,
+        "fig14": fig14_end2end.run,
+        "fig15": fig15_energy.run,
+        "fig16": fig16_pure_inference.run,
+        "fig17": fig17_opbreakdown.run,
+        "fig18": fig18_bulk.run,
+        "fig19": fig19_batchprep.run,
+        "fig20": fig20_mutable.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for line in fn():
+                print(line)
+            print(f"{name}.suite_wall,{(time.perf_counter()-t0)*1e6:.0f},ok")
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures += 1
+            print(f"{name}.suite_wall,0,FAILED")
+    # roofline summary (if dry-run artifacts exist)
+    try:
+        from .roofline import load_records, table
+        recs = load_records(os.path.join(os.path.dirname(__file__), "..",
+                                         "results", "dryrun"))
+        if recs:
+            rows = table(recs, mesh_filter="16x16")
+            for r in rows:
+                print(f"roofline.{r['arch']}.{r['shape']},"
+                      f"{r['bound_s']*1e6:.0f},"
+                      f"bound={r['bound']};frac={r['roofline_fraction']:.3f};"
+                      f"useful={r['useful_flops_ratio']:.2f}")
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

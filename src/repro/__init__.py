@@ -1,0 +1,5 @@
+"""repro — near-storage, hardware/software co-programmable JAX framework
+reproducing HolisticGNN (FAST'22) and generalizing its storage/paging and
+kernel-dispatch mechanisms to large-scale LM training/serving on TPU pods."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,207 @@
+"""GNN models — GCN, GIN, NGCF (paper §2.1), in two executable forms:
+
+1. **Direct JAX** forward functions (jit-able; the training/validation oracle).
+2. **DFG builders** emitting the paper-style computational graph (Fig. 10)
+   whose C-operations the GraphRunner engine binds to registered C-kernels
+   (Shell jnp or User Pallas) at run time.  Tests assert form 2 == form 1.
+
+All models consume the sampled page-format blocks produced by
+``repro.store.sampler``: per GNN layer a ``(num_dst, fanout)`` neighbor-index
+matrix + mask over the previous level's node embeddings.
+
+* GCN  — average aggregation (degree-normalized), 1-layer transform + ReLU.
+* GIN  — summation aggregation with learnable self-weight eps and a 2-layer
+         MLP transform (the paper's "more expressively powerful" combination).
+* NGCF — similarity-aware aggregation: element-wise product of neighbor and
+         target embeddings feeds a second weight matrix (heaviest aggregation
+         of the three, paper Fig. 16c).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .dfg import DFG
+
+# ----------------------------------------------------------------- params
+
+def _glorot(rng, fan_in, fan_out):
+    s = np.sqrt(6.0 / (fan_in + fan_out))
+    return jnp.asarray(rng.uniform(-s, s, (fan_in, fan_out)), dtype=jnp.float32)
+
+
+def init_params(model: str, dims: list[int], seed: int = 0) -> list[dict]:
+    """dims = [F_in, F_h1, ..., F_out]; one param dict per GNN layer."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for fi, fo in zip(dims[:-1], dims[1:]):
+        if model == "gcn":
+            params.append({"W": _glorot(rng, fi, fo),
+                           "b": jnp.zeros((fo,), jnp.float32)})
+        elif model == "gin":
+            params.append({
+                "eps": jnp.zeros((), jnp.float32),
+                "W1": _glorot(rng, fi, fo), "b1": jnp.zeros((fo,), jnp.float32),
+                "W2": _glorot(rng, fo, fo), "b2": jnp.zeros((fo,), jnp.float32),
+            })
+        elif model == "ngcf":
+            params.append({"W1": _glorot(rng, fi, fo),
+                           "W2": _glorot(rng, fi, fo),
+                           "b": jnp.zeros((fo,), jnp.float32)})
+        else:
+            raise ValueError(model)
+    return params
+
+
+# ------------------------------------------------------------- aggregation
+def agg_mean(h, nbr, mask):
+    g = jnp.take(h, nbr, axis=0) * mask[..., None]
+    deg = jnp.maximum(mask.sum(axis=1), 1.0)
+    return g.sum(axis=1) / deg[:, None]
+
+
+def agg_sum(h, nbr, mask):
+    g = jnp.take(h, nbr, axis=0) * mask[..., None]
+    return g.sum(axis=1)
+
+
+# ------------------------------------------------------------ direct models
+def gcn_forward(params, emb, blocks):
+    """blocks: [(nbr, mask), ...] ordered layer_1..layer_L (outermost first)."""
+    h = emb
+    for p, (nbr, mask) in zip(params, blocks):
+        h = agg_mean(h, nbr, mask)
+        h = jnp.dot(h, p["W"], preferred_element_type=jnp.float32) + p["b"]
+        h = jax.nn.relu(h)
+    return h
+
+
+def gin_forward(params, emb, blocks):
+    h = emb
+    for p, (nbr, mask) in zip(params, blocks):
+        s = agg_sum(h, nbr, mask)                       # includes self-loop
+        self_h = h[: nbr.shape[0]]                      # prefix ordering
+        z = s + p["eps"] * self_h                       # (1+eps)·self + Σ nbrs
+        z = jnp.dot(z, p["W1"], preferred_element_type=jnp.float32) + p["b1"]
+        z = jax.nn.relu(z)
+        z = jnp.dot(z, p["W2"], preferred_element_type=jnp.float32) + p["b2"]
+        h = jax.nn.relu(z)
+    return h
+
+
+def ngcf_forward(params, emb, blocks, *, alpha: float = 0.2):
+    h = emb
+    for p, (nbr, mask) in zip(params, blocks):
+        self_h = h[: nbr.shape[0]]
+        g = jnp.take(h, nbr, axis=0)                       # (D,K,F) neighbors
+        prod = g * self_h[:, None, :]                      # similarity term
+        deg = jnp.maximum(mask.sum(axis=1), 1.0)[:, None]
+        m1 = (g * mask[..., None]).sum(axis=1) / deg
+        m2 = (prod * mask[..., None]).sum(axis=1) / deg
+        z = (jnp.dot(m1, p["W1"], preferred_element_type=jnp.float32)
+             + jnp.dot(m2, p["W2"], preferred_element_type=jnp.float32)
+             + jnp.dot(self_h, p["W1"], preferred_element_type=jnp.float32)
+             + p["b"])
+        h = jnp.where(z > 0, z, alpha * z)                 # LeakyReLU
+    return h
+
+
+FORWARD = {"gcn": gcn_forward, "gin": gin_forward, "ngcf": ngcf_forward}
+
+
+# ---------------------------------------------------------------- DFG form
+def build_gcn_dfg(num_layers: int) -> DFG:
+    """Paper Fig. 10b: Batch -> SpMM_Mean -> GEMM(+W) -> ReLU, per layer."""
+    g = DFG()
+    h = g.create_in("H")
+    for l in range(num_layers):
+        nbr = g.create_in(f"nbr{l}")
+        mask = g.create_in(f"mask{l}")
+        w = g.create_in(f"W{l}")
+        b = g.create_in(f"b{l}")
+        (a,) = g.create_op("SpMM_Mean", [h, nbr, mask])
+        (m,) = g.create_op("GEMM", [a, w])
+        (m,) = g.create_op("BiasAdd", [m, b])
+        (h,) = g.create_op("ReLU", [m])
+    g.create_out("Result", h)
+    return g
+
+
+def build_gin_dfg(num_layers: int) -> DFG:
+    g = DFG()
+    h = g.create_in("H")
+    for l in range(num_layers):
+        nbr = g.create_in(f"nbr{l}")
+        mask = g.create_in(f"mask{l}")
+        eps = g.create_in(f"eps{l}")
+        w1, b1 = g.create_in(f"W1_{l}"), g.create_in(f"b1_{l}")
+        w2, b2 = g.create_in(f"W2_{l}"), g.create_in(f"b2_{l}")
+        (s,) = g.create_op("SpMM_Sum", [h, nbr, mask])
+        (selfh,) = g.create_op("Prefix", [h, nbr])
+        (se,) = g.create_op("Scale", [selfh, eps])
+        (z,) = g.create_op("Add", [s, se])
+        (z,) = g.create_op("GEMM", [z, w1])
+        (z,) = g.create_op("BiasAdd", [z, b1])
+        (z,) = g.create_op("ReLU", [z])
+        (z,) = g.create_op("GEMM", [z, w2])
+        (z,) = g.create_op("BiasAdd", [z, b2])
+        (h,) = g.create_op("ReLU", [z])
+    g.create_out("Result", h)
+    return g
+
+
+def build_ngcf_dfg(num_layers: int) -> DFG:
+    g = DFG()
+    h = g.create_in("H")
+    for l in range(num_layers):
+        nbr = g.create_in(f"nbr{l}")
+        mask = g.create_in(f"mask{l}")
+        w1, w2, b = (g.create_in(f"W1_{l}"), g.create_in(f"W2_{l}"),
+                     g.create_in(f"b{l}"))
+        (m1,) = g.create_op("SpMM_Mean", [h, nbr, mask])
+        (prod,) = g.create_op("SDDMM", [h, nbr, mask])          # (D,K,F)
+        (m2sum,) = g.create_op("Reduce", [prod], attrs={"axis": 1, "op": "sum"})
+        (deg,) = g.create_op("DegNorm", [mask])
+        (m2,) = g.create_op("Mul", [m2sum, deg])
+        (selfh,) = g.create_op("Prefix", [h, nbr])
+        (t1,) = g.create_op("GEMM", [m1, w1])
+        (t2,) = g.create_op("GEMM", [m2, w2])
+        (t3,) = g.create_op("GEMM", [selfh, w1])
+        (z,) = g.create_op("Add", [t1, t2])
+        (z,) = g.create_op("Add", [z, t3])
+        (z,) = g.create_op("BiasAdd", [z, b])
+        (h,) = g.create_op("LeakyReLU", [z])
+    g.create_out("Result", h)
+    return g
+
+
+BUILD_DFG = {"gcn": build_gcn_dfg, "gin": build_gin_dfg, "ngcf": build_ngcf_dfg}
+
+
+def extra_shell_kernels() -> dict:
+    """GNN-specific helper C-operations used by the DFG forms."""
+    return {
+        "Prefix": lambda h, nbr: h[: nbr.shape[0]],
+        "DegNorm": lambda mask: 1.0 / jnp.maximum(mask.sum(axis=1), 1.0)[:, None],
+        "LeakyReLU": lambda z: jnp.where(z > 0, z, 0.2 * z),
+    }
+
+
+def dfg_feeds(model: str, params, emb, blocks) -> dict:
+    """Assemble the feed dict matching the build_*_dfg input names."""
+    feeds = {"H": emb}
+    for l, (nbr, mask) in enumerate(blocks):
+        feeds[f"nbr{l}"] = nbr
+        feeds[f"mask{l}"] = mask
+    for l, p in enumerate(params):
+        if model == "gcn":
+            feeds[f"W{l}"], feeds[f"b{l}"] = p["W"], p["b"]
+        elif model == "gin":
+            feeds[f"eps{l}"] = p["eps"]
+            feeds[f"W1_{l}"], feeds[f"b1_{l}"] = p["W1"], p["b1"]
+            feeds[f"W2_{l}"], feeds[f"b2_{l}"] = p["W2"], p["b2"]
+        elif model == "ngcf":
+            feeds[f"W1_{l}"], feeds[f"W2_{l}"] = p["W1"], p["W2"]
+            feeds[f"b{l}"] = p["b"]
+    return feeds

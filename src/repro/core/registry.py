@@ -1,0 +1,57 @@
+"""C-operation / C-kernel registry — paper Table 3 semantics.
+
+Two metadata structures drive GraphRunner's dynamic binding:
+
+  * **device table**: device name -> priority (RegisterDevice),
+  * **operation table**: C-operation name -> [(device, C-kernel ptr), ...]
+    (RegisterOpDefinition; multiple kernels per operation allowed).
+
+At execution time the engine resolves each C-operation to the registered
+C-kernel whose device has the *highest priority* — e.g. with
+CPU=50 < vector=150 < systolic=300, a GEMM with all three kernels runs on
+the systolic implementation.  This is exactly how the paper routes GEMM to
+Gemmini and SpMM to Hwacha in the Hetero configuration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+@dataclass
+class KernelRegistry:
+    devices: dict[str, int] = field(default_factory=dict)
+    ops: dict[str, list[tuple[str, Callable]]] = field(default_factory=dict)
+
+    # -- paper: RegisterDevice(newDevice)
+    def register_device(self, name: str, priority: int) -> None:
+        self.devices[name] = int(priority)
+
+    # -- paper: RegisterOpDefinition(newOp)
+    def register_op(self, op_name: str, device: str, fn: Callable) -> None:
+        if device not in self.devices:
+            raise KeyError(f"device {device!r} not registered")
+        lst = self.ops.setdefault(op_name, [])
+        lst[:] = [(d, f) for (d, f) in lst if d != device]   # re-registration wins
+        lst.append((device, fn))
+
+    def unregister_device(self, device: str) -> None:
+        """Drop a device and all its kernels (XBuilder partial reconfig)."""
+        self.devices.pop(device, None)
+        for name in list(self.ops):
+            self.ops[name] = [(d, f) for (d, f) in self.ops[name] if d != device]
+            if not self.ops[name]:
+                del self.ops[name]
+
+    def resolve(self, op_name: str) -> tuple[str, Callable]:
+        cands = self.ops.get(op_name)
+        if not cands:
+            raise KeyError(f"no C-kernel registered for C-operation {op_name!r}")
+        return max(cands, key=lambda df: self.devices.get(df[0], -1))
+
+    def dispatch(self, op_name: str, *args, **kwargs):
+        _, fn = self.resolve(op_name)
+        return fn(*args, **kwargs)
+
+    def snapshot(self) -> dict:
+        return {op: [d for d, _ in lst] for op, lst in self.ops.items()}

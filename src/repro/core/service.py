@@ -1,0 +1,151 @@
+"""HolisticGNN service facade — the CSSD-resident endpoint exposing the
+paper's Table-1 RPCs (GraphStore bulk/unit ops, GraphRunner Run/Plugin,
+XBuilder Program) over one object, suitable for RPCServer dispatch.
+
+``run`` executes the full near-storage inference pipeline: the DFG's
+``BatchPre`` C-operation performs node sampling + reindexing + embedding
+gather *against the page store* (no host round-trip), then the engine
+binds and executes the model's C-operations by device priority.
+"""
+from __future__ import annotations
+
+import importlib
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..store.blockdev import BlockDevice
+from ..store.graphstore import GraphStore
+from ..store.sampler import sample_batch
+from .dfg import DFG, Engine
+from .registry import KernelRegistry
+from .xbuilder import XBuilder, Bitstream, SHELL_DEVICE
+from . import gnn
+
+
+class HolisticGNNService:
+    def __init__(self, *, h_threshold: int = 128, pad_to: int = 64,
+                 dev: BlockDevice | None = None):
+        self.store = GraphStore(dev or BlockDevice(), h_threshold=h_threshold)
+        self.registry = KernelRegistry()
+        self.xbuilder = XBuilder(self.registry)
+        for name, fn in gnn.extra_shell_kernels().items():
+            self.registry.register_op(name, SHELL_DEVICE, fn)
+        self._register_batchpre()
+        self.engine = Engine(self.registry)
+        self.pad_to = pad_to
+
+    # ------------------------------------------------------------- GraphStore
+    def update_graph(self, edge_array, embeddings=None):
+        tl = self.store.update_graph(np.asarray(edge_array),
+                                     None if embeddings is None
+                                     else np.asarray(embeddings))
+        return {"total_s": tl.total, "user_visible_s": tl.user_visible}
+
+    def add_vertex(self, vid, embed=None):
+        self.store.add_vertex(int(vid), embed)
+
+    def delete_vertex(self, vid):
+        self.store.delete_vertex(int(vid))
+
+    def add_edge(self, dst, src):
+        self.store.add_edge(int(dst), int(src))
+
+    def delete_edge(self, dst, src):
+        self.store.delete_edge(int(dst), int(src))
+
+    def update_embed(self, vid, embed):
+        self.store.update_embed(int(vid), np.asarray(embed))
+
+    def get_embed(self, vid):
+        return self.store.get_embed(int(vid))
+
+    def get_neighbors(self, vid):
+        return self.store.get_neighbors(int(vid))
+
+    # ------------------------------------------------------------ GraphRunner
+    def _register_batchpre(self):
+        def batch_pre(targets, *, fanouts, seed=0):
+            batch = sample_batch(self.store, np.asarray(targets), list(fanouts),
+                                 rng=np.random.default_rng(seed),
+                                 pad_to=self.pad_to)
+            outs = [jnp.asarray(batch.embeddings)]
+            for blk in batch.layers:
+                outs.append(jnp.asarray(blk.nbr))
+                outs.append(jnp.asarray(blk.mask))
+            return tuple(outs)
+        self.registry.register_op("BatchPre", SHELL_DEVICE, batch_pre)
+
+    def run(self, dfg: str, batch, weights: dict | None = None,
+            fanouts=None, seed: int = 0):
+        """Paper Run(DFG, batch).
+
+        * If the DFG starts with a ``BatchPre`` node (service-style DFG),
+          only the raw target VIDs are fed; sampling happens near storage.
+        * Otherwise (model-only DFG, Fig. 10b) the service samples first and
+          feeds H/nbr/mask inputs directly.
+        """
+        dfg_obj = DFG.load(dfg) if isinstance(dfg, str) else dfg
+        feeds = dict(weights or {})
+        if "Batch" in dfg_obj._ins:
+            feeds["Batch"] = np.asarray(batch)
+        else:
+            assert fanouts is not None, "model-only DFG needs fanouts"
+            b = sample_batch(self.store, np.asarray(batch), list(fanouts),
+                             rng=np.random.default_rng(seed), pad_to=self.pad_to)
+            feeds["H"] = jnp.asarray(b.embeddings)
+            for l, blk in enumerate(b.layers):
+                feeds[f"nbr{l}"] = jnp.asarray(blk.nbr)
+                feeds[f"mask{l}"] = jnp.asarray(blk.mask)
+        out = self.engine.run(dfg_obj, feeds)
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    def plugin(self, shared_lib: str):
+        """Paper Plugin(shared_lib): import a module exposing register(api)."""
+        mod = importlib.import_module(shared_lib)
+        mod.register(self.registry)
+        return sorted(self.registry.devices)
+
+    # --------------------------------------------------------------- XBuilder
+    def program(self, device: str, priority: int, kernels: str):
+        """Paper Program(bitfile): ``kernels`` names a module whose
+        ``bitstream()`` returns {op_name: fn} — the partial bitfile."""
+        mod = importlib.import_module(kernels)
+        bs = Bitstream(device=device, priority=int(priority),
+                       kernels=mod.bitstream())
+        return self.xbuilder.program(bs)
+
+
+def make_service_dfg(model: str, num_layers: int, fanouts) -> DFG:
+    """Service-style DFG whose first node is BatchPre (paper Fig. 10a)."""
+    g = DFG()
+    batch = g.create_in("Batch")
+    outs = g.create_op("BatchPre", [batch], n_out=1 + 2 * num_layers,
+                       attrs={"fanouts": list(fanouts)})
+    h, rest = outs[0], outs[1:]
+    model_dfg = gnn.BUILD_DFG[model](num_layers)
+    # splice: rewire the model DFG's inputs onto BatchPre outputs
+    remap = {"H": str(h)}
+    for l in range(num_layers):
+        remap[f"nbr{l}"] = str(rest[2 * l])
+        remap[f"mask{l}"] = str(rest[2 * l + 1])
+    base = len(g._nodes)
+    for node in model_dfg._nodes:
+        new_in = []
+        for i in node.inputs:
+            if i in remap:
+                new_in.append(remap[i])
+            elif "_" in i and i.split("_")[0].isdigit():
+                s, slot = i.rsplit("_", 1)
+                new_in.append(f"{int(s) + base}_{slot}")
+            else:                                     # weight input
+                if i not in g._ins:
+                    g.create_in(i)
+                new_in.append(i)
+        outs2 = [f"{node.seq + base}_{o.rsplit('_', 1)[1]}" for o in node.outputs]
+        g._nodes.append(type(node)(node.seq + base, node.op, new_in, outs2,
+                                   dict(node.attrs)))
+    for name, src in model_dfg._outs.items():
+        s, slot = src.rsplit("_", 1)
+        g.create_out(name, f"{int(s) + base}_{slot}")
+    return g

@@ -1,0 +1,3 @@
+from .pipeline import Pipeline, synth_batch
+
+__all__ = ["Pipeline", "synth_batch"]

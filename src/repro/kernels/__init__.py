@@ -1,0 +1,6 @@
+from . import ref
+from .ops import (gemm, spmm, sddmm, rmsnorm, flash_attention,
+                  decode_attention, set_interpret, BITSTREAMS, program_config)
+
+__all__ = ["ref", "gemm", "spmm", "sddmm", "rmsnorm", "flash_attention",
+           "decode_attention", "set_interpret", "BITSTREAMS", "program_config"]

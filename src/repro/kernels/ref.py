@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+Each function is the semantic ground truth; kernel tests sweep shapes and
+dtypes and `assert_allclose` the pallas_call (interpret=True) against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def spmm_ref(h: jax.Array, nbr: jax.Array, mask: jax.Array,
+             *, mode: str = "mean") -> jax.Array:
+    """ELL/page-format neighbor aggregation. h (N,F), nbr/mask (D,K) -> (D,F)."""
+    g = jnp.take(h, nbr, axis=0) * mask[..., None]
+    s = g.sum(axis=1)
+    if mode == "sum":
+        return s
+    deg = jnp.maximum(mask.sum(axis=1), 1.0)
+    return s / deg[:, None]
+
+
+def sddmm_ref(h: jax.Array, nbr: jax.Array, mask: jax.Array) -> jax.Array:
+    """Per-edge product with destination rows: (D,K,F)."""
+    g = jnp.take(h, nbr, axis=0)
+    d = h[: nbr.shape[0]]
+    return g * d[:, None, :] * mask[..., None]
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(ms + eps) * w).astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, scale: float | None = None) -> jax.Array:
+    """(B,H,T,D) x (B,Hkv,S,D) -> (B,H,T,D); GQA by head broadcast."""
+    b, hq, t, d = q.shape
+    hkv = k.shape[1]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        tt = jnp.arange(t)[:, None]
+        ss = jnp.arange(k.shape[2])[None, :]
+        s = jnp.where(tt >= ss, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_gather(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """(P,ps,Hkv,D) pages + (B,PP) table -> (B, PP*ps, Hkv, D) logical KV."""
+    b, pp = page_table.shape
+    sel = pages[page_table.reshape(-1)]                 # (B*PP, ps, Hkv, D)
+    ps, hkv, d = sel.shape[1:]
+    return sel.reshape(b, pp * ps, hkv, d)
+
+
+def decode_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                         page_table: jax.Array, lengths: jax.Array,
+                         *, scale: float | None = None) -> jax.Array:
+    """Single-token paged decode attention.
+
+    q (B,Hq,D); pages (P,ps,Hkv,D); page_table (B,PP); lengths (B,) -> (B,Hq,D)
+    """
+    b, hq, d = q.shape
+    k = paged_gather(k_pages, page_table)               # (B,S,Hkv,D)
+    v = paged_gather(v_pages, page_table)
+    s_len = k.shape[1]
+    hkv = k.shape[2]
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(s_len)[None, None, :]
+    s = jnp.where(pos < lengths[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)

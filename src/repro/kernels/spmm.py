@@ -1,0 +1,61 @@
+"""ELL/page-format SpMM Pallas kernel — the "vector processor" aggregation.
+
+Consumes GraphStore's page-shaped blocks directly: a (D,K) padded
+neighbor-index matrix + mask against the sampled embedding table h (N,F).
+TPU adaptation (vs. the paper's Hwacha vector loops): sampled subgraphs are
+small (paper Table 5: <= ~6K nodes), so the *full node dimension* of h fits
+VMEM when the feature dimension is tiled — the kernel keeps an (N, bf) slab
+resident in VMEM and performs VPU row-gathers per destination block, never
+touching HBM per edge.  Grid is (dst blocks, feature tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _spmm_kernel(h_ref, nbr_ref, mask_ref, o_ref, *, mode: str):
+    nbr = nbr_ref[...]                    # (bd, K) int32
+    mask = mask_ref[...]                  # (bd, K) f32
+    bd, kk = nbr.shape
+    h = h_ref[...]                        # (N, bf) VMEM slab
+    g = jnp.take(h, nbr.reshape(-1), axis=0).reshape(bd, kk, -1)
+    g = g * mask[..., None]
+    s = g.sum(axis=1)
+    if mode == "mean":
+        deg = jnp.maximum(mask.sum(axis=1), 1.0)
+        s = s / deg[:, None]
+    o_ref[...] = s.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bd", "bf", "interpret"))
+def spmm(h: jax.Array, nbr: jax.Array, mask: jax.Array, *, mode: str = "mean",
+         bd: int = 128, bf: int = 128, interpret: bool = True) -> jax.Array:
+    n, f = h.shape
+    d, k = nbr.shape
+    bd = min(bd, max(8, d))
+    bf = min(bf, max(128, f))
+    dp = -(-d // bd) * bd
+    fp = -(-f // bf) * bf
+    hp = jnp.pad(h, ((0, 0), (0, fp - f)))
+    nbrp = jnp.pad(nbr, ((0, dp - d), (0, 0)))
+    maskp = jnp.pad(mask, ((0, dp - d), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_spmm_kernel, mode=mode),
+        grid=(dp // bd, fp // bf),
+        in_specs=[
+            pl.BlockSpec((n, bf), lambda i, j: (0, j)),     # VMEM-resident slab
+            pl.BlockSpec((bd, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bd, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((dp, fp), h.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(hp, nbrp, maskp)
+    return out[:d, :f]

@@ -1,0 +1,186 @@
+"""Paged-KV serving engine: continuous batching over a page-pooled KV cache
+(the paper's GraphStore paging as the serving memory manager).
+
+Single-host scale (the per-replica engine of a pod deployment): requests
+arrive with prompts, the scheduler prefixes new sequences (prefill) and
+steps the running batch (decode), KV pages are chained per sequence by
+``PagedKVManager`` and attention reads through the page table — either the
+Pallas ``decode_attention`` kernel (``--pallas``, interpret on CPU) or its
+jnp oracle.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs import SMOKES, ARCHS
+from ..models import build, layers as L
+from ..store.pagedkv import PagePool, PagedKVManager, Sequence
+from ..kernels import ref as kref
+from ..kernels import decode_attention as dk
+
+
+class PagedLM:
+    """Decoder LM over paged KV (attention-only archs).  Layer loop is
+    unrolled (serving-scale depth); projections reuse the model params."""
+
+    def __init__(self, cfg, params, pool: PagePool, *, use_pallas=False):
+        assert all(k in ("attn", "local") for k in cfg.period_pattern), \
+            "paged serving demo supports attention archs"
+        self.cfg, self.params, self.pool = cfg, params, pool
+        self.mgr = PagedKVManager(pool)
+        self.use_pallas = use_pallas
+
+    # --------------------------------------------------------- layer params
+    def _layer_params(self, idx: int):
+        period = len(self.cfg.period_pattern)
+        if idx < self.cfg.n_periods * period:
+            pos = idx % period
+            per = idx // period
+            return jax.tree.map(lambda x: x[per],
+                                self.params["stack"][pos]), \
+                self.cfg.period_pattern[pos]
+        pos = idx - self.cfg.n_periods * period
+        return self.params["rem"][pos], self.cfg.remainder_kinds[pos]
+
+    # -------------------------------------------------------------- prefill
+    def prefill(self, seq: Sequence) -> int:
+        cfg = self.cfg
+        toks = jnp.asarray([seq.tokens], jnp.int32)
+        x = L.embed_apply(self.params["embed"], toks, cfg)
+        t = toks.shape[1]
+        pos = jnp.arange(t)
+        for li in range(cfg.num_layers):
+            p, kind = self._layer_params(li)
+            pm = p["mixer"]
+            xn = L.rms_norm(x, pm["ln"], cfg.norm_eps)
+            q = jnp.einsum("btd,dhk->bthk", xn, pm["wq"])
+            k = jnp.einsum("btd,dhk->bthk", xn, pm["wk"])
+            v = jnp.einsum("btd,dhk->bthk", xn, pm["wv"])
+            cos, sin = L.rope_tables(pos, cfg.resolved_head_dim,
+                                     cfg.rope_theta)
+            q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+            self.mgr.write_kv(seq, li, np.asarray(k[0]), np.asarray(v[0]), 0)
+            b, _, h, hd = q.shape
+            g = h // cfg.num_kv_heads
+            out = L._sdpa(q.reshape(b, t, cfg.num_kv_heads, g, hd), k, v,
+                          causal=True,
+                          window=cfg.window_size if kind == "local" else 0)
+            y = jnp.einsum("bthk,hkd->btd", out.reshape(b, t, h, hd),
+                           pm["wo"])
+            x = x + y
+            if "ffn" in p:
+                x = L.mlp_apply(p["ffn"], x, cfg)
+        seq.length = t
+        logits = L.logits_apply(self.params["embed"], x[:, -1:], cfg)
+        return int(jnp.argmax(logits[0, -1]))
+
+    # --------------------------------------------------------------- decode
+    def decode_step(self, seqs: list[Sequence]) -> list[int]:
+        cfg = self.cfg
+        b = len(seqs)
+        toks = jnp.asarray([[s.tokens[-1] if not s.generated
+                             else s.generated[-1]] for s in seqs], jnp.int32)
+        lengths = np.asarray([s.length for s in seqs], np.int32)
+        for s in seqs:                        # grow page chains (H-type)
+            self.mgr.ensure_capacity(s, s.length + 1)
+        max_pages = max(len(s.pages) for s in seqs)
+        pt = self.mgr.page_table(seqs, max_pages)
+
+        x = L.embed_apply(self.params["embed"], toks, cfg)
+        posn = jnp.asarray(lengths)[:, None]
+        for li in range(cfg.num_layers):
+            p, kind = self._layer_params(li)
+            pm = p["mixer"]
+            xn = L.rms_norm(x, pm["ln"], cfg.norm_eps)
+            q = jnp.einsum("btd,dhk->bthk", xn, pm["wq"])
+            k = jnp.einsum("btd,dhk->bthk", xn, pm["wk"])
+            v = jnp.einsum("btd,dhk->bthk", xn, pm["wv"])
+            cos, sin = L.rope_tables(posn, cfg.resolved_head_dim,
+                                     cfg.rope_theta)
+            q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+            for i, s in enumerate(seqs):      # write the new token's KV
+                self.mgr.write_kv(s, li, np.asarray(k[i]), np.asarray(v[i]),
+                                  s.length)
+            q1 = q[:, 0]                      # (B,H,hd)
+            kp = jnp.asarray(self.pool.k[li, : self.pool.num_pages])
+            vp = jnp.asarray(self.pool.v[li, : self.pool.num_pages])
+            fn = dk.decode_attention if self.use_pallas \
+                else kref.decode_attention_ref
+            out = fn(q1.swapaxes(1, 1), kp, vp, jnp.asarray(pt),
+                     jnp.asarray(lengths + 1))
+            y = jnp.einsum("bhk,hkd->bd", out, pm["wo"])[:, None]
+            x = x + y
+            if "ffn" in p:
+                x = L.mlp_apply(p["ffn"], x, cfg)
+        for s in seqs:
+            s.length += 1
+        logits = L.logits_apply(self.params["embed"], x, cfg)
+        return [int(t) for t in jnp.argmax(logits[:, 0], axis=-1)]
+
+
+def serve(cfg, *, num_requests=8, prompt_len=12, max_new=16, seed=0,
+          use_pallas=False, page_size=16, num_pages=512, log=print):
+    api = build(cfg, tp=1)
+    params = api.init_params(seed)
+    pool = PagePool(num_pages=num_pages, page_size=page_size,
+                    num_layers=cfg.num_layers,
+                    num_kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim)
+    engine = PagedLM(cfg, params, pool, use_pallas=use_pallas)
+    rng = np.random.default_rng(seed)
+
+    pending = [list(rng.integers(0, cfg.vocab_size, prompt_len))
+               for _ in range(num_requests)]
+    running: list[Sequence] = []
+    done: list[Sequence] = []
+    t0 = time.perf_counter()
+    steps = 0
+    max_batch = 4
+    while pending or running:
+        while pending and len(running) < max_batch:
+            sid = len(done) + len(running)
+            seq = engine.mgr.add_sequence(sid, pending.pop(0))
+            first = engine.prefill(seq)
+            seq.generated.append(first)
+            running.append(seq)
+        toks = engine.decode_step(running)
+        steps += 1
+        for s, t in zip(list(running), toks):
+            s.generated.append(t)
+            if len(s.generated) >= max_new:
+                s.done = True
+                running.remove(s)
+                engine.mgr.release(s)
+                done.append(s)
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(s.generated) for s in done)
+    log(f"served {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
+        f"({total_tokens/dt:.1f} tok/s), page pool peak alloc "
+        f"{pool.alloc_count} pages, util {engine.mgr.utilization():.2%}")
+    return done, {"tokens": total_tokens, "seconds": dt,
+                  "decode_steps": steps, "pages_alloc": pool.alloc_count}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--full", action="store_true",
+                    help="full config (default: smoke-scale)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--pallas", action="store_true")
+    args = ap.parse_args(argv)
+    cfg = (ARCHS if args.full else SMOKES)[args.arch]
+    serve(cfg, num_requests=args.requests, max_new=args.max_new,
+          use_pallas=args.pallas)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from . import layers, transformer, mamba, xlstm, encdec, vlm
+from .api import ModelAPI, build
+
+__all__ = ["layers", "transformer", "mamba", "xlstm", "encdec", "vlm",
+           "ModelAPI", "build"]

@@ -1,0 +1,148 @@
+"""Unified model API: one object per architecture exposing param defs,
+init/abstract/pspec trees, train/prefill/decode functions, cache defs, and
+the dry-run ``input_specs`` (ShapeDtypeStruct stand-ins + PartitionSpecs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from . import transformer as T
+from . import encdec as E
+from .vlm import vlm_train_loss, vlm_prefill
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+@dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    tp: int
+
+    # ----------------------------------------------------------- parameters
+    def param_defs(self):
+        if self.cfg.family == "encdec":
+            return E.encdec_param_defs(self.cfg, self.tp)
+        return T.decoder_param_defs(self.cfg, self.tp)
+
+    def init_params(self, seed: int = 0):
+        return L.init_tree(self.param_defs(), seed)
+
+    def abstract_params(self, *, dtype=None):
+        """dtype="bfloat16" gives the serving-weight tree (inference cells
+        hold bf16 weights; training holds fp32 masters)."""
+        tree = L.abstract_tree(self.param_defs())
+        if dtype is None:
+            return tree
+        import jax.numpy as _jnp
+        dt = _jnp.dtype(dtype)
+        return jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(
+                a.shape, dt if _jnp.issubdtype(a.dtype, _jnp.floating)
+                else a.dtype), tree)
+
+    def param_pspecs(self):
+        return L.pspec_tree(self.param_defs())
+
+    # ---------------------------------------------------------------- cache
+    def cache_defs(self, batch: int, seq: int, *, long_mode: bool = False):
+        if self.cfg.family == "encdec":
+            return E.encdec_cache_defs(self.cfg, batch, seq, tp=self.tp)
+        if self.cfg.family == "vlm":
+            seq = seq  # patches are part of the prefill; cache covers them
+        return T.decoder_cache_defs(self.cfg, batch, seq, tp=self.tp,
+                                    long_mode=long_mode)
+
+    def abstract_cache(self, batch, seq, **kw):
+        return L.abstract_tree(self.cache_defs(batch, seq, **kw))
+
+    def cache_pspecs(self, batch, seq, **kw):
+        return L.pspec_tree(self.cache_defs(batch, seq, **kw))
+
+    # ------------------------------------------------------------ functions
+    def train_loss(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return E.encdec_train_loss(params, cfg, batch["frames"],
+                                       batch["tokens"], batch["labels"])
+        if cfg.family == "vlm":
+            return vlm_train_loss(params, cfg, batch["patches"],
+                                  batch["tokens"], batch["labels"])
+        return T.lm_train_loss(params, cfg, batch["tokens"], batch["labels"])
+
+    def prefill(self, params, batch, caches):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return E.encdec_prefill(params, cfg, batch["frames"],
+                                    batch["tokens"], caches)
+        if cfg.family == "vlm":
+            return vlm_prefill(params, cfg, batch["patches"],
+                               batch["tokens"], caches)
+        return T.lm_prefill(params, cfg, batch["tokens"], caches)
+
+    def decode(self, params, batch, caches):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return E.encdec_decode(params, cfg, batch["tokens"], caches,
+                                   batch["lengths"], batch["enc_out"])
+        return T.lm_decode(params, cfg, batch["tokens"], caches,
+                           batch["lengths"])
+
+    # ----------------------------------------------------------- input specs
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind == "train":
+            if cfg.family == "encdec":
+                return {"frames": jax.ShapeDtypeStruct((b, s // 2, cfg.d_model), dt),
+                        "tokens": jax.ShapeDtypeStruct((b, s // 2), i32),
+                        "labels": jax.ShapeDtypeStruct((b, s // 2), i32)}
+            if cfg.family == "vlm":
+                p = cfg.num_patches
+                return {"patches": jax.ShapeDtypeStruct((b, p, cfg.d_model), dt),
+                        "tokens": jax.ShapeDtypeStruct((b, s - p), i32),
+                        "labels": jax.ShapeDtypeStruct((b, s - p), i32)}
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape.kind == "prefill":
+            if cfg.family == "encdec":
+                return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                        "tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            if cfg.family == "vlm":
+                p = cfg.num_patches
+                return {"patches": jax.ShapeDtypeStruct((b, p, cfg.d_model), dt),
+                        "tokens": jax.ShapeDtypeStruct((b, s - p), i32)}
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        # decode
+        out = {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+               "lengths": jax.ShapeDtypeStruct((b,), i32)}
+        if cfg.family == "encdec":
+            out["enc_out"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+        return out
+
+    def input_pspecs(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        long_mode = _is_long_mode(shape)
+        dp = () if long_mode else L.DP
+        two = L.resolve_pspec((dp, None))
+        three = L.resolve_pspec((dp, None, None))
+        one = L.resolve_pspec((dp,))
+        specs = {k: (three if v.ndim == 3 else two if v.ndim == 2 else one)
+                 for k, v in self.input_specs(shape).items()}
+        return specs
+
+
+def _is_long_mode(shape: ShapeConfig) -> bool:
+    return shape.kind == "decode" and shape.global_batch == 1
+
+
+def build(cfg: ModelConfig, tp: int = 1) -> ModelAPI:
+    return ModelAPI(cfg=cfg, tp=tp)

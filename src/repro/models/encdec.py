@@ -1,0 +1,102 @@
+"""Encoder-decoder backbone (seamless-m4t): bidirectional encoder over
+precomputed frame embeddings (the stubbed speech frontend), causal decoder
+with per-layer cross-attention.  Both stacks are period-1 scans.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .transformer import chunked_xent
+
+
+def encdec_param_defs(cfg, tp: int):
+    enc_layer = {"attn": L.attn_defs(cfg, tp), "mlp": L.mlp_defs(cfg, tp)}
+    dec_layer = {"self": L.attn_defs(cfg, tp),
+                 "cross": L.attn_defs(cfg, tp),
+                 "mlp": L.mlp_defs(cfg, tp)}
+    return {
+        "embed": L.embed_defs(cfg, tp),
+        "enc": L.stack_defs(enc_layer, cfg.enc_layers),
+        "enc_ln": L.norm_def(cfg.d_model),
+        "dec": L.stack_defs(dec_layer, cfg.num_layers),
+    }
+
+
+def _cross_kv(p_cross, enc_out, cfg):
+    """Per-layer projected encoder KV (B,S,KVH,hd)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p_cross["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p_cross["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+def encode(params, cfg, frames, *, remat=False):
+    """frames (B,S,D) -> encoder output (B,S,D)."""
+    x = L.shard(frames.astype(jnp.dtype(cfg.dtype)), L.DP, None, None)
+
+    def body(x, p):
+        x, _ = L.attn_apply(p["attn"], x, cfg, causal=False)
+        x = L.mlp_apply(p["mlp"], x, cfg)
+        return x, None
+
+    b = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(b, x, params["enc"])
+    return L.rms_norm(x, params["enc_ln"], cfg.norm_eps)
+
+
+def decode_stack(params, cfg, x, enc_out, *, caches=None, cache_len=None,
+                 positions=None, enc_len=None, remat=False):
+    """Decoder over x (B,T,D); caches = {"self": stacked attn caches}."""
+    def body(carry, xs):
+        x = carry
+        if caches is not None:
+            p, c = xs
+        else:
+            p, c = xs, None
+        x, nc = L.attn_apply(p["self"], x, cfg, causal=True,
+                             positions=positions, cache=c,
+                             cache_len=cache_len)
+        kv = _cross_kv(p["cross"], enc_out, cfg)
+        x, _ = L.attn_apply(p["cross"], x, cfg, kv_override=kv,
+                            kv_len=enc_len)
+        x = L.mlp_apply(p["mlp"], x, cfg)
+        return x, nc
+
+    b = jax.checkpoint(body) if remat else body
+    xs = params["dec"] if caches is None else (params["dec"], caches["self"])
+    x, new_c = jax.lax.scan(b, x, xs)
+    return x, (None if caches is None else {"self": new_c})
+
+
+def encdec_train_loss(params, cfg, frames, tokens, labels):
+    enc_out = encode(params, cfg, frames, remat=(cfg.remat == "full"))
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    x, _ = decode_stack(params, cfg, x, enc_out,
+                        remat=(cfg.remat == "full"))
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = chunked_xent(params, cfg, x, jnp.maximum(labels, 0), mask)
+    return loss, {"xent": loss}
+
+
+def encdec_prefill(params, cfg, frames, tokens, caches):
+    enc_out = encode(params, cfg, frames)
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    x, caches = decode_stack(params, cfg, x, enc_out, caches=caches,
+                             cache_len=jnp.zeros((), jnp.int32))
+    return L.logits_apply(params["embed"], x[:, -1:], cfg), caches, enc_out
+
+
+def encdec_decode(params, cfg, tokens, caches, lengths, enc_out):
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    positions = lengths[:, None] + jnp.arange(tokens.shape[1])[None, :]
+    x, caches = decode_stack(params, cfg, x, enc_out, caches=caches,
+                             cache_len=lengths, positions=positions)
+    return L.logits_apply(params["embed"], x, cfg), caches
+
+
+def encdec_cache_defs(cfg, batch: int, seq: int, *, tp: int,
+                      long_mode: bool = False):
+    return {"self": L.stack_defs(
+        L.attn_cache_defs(cfg, batch, seq, tp=tp, long_mode=long_mode),
+        cfg.num_layers)}

@@ -1,0 +1,141 @@
+"""Mamba (S6) mixer for the Jamba hybrid — selective SSM in pure JAX.
+
+Train/prefill runs the selective scan with ``lax.scan`` over time (constant
+HLO size; on a real TPU the chunked SSD formulation would be a Pallas
+kernel — noted as a beyond-paper optimization).  Decode is a single-step
+state update carrying (conv window, SSM state) — O(1) in sequence length,
+which is why Jamba qualifies for ``long_500k``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .layers import (ParamDef, norm_def, rms_norm, shard, DP, _div,
+                     active_tp)
+
+
+def mamba_defs(cfg, tp: int):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dtr = s.dt_rank or -(-d // 16)
+    di_ax = "model" if _div(di, tp) else None
+    return {
+        "in_proj": ParamDef((d, 2 * di), (None, di_ax)),
+        "conv_w": ParamDef((s.d_conv, di), (None, di_ax)),
+        "conv_b": ParamDef((di,), (di_ax,), init="zeros"),
+        "x_proj": ParamDef((di, dtr + 2 * s.d_state), (di_ax, None)),
+        "dt_proj": ParamDef((dtr, di), (None, di_ax)),
+        "dt_bias": ParamDef((di,), (di_ax,), init="zeros"),
+        "A_log": ParamDef((di, s.d_state), (di_ax, None), init="ones"),
+        "D": ParamDef((di,), (di_ax,), init="ones"),
+        "out_proj": ParamDef((di, d), (di_ax, None)),
+        "ln": norm_def(d),
+    }
+
+
+def _split_xdbc(xdb, dtr, n):
+    return xdb[..., :dtr], xdb[..., dtr:dtr + n], xdb[..., dtr + n:]
+
+
+def _conv_step(window, w, b):
+    """window (B, d_conv, di) -> conv output at the last position."""
+    return jnp.einsum("bcd,cd->bd", window, w) + b
+
+
+def mamba_apply(p, x, cfg, *, cache=None, cache_len=None):
+    """x (B,T,D) -> (y, new_cache).  cache = {"conv": (B,dc-1,di),
+    "ssm": (B,di,N)}; train/prefill pass cache=None."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    di = s.expand * d
+    dtr = s.dt_rank or -(-d // 16)
+    n = s.d_state
+    di_ax = "model" if _div(di, active_tp()) else None
+
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    xz = jnp.einsum("btd,de->bte", xn, p["in_proj"].astype(xn.dtype))
+    xz = shard(xz, DP, None, di_ax)
+    xin, z = xz[..., :di], xz[..., di:]
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (di, N)
+
+    if t > 1 or cache is None:
+        # train / prefill: causal depthwise conv over T + selective scan
+        pad = jnp.zeros((b, s.d_conv - 1, di), xin.dtype)
+        xp = jnp.concatenate([pad, xin], axis=1)
+        xc = sum(xp[:, i: i + t, :] * p["conv_w"][i].astype(xin.dtype)
+                 for i in range(s.d_conv)) + p["conv_b"].astype(xin.dtype)
+        xc = jax.nn.silu(xc)
+        xdb = jnp.einsum("btd,de->bte", xc, p["x_proj"].astype(xc.dtype))
+        dt_r, b_ssm, c_ssm = _split_xdbc(xdb, dtr, n)
+        dt = jax.nn.softplus(
+            jnp.einsum("btr,rd->btd", dt_r, p["dt_proj"].astype(dt_r.dtype))
+            + p["dt_bias"].astype(dt_r.dtype)).astype(jnp.float32)
+
+        # selective scan.  §Perf iteration 6 tried Q=8 chunk-unrolling to
+        # keep the state out of HBM between steps: REFUTED on this backend
+        # (t_mem 16.5->21.3 s on jamba train — XLA does not fuse the
+        # unrolled chain; compile 4x slower).  The real lever is a Pallas
+        # kernel with VMEM-resident state (DESIGN.md §9); Q=1 is the
+        # measured best XLA-level schedule.
+        Q = 1
+
+        def step_chunk(h, inp):
+            dt_c, b_c, c_c, x_c = inp                       # (Q,B,...)
+            ys = []
+            for q in range(Q):
+                decay = jnp.exp(dt_c[q][..., None] * A)     # (B,di,N)
+                h = h * decay + (dt_c[q] * x_c[q])[..., None] \
+                    * b_c[q][:, None, :]
+                ys.append(jnp.einsum("bdn,bn->bd", h, c_c[q]))
+            return h, jnp.stack(ys)
+
+        def to_chunks(a):
+            a = jnp.moveaxis(a.astype(jnp.float32), 1, 0)   # (T,B,...)
+            return a.reshape((t // Q, Q) + a.shape[1:])
+
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+        xs = (to_chunks(dt), to_chunks(b_ssm), to_chunks(c_ssm),
+              to_chunks(xc))
+        h_last, ys = jax.lax.scan(step_chunk, h0, xs)
+        y = jnp.moveaxis(ys.reshape(t, b, di), 0, 1).astype(x.dtype)
+        y = y + xc * p["D"].astype(xc.dtype)
+        new_cache = None
+        if cache is not None:                               # prefill fills cache
+            conv_tail = xp[:, -(s.d_conv - 1):, :]
+            new_cache = {"conv": conv_tail.astype(cache["conv"].dtype),
+                         "ssm": h_last.astype(cache["ssm"].dtype)}
+    else:
+        assert t == 1
+        window = jnp.concatenate([cache["conv"].astype(xin.dtype), xin], axis=1)
+        xc = jax.nn.silu(_conv_step(window, p["conv_w"].astype(xin.dtype),
+                                    p["conv_b"].astype(xin.dtype)))  # (B,di)
+        xdb = jnp.einsum("bd,de->be", xc, p["x_proj"].astype(xc.dtype))
+        dt_r, b_ssm, c_ssm = _split_xdbc(xdb, dtr, n)
+        dt = jax.nn.softplus(
+            jnp.einsum("br,rd->bd", dt_r, p["dt_proj"].astype(dt_r.dtype))
+            + p["dt_bias"].astype(dt_r.dtype)).astype(jnp.float32)
+        h = cache["ssm"]
+        decay = jnp.exp(dt[..., None] * A)
+        h = h * decay + (dt * xc.astype(jnp.float32))[..., None] \
+            * b_ssm.astype(jnp.float32)[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_ssm.astype(jnp.float32))
+        y = (y.astype(x.dtype) + xc * p["D"].astype(xc.dtype))[:, None, :]
+        new_cache = {"conv": window[:, 1:, :].astype(x.dtype), "ssm": h}
+
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("btd,de->bte", y, p["out_proj"].astype(y.dtype))
+    return x + shard(out, DP, None, None), new_cache
+
+
+def mamba_cache_defs(cfg, batch: int, *, tp: int):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    di_ax = "model" if _div(di, tp) else None
+    return {"conv": ParamDef((batch, s.d_conv - 1, di), (DP, None, di_ax),
+                             init="zeros", dtype=cfg.dtype),
+            "ssm": ParamDef((batch, di, s.d_state), (DP, di_ax, None),
+                            init="zeros", dtype="float32")}

@@ -1,0 +1,249 @@
+"""Decoder-LM assembly: period-scanned heterogeneous layer stacks.
+
+Every arch's layer sequence is ``period_pattern * n_periods + remainder``.
+Weights are stacked per *position-in-period* with a leading ``n_periods``
+dim and the whole stack is driven by one ``lax.scan`` — HLO size is O(1) in
+depth for every architecture (62-layer gemma3-27b compiles as 1 period body
++ 2 unrolled remainder layers).  Mixed patterns (gemma3 5:1 local:global,
+jamba 7:1 mamba:attn + MoE alternation, xlstm 5:1 mLSTM:sLSTM) keep exact
+per-layer-type weights because positions are stacked independently.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba as M
+from . import xlstm as X
+
+
+# --------------------------------------------------------------- param defs
+def mixer_defs(cfg, kind: str, tp: int):
+    if kind in ("attn", "local", "nope"):
+        return L.mla_defs(cfg, tp) if cfg.mla is not None \
+            else L.attn_defs(cfg, tp)
+    if kind == "mamba":
+        return M.mamba_defs(cfg, tp)
+    if kind == "mlstm":
+        return X.mlstm_defs(cfg, tp)
+    if kind == "slstm":
+        return X.slstm_defs(cfg, tp)
+    raise ValueError(kind)
+
+
+def ffn_defs(cfg, kind: str, tp: int):
+    if kind == "none":
+        return None
+    if kind == "moe":
+        return L.moe_defs(cfg, tp)
+    return L.mlp_defs(cfg, tp)
+
+
+def _pos_ffn_kind(cfg, pos: int) -> str:
+    kind = cfg.period_pattern[pos]
+    if kind in ("mlstm", "slstm") and cfg.d_ff == 0:
+        return "none"
+    if cfg.moe is not None:
+        assert len(cfg.period_pattern) % cfg.moe.every == 0 or \
+            cfg.moe.every % len(cfg.period_pattern) == 0, \
+            "MoE interval must align with the period"
+        return cfg.ffn_kind(pos)
+    return "mlp"
+
+
+def decoder_param_defs(cfg, tp: int):
+    period = len(cfg.period_pattern)
+    stack = []
+    for pos, kind in enumerate(cfg.period_pattern):
+        blk = {"mixer": mixer_defs(cfg, kind, tp)}
+        fk = _pos_ffn_kind(cfg, pos)
+        if fk != "none":
+            blk["ffn"] = ffn_defs(cfg, fk, tp)
+        stack.append(L.stack_defs(blk, cfg.n_periods))
+    rem = []
+    for pos, kind in enumerate(cfg.remainder_kinds):
+        blk = {"mixer": mixer_defs(cfg, kind, tp)}
+        fk = _pos_ffn_kind(cfg, pos)
+        if fk != "none":
+            blk["ffn"] = ffn_defs(cfg, fk, tp)
+        rem.append(blk)
+    return {"embed": L.embed_defs(cfg, tp),
+            "stack": tuple(stack), "rem": tuple(rem)}
+
+
+# ------------------------------------------------------------ cache defs
+def block_cache_defs(cfg, kind: str, batch: int, seq: int, *, tp: int,
+                     long_mode: bool = False):
+    if kind in ("attn", "nope"):
+        return L.mla_cache_defs(cfg, batch, seq, tp=tp, long_mode=long_mode) \
+            if cfg.mla is not None \
+            else L.attn_cache_defs(cfg, batch, seq, tp=tp, long_mode=long_mode)
+    if kind == "local":
+        w = min(cfg.window_size, seq)
+        # local layers only ever need the trailing window of cache (ring)
+        return L.mla_cache_defs(cfg, batch, w, tp=tp) if cfg.mla is not None \
+            else L.attn_cache_defs(cfg, batch, w, tp=tp)
+    if kind == "mamba":
+        return M.mamba_cache_defs(cfg, batch, tp=tp)
+    if kind == "mlstm":
+        return X.mlstm_cache_defs(cfg, batch, tp=tp)
+    if kind == "slstm":
+        return X.slstm_cache_defs(cfg, batch, tp=tp)
+    raise ValueError(kind)
+
+
+def decoder_cache_defs(cfg, batch: int, seq: int, *, tp: int,
+                       long_mode: bool = False):
+    stack = [L.stack_defs(
+        block_cache_defs(cfg, kind, batch, seq, tp=tp, long_mode=long_mode),
+        cfg.n_periods) for kind in cfg.period_pattern]
+    rem = [block_cache_defs(cfg, kind, batch, seq, tp=tp, long_mode=long_mode)
+           for kind in cfg.remainder_kinds]
+    return {"stack": tuple(stack), "rem": tuple(rem)}
+
+
+# ------------------------------------------------------------- block apply
+def apply_block(cfg, kind: str, blk_params, x, *, cache=None, cache_len=None,
+                positions=None):
+    """Returns (x, new_cache, aux)."""
+    p_mix = blk_params["mixer"]
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local", "nope"):
+        if cfg.mla is not None:
+            x, new_c = L.mla_apply(p_mix, x, cfg, positions=positions,
+                                   cache=cache, cache_len=cache_len)
+        else:
+            # local layers: attn_apply implements ring-cache semantics
+            x, new_c = L.attn_apply(p_mix, x, cfg, kind=kind,
+                                    positions=positions, cache=cache,
+                                    cache_len=cache_len)
+    elif kind == "mamba":
+        x, new_c = M.mamba_apply(p_mix, x, cfg, cache=cache,
+                                 cache_len=cache_len)
+    elif kind == "mlstm":
+        x, new_c = X.mlstm_apply(p_mix, x, cfg, cache=cache,
+                                 cache_len=cache_len)
+    elif kind == "slstm":
+        x, new_c = X.slstm_apply(p_mix, x, cfg, cache=cache,
+                                 cache_len=cache_len)
+    else:
+        raise ValueError(kind)
+    if "ffn" in blk_params:
+        ffn_p = blk_params["ffn"]
+        if "router" in ffn_p:
+            x, aux = L.moe_apply(ffn_p, x, cfg)
+        else:
+            x = L.mlp_apply(ffn_p, x, cfg)
+    return x, new_c, aux
+
+
+# ---------------------------------------------------------------- forward
+def decoder_forward(params, cfg, x, *, caches=None, cache_len=None,
+                    positions=None, remat: bool = False):
+    """x (B,T,D) hidden states -> (hidden, new_caches, aux_sum)."""
+    period = len(cfg.period_pattern)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def period_body(x, xs):
+        stack_p, stack_c = xs
+        aux_sum = jnp.zeros((), jnp.float32)
+        new_cs = []
+        for pos, kind in enumerate(cfg.period_pattern):
+            c = None if stack_c is None else stack_c[pos]
+            x, nc, aux = apply_block(cfg, kind, stack_p[pos], x,
+                                     cache=c, cache_len=cache_len,
+                                     positions=positions)
+            new_cs.append(nc)
+            aux_sum = aux_sum + aux
+        return x, (tuple(new_cs), aux_sum)
+
+    body = period_body
+    if remat:
+        body = jax.checkpoint(period_body)
+
+    stack_p = tuple(params["stack"])
+    stack_c = tuple(caches["stack"]) if caches is not None else None
+
+    def scan_body(carry, xs_sliced):
+        x, aux = carry
+        sp = xs_sliced[0]
+        sc = xs_sliced[1] if stack_c is not None else None
+        x, (ncs, a) = body(x, (sp, sc))
+        return (x, aux + a), ncs
+
+    xs = (stack_p,) if stack_c is None else (stack_p, stack_c)
+    (x, aux_total), new_stack_c = jax.lax.scan(
+        scan_body, (x, aux_total), xs)
+
+    new_rem_c = []
+    for pos, kind in enumerate(cfg.remainder_kinds):
+        c = None if caches is None else caches["rem"][pos]
+        x, nc, aux = apply_block(cfg, kind, params["rem"][pos], x,
+                                 cache=c, cache_len=cache_len,
+                                 positions=positions)
+        new_rem_c.append(nc)
+        aux_total = aux_total + aux
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"stack": new_stack_c, "rem": tuple(new_rem_c)}
+    return x, new_caches, aux_total
+
+
+# -------------------------------------------------------------------- loss
+def chunked_xent(params, cfg, hidden, labels, mask):
+    """Cross-entropy without materializing (B,T,V): scan over seq chunks;
+    logits stay (B,chunk,V) sharded over (dp, -, model)."""
+    b, t, d = hidden.shape
+    ck = min(cfg.loss_chunk, t)
+    while t % ck:
+        ck -= 1
+    n_chunks = t // ck
+    hc = hidden.reshape(b, n_chunks, ck, d).swapaxes(0, 1)
+    lc = labels.reshape(b, n_chunks, ck).swapaxes(0, 1)
+    mc = mask.reshape(b, n_chunks, ck).swapaxes(0, 1)
+
+    def chunk_loss(carry, xs):
+        h, lab, m = xs
+        logits = L.logits_apply(params["embed"], h, cfg).astype(jnp.float32)
+        logits = L.shard(logits, L.DP, None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk_loss, (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ----------------------------------------------------------- full LM paths
+def lm_train_loss(params, cfg, tokens, labels):
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    x, _, aux = decoder_forward(params, cfg, x, remat=(cfg.remat == "full"))
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = chunked_xent(params, cfg, x, jnp.maximum(labels, 0), mask)
+    return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+
+def lm_prefill(params, cfg, tokens, caches):
+    """Fill caches for the prompt; returns (last_logits, caches)."""
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    x, caches, _ = decoder_forward(params, cfg, x, caches=caches,
+                                   cache_len=jnp.zeros((), jnp.int32))
+    logits = L.logits_apply(params["embed"], x[:, -1:], cfg)
+    return logits, caches
+
+
+def lm_decode(params, cfg, tokens, caches, lengths):
+    """One decode step: tokens (B,1), lengths (B,) current cache fill."""
+    x = L.embed_apply(params["embed"], tokens, cfg)
+    positions = lengths[:, None] + jnp.arange(tokens.shape[1])[None, :]
+    x, caches, _ = decoder_forward(params, cfg, x, caches=caches,
+                                   cache_len=lengths, positions=positions)
+    logits = L.logits_apply(params["embed"], x, cfg)
+    return logits, caches

@@ -1,0 +1,29 @@
+"""VLM backbone (internvl2): precomputed patch embeddings (stubbed InternViT
+frontend) prepended to the text embedding sequence, then the standard
+decoder stack.  Loss is computed on text positions only."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .transformer import decoder_forward, chunked_xent
+
+
+def vlm_train_loss(params, cfg, patches, tokens, labels):
+    """patches (B,P,D) float; tokens/labels (B,T_text)."""
+    xt = L.embed_apply(params["embed"], tokens, cfg)
+    x = jnp.concatenate([patches.astype(xt.dtype), xt], axis=1)
+    x, _, aux = decoder_forward(params, cfg, x, remat=(cfg.remat == "full"))
+    x_text = x[:, patches.shape[1]:]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = chunked_xent(params, cfg, x_text, jnp.maximum(labels, 0), mask)
+    return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+
+def vlm_prefill(params, cfg, patches, tokens, caches):
+    xt = L.embed_apply(params["embed"], tokens, cfg)
+    x = jnp.concatenate([patches.astype(xt.dtype), xt], axis=1)
+    x, caches, _ = decoder_forward(params, cfg, x, caches=caches,
+                                   cache_len=jnp.zeros((), jnp.int32))
+    return L.logits_apply(params["embed"], x[:, -1:], cfg), caches

@@ -1,0 +1,210 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with recurrent weights) in pure JAX.
+
+Both blocks carry O(1)-size recurrent state, so xlstm-125m qualifies for
+``long_500k`` decode.  Training runs ``lax.scan`` over time with exp-gating
+stabilizer state m (the paper's numerically-stabilized formulation).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .layers import (ParamDef, norm_def, rms_norm, shard, DP, _div,
+                     active_tp)
+
+
+# ===================================================================== mLSTM
+def mlstm_defs(cfg, tp: int):
+    d = cfg.d_model
+    di = 2 * d                                   # projected block dim
+    nh = cfg.num_heads
+    di_ax = "model" if _div(di, tp) else None
+    return {
+        "up_proj": ParamDef((d, 2 * di), (None, di_ax)),
+        "wq": ParamDef((di, di), (None, di_ax)),
+        "wk": ParamDef((di, di), (None, di_ax)),
+        "wv": ParamDef((di, di), (None, di_ax)),
+        "wi": ParamDef((di, nh), (None, None)),
+        "wf": ParamDef((di, nh), (None, None)),
+        "down_proj": ParamDef((di, d), (di_ax, None)),
+        "ln": norm_def(d),
+    }
+
+
+def _mlstm_scan(q, k, v, i_g, f_g, nh):
+    """q/k/v (B,T,NH,hd); i_g/f_g (B,T,NH) pre-activation gates."""
+    b, t, _, hd = q.shape
+
+    def step(carry, inp):
+        C, n, m = carry                                # (B,NH,hd,hd) ...
+        qt, kt, vt, it, ft = inp
+        m_new = jnp.maximum(ft + m, it)
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(ft + m - m_new)
+        C = f[..., None, None] * C + i[..., None, None] \
+            * (vt[..., :, None] * kt[..., None, :])    # v k^T
+        n = f[..., None] * n + i[..., None] * kt
+        num = jnp.einsum("bhij,bhj->bhi", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qt)), 1.0)
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    init = (jnp.zeros((b, nh, hd, hd), jnp.float32),
+            jnp.zeros((b, nh, hd), jnp.float32),
+            jnp.full((b, nh), -1e30, jnp.float32))
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (q, k, v, i_g, f_g))
+    carry, hs = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(hs, 0, 1), carry               # (B,T,NH,hd), state
+
+
+def mlstm_apply(p, x, cfg, *, cache=None, cache_len=None):
+    b, t, d = x.shape
+    di = 2 * d
+    nh = cfg.num_heads
+    hd = di // nh
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    uz = jnp.einsum("btd,de->bte", xn, p["up_proj"].astype(xn.dtype))
+    u, z = uz[..., :di], uz[..., di:]
+    q = jnp.einsum("bte,ef->btf", u, p["wq"].astype(u.dtype)).reshape(b, t, nh, hd)
+    k = jnp.einsum("bte,ef->btf", u, p["wk"].astype(u.dtype)).reshape(b, t, nh, hd)
+    k = k / np.sqrt(hd)
+    v = jnp.einsum("bte,ef->btf", u, p["wv"].astype(u.dtype)).reshape(b, t, nh, hd)
+    i_g = jnp.einsum("bte,eh->bth", u, p["wi"].astype(u.dtype))
+    f_g = jnp.einsum("bte,eh->bth", u, p["wf"].astype(u.dtype))
+
+    if t > 1 or cache is None:
+        h, state = _mlstm_scan(q, k, v, i_g, f_g, nh)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"C": state[0], "n": state[1], "m": state[2]}
+    else:
+        assert t == 1
+        C, n, m = cache["C"], cache["n"], cache["m"]
+        qt, kt, vt = (a[:, 0].astype(jnp.float32) for a in (q, k, v))
+        it, ft = i_g[:, 0].astype(jnp.float32), f_g[:, 0].astype(jnp.float32)
+        m_new = jnp.maximum(ft + m, it)
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(ft + m - m_new)
+        C = f[..., None, None] * C + i[..., None, None] \
+            * (vt[..., :, None] * kt[..., None, :])
+        n = f[..., None] * n + i[..., None] * kt
+        num = jnp.einsum("bhij,bhj->bhi", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qt)), 1.0)
+        h = (num / den[..., None])[:, None]
+        new_cache = {"C": C, "n": n, "m": m_new}
+
+    h = h.astype(x.dtype).reshape(b, t, di)
+    y = h * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["down_proj"].astype(y.dtype))
+    return x + shard(out, DP, None, None), new_cache
+
+
+def mlstm_cache_defs(cfg, batch: int, *, tp: int):
+    di = 2 * cfg.d_model
+    nh = cfg.num_heads
+    hd = di // nh
+    return {"C": ParamDef((batch, nh, hd, hd), (DP, None, None, None),
+                          init="zeros", dtype="float32"),
+            "n": ParamDef((batch, nh, hd), (DP, None, None), init="zeros",
+                          dtype="float32"),
+            "m": ParamDef((batch, nh), (DP, None), init="zeros",
+                          dtype="float32")}
+
+
+# ===================================================================== sLSTM
+def slstm_defs(cfg, tp: int):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    return {
+        "wz": ParamDef((d, d), (None, None)),
+        "wi": ParamDef((d, d), (None, None)),
+        "wf": ParamDef((d, d), (None, None)),
+        "wo": ParamDef((d, d), (None, None)),
+        "rz": ParamDef((nh, hd, hd), (None, None, None)),
+        "ri": ParamDef((nh, hd, hd), (None, None, None)),
+        "rf": ParamDef((nh, hd, hd), (None, None, None)),
+        "ro": ParamDef((nh, hd, hd), (None, None, None)),
+        "up_proj": ParamDef((d, 2 * d), (None, None)),
+        "down_proj": ParamDef((d, d), (None, None)),
+        "ln": norm_def(d),
+    }
+
+
+def _slstm_cell(p, xt, carry, nh, hd):
+    """One sLSTM step.  xt (B,d) fp32; carry = (c,h,n,m) each (B,NH,hd)/(B,NH)."""
+    c, h, n, m = carry
+    hr = h.reshape(h.shape[0], nh, hd)
+
+    def rec(w, r):
+        return (xt @ w).reshape(-1, nh, hd) + jnp.einsum(
+            "bhj,hij->bhi", hr, r)
+
+    z = jnp.tanh(rec(p["wz"], p["rz"]))
+    i_t = rec(p["wi"], p["ri"])
+    f_t = rec(p["wf"], p["rf"])
+    o = jax.nn.sigmoid(rec(p["wo"], p["ro"]))
+    m_new = jnp.maximum(f_t + m, i_t)          # per-unit exp-gating stabilizer
+    i = jnp.exp(i_t - m_new)
+    f = jnp.exp(f_t + m - m_new)
+    c = f * c + i * z
+    n = jnp.maximum(f * n + i, 1e-6)
+    h_new = o * (c / n)
+    return (c, h_new.reshape(h.shape[0], -1), n, m_new)
+
+
+def slstm_apply(p, x, cfg, *, cache=None, cache_len=None):
+    b, t, d = x.shape
+    nh = cfg.num_heads
+    hd = d // nh
+    xn = rms_norm(x, p["ln"], cfg.norm_eps).astype(jnp.float32)
+    pf = {k: v.astype(jnp.float32) for k, v in p.items()
+          if k in ("wz", "wi", "wf", "wo", "rz", "ri", "rf", "ro")}
+
+    if t > 1 or cache is None:
+        init = (jnp.zeros((b, nh, hd), jnp.float32),
+                jnp.zeros((b, d), jnp.float32),
+                jnp.full((b, nh, hd), 1e-6, jnp.float32),
+                jnp.full((b, nh, hd), -1e30, jnp.float32))
+
+        def step(carry, xt):
+            new = _slstm_cell(pf, xt, carry, nh, hd)
+            return new, new[1]
+
+        carry, hs = jax.lax.scan(step, init, jnp.moveaxis(xn, 1, 0))
+        h = jnp.moveaxis(hs, 0, 1)                        # (B,T,d)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"c": carry[0], "h": carry[1], "n": carry[2],
+                         "m": carry[3]}
+    else:
+        assert t == 1
+        carry = (cache["c"], cache["h"], cache["n"], cache["m"])
+        carry = _slstm_cell(pf, xn[:, 0], carry, nh, hd)
+        h = carry[1][:, None]
+        new_cache = {"c": carry[0], "h": carry[1], "n": carry[2],
+                     "m": carry[3]}
+
+    h = h.astype(x.dtype)
+    uz = jnp.einsum("btd,de->bte", h, p["up_proj"].astype(h.dtype))
+    u, z = uz[..., :d], uz[..., d:]
+    y = jnp.einsum("btd,de->bte", u * jax.nn.silu(z),
+                   p["down_proj"].astype(h.dtype))
+    return x + shard(y, DP, None, None), new_cache
+
+
+def slstm_cache_defs(cfg, batch: int, *, tp: int):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    return {"c": ParamDef((batch, nh, hd), (DP, None, None), init="zeros",
+                          dtype="float32"),
+            "h": ParamDef((batch, d), (DP, None), init="zeros",
+                          dtype="float32"),
+            "n": ParamDef((batch, nh, hd), (DP, None, None), init="zeros",
+                          dtype="float32"),
+            "m": ParamDef((batch, nh, hd), (DP, None, None), init="zeros",
+                          dtype="float32")}

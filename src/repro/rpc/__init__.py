@@ -1,0 +1,5 @@
+from .transport import PCIeChannel, serialize, deserialize
+from .server import RPCServer
+from .client import RPCClient
+
+__all__ = ["PCIeChannel", "serialize", "deserialize", "RPCServer", "RPCClient"]

@@ -1,0 +1,30 @@
+"""Host-side RPC stub: serialize -> mmap copy -> doorbell -> reply."""
+from __future__ import annotations
+
+import time
+
+from .transport import PCIeChannel, serialize, deserialize
+
+
+class RPCClient:
+    def __init__(self, server, *, tx: PCIeChannel | None = None,
+                 rx: PCIeChannel | None = None):
+        self.server = server
+        self.tx = tx or PCIeChannel()
+        self.rx = rx or PCIeChannel()
+
+    def call(self, method: str, **kwargs):
+        t0 = time.perf_counter()
+        packet = serialize({"method": method, "kwargs": kwargs})
+        self.tx.stats.serialize_secs += time.perf_counter() - t0
+
+        self.tx.push(packet)
+        reply = self.server.handle(self.tx.pull())
+        self.rx.push(reply)
+
+        t0 = time.perf_counter()
+        resp = deserialize(self.rx.pull())
+        self.rx.stats.serialize_secs += time.perf_counter() - t0
+        if not resp["ok"]:
+            raise RuntimeError(f"RPC {method} failed: {resp['error']}")
+        return resp.get("result")

@@ -1,0 +1,29 @@
+"""CSSD-side RPC dispatcher: deserializes RoP packets, invokes service
+handlers (Table 1), serializes the reply."""
+from __future__ import annotations
+
+import time
+
+from .transport import serialize, deserialize
+
+
+class RPCServer:
+    def __init__(self, service):
+        self.service = service
+        self.call_log: list[tuple[str, float]] = []
+
+    def handle(self, packet: bytes) -> bytes:
+        req = deserialize(packet)
+        method = req["method"]
+        kwargs = req.get("kwargs", {})
+        t0 = time.perf_counter()
+        fn = getattr(self.service, method, None)
+        if fn is None:
+            resp = {"ok": False, "error": f"no such RPC {method!r}"}
+        else:
+            try:
+                resp = {"ok": True, "result": fn(**kwargs)}
+            except Exception as e:  # noqa: BLE001 — fault surfaced to client
+                resp = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+        self.call_log.append((method, time.perf_counter() - t0))
+        return serialize(resp)

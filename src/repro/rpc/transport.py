@@ -1,0 +1,128 @@
+"""RPC-over-PCIe (RoP) transport simulation — paper §3.3, Fig. 5.
+
+The paper tunnels gRPC through PCIe: the host driver exposes a pre-allocated
+memory-mapped buffer; a PCIe command (opcode, buffer address, length) is
+written to the FPGA's BAR ("doorbell"), and the device copies the packet out
+of the mmap'd buffer into FPGA-internal memory.
+
+We model exactly those mechanics in-process:
+
+  * ``serialize``/``deserialize`` — the gRPC-core packet layer: a JSON
+    metadata header plus zero-copy-concatenated raw ndarray payloads;
+  * ``PCIeChannel`` — a pre-allocated bytearray "mmap buffer" per direction;
+    ``push`` memcpy's the packet in (host->mmap), ``pull`` memcpy's it out
+    (mmap->device SRAM), both sides record byte counts and copy times so the
+    RoP overhead is measurable (benchmarks/fig19 uses it).
+
+The format is self-contained (no pickle) and versioned.
+"""
+from __future__ import annotations
+
+import json
+import struct
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_MAGIC = b"RoP1"
+
+
+def _encode(obj, buffers: list[np.ndarray]):
+    if isinstance(obj, np.ndarray):
+        buffers.append(np.ascontiguousarray(obj))
+        b = buffers[-1]
+        return {"__nd__": len(buffers) - 1, "dtype": str(b.dtype),
+                "shape": list(b.shape)}
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, dict):
+        return {k: _encode(v, buffers) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_encode(v, buffers) for v in obj]
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if hasattr(obj, "__array__"):                    # jax arrays etc.
+        return _encode(np.asarray(obj), buffers)
+    raise TypeError(f"unserializable type {type(obj)}")
+
+
+def _decode(obj, buffers: list[np.ndarray]):
+    if isinstance(obj, dict):
+        if "__nd__" in obj:
+            arr = buffers[obj["__nd__"]]
+            return arr.view(np.dtype(obj["dtype"])).reshape(obj["shape"])
+        return {k: _decode(v, buffers) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(v, buffers) for v in obj]
+    return obj
+
+
+def serialize(obj) -> bytes:
+    buffers: list[np.ndarray] = []
+    meta = json.dumps(_encode(obj, buffers)).encode()
+    parts = [_MAGIC, struct.pack("<II", len(meta), len(buffers)), meta]
+    for b in buffers:
+        raw = b.tobytes()
+        parts.append(struct.pack("<Q", len(raw)))
+        parts.append(raw)
+    return b"".join(parts)
+
+
+def deserialize(data: bytes):
+    assert data[:4] == _MAGIC, "bad RoP packet"
+    meta_len, n_buf = struct.unpack_from("<II", data, 4)
+    off = 12
+    meta = json.loads(data[off: off + meta_len].decode())
+    off += meta_len
+    buffers = []
+    for _ in range(n_buf):
+        (ln,) = struct.unpack_from("<Q", data, off)
+        off += 8
+        buffers.append(np.frombuffer(data, dtype=np.uint8, count=ln, offset=off))
+        off += ln
+    return _decode(meta, buffers)
+
+
+@dataclass
+class ChannelStats:
+    packets: int = 0
+    bytes_moved: int = 0
+    copy_secs: float = 0.0
+    serialize_secs: float = 0.0
+
+
+@dataclass
+class PCIeChannel:
+    """One direction of the RoP link: mmap buffer + doorbell."""
+    buf_size: int = 64 << 20
+    stats: ChannelStats = field(default_factory=ChannelStats)
+
+    def __post_init__(self):
+        self._buf = bytearray(self.buf_size)          # pre-allocated mmap buffer
+        self._len = 0
+        self._doorbell = False
+
+    def push(self, packet: bytes) -> None:
+        """Host writes the packet into the mmap buffer + rings the doorbell."""
+        if len(packet) > self.buf_size:
+            self._buf = bytearray(len(packet))        # driver re-mmaps bigger buf
+            self.buf_size = len(packet)
+        t0 = time.perf_counter()
+        self._buf[: len(packet)] = packet             # memcpy #1 (host->mmap)
+        self._len = len(packet)
+        self.stats.copy_secs += time.perf_counter() - t0
+        self.stats.packets += 1
+        self.stats.bytes_moved += len(packet)
+        self._doorbell = True
+
+    def pull(self) -> bytes:
+        """Device parses the PCIe command and copies mmap->internal memory."""
+        assert self._doorbell, "doorbell not rung"
+        t0 = time.perf_counter()
+        out = bytes(self._buf[: self._len])           # memcpy #2 (mmap->device)
+        self.stats.copy_secs += time.perf_counter() - t0
+        self._doorbell = False
+        return out

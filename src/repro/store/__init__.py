@@ -1,0 +1,7 @@
+from .blockdev import BlockDevice, PAGE_BYTES, SLOTS_PER_PAGE
+from .graphstore import GraphStore, preprocess_edges
+from .sampler import sample_batch, pad_batch, SampledBatch, LayerBlock
+
+__all__ = ["BlockDevice", "PAGE_BYTES", "SLOTS_PER_PAGE", "GraphStore",
+           "preprocess_edges", "sample_batch", "pad_batch", "SampledBatch",
+           "LayerBlock"]

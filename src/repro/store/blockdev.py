@@ -1,0 +1,166 @@
+"""Page-granular block device — the simulated SSD under GraphStore.
+
+The paper's CSSD exposes a 4 TB NVMe SSD to the FPGA through an internal
+PCIe switch; GraphStore addresses it with logical page numbers (LPNs) at
+4 KB flash-page granularity.  Here the device is a growable pool of 4 KB
+pages backed by numpy.  Two address spaces mirror Figure 7 of the paper:
+
+  * the *neighbor space* grows from LPN 0 upward (adjacency pages),
+  * the *embedding space* grows from the top of the device downward
+    (sequential embedding table, no page-level mapping needed).
+
+The device records per-operation byte counters and timestamped I/O events
+so benchmarks can reconstruct bandwidth timelines (paper Fig. 18c) and
+write-amplification stats.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+PAGE_BYTES = 4096
+SLOT_DTYPE = np.int32
+SLOTS_PER_PAGE = PAGE_BYTES // 4  # 1024 int32 slots
+
+
+@dataclass
+class IOEvent:
+    t: float          # seconds since device creation
+    kind: str         # 'read' | 'write'
+    lpn: int
+    nbytes: int
+    tag: str          # e.g. 'graph', 'embed', 'meta'
+
+
+@dataclass
+class IOStats:
+    read_pages: int = 0
+    written_pages: int = 0
+    read_bytes: int = 0
+    written_bytes: int = 0
+    events: list = field(default_factory=list)
+
+    def record(self, kind: str, lpn: int, nbytes: int, tag: str, t0: float):
+        if kind == "read":
+            self.read_pages += 1
+            self.read_bytes += nbytes
+        else:
+            self.written_pages += 1
+            self.written_bytes += nbytes
+        self.events.append(IOEvent(time.perf_counter() - t0, kind, lpn, nbytes, tag))
+
+
+class BlockDevice:
+    """Growable array of 4 KB pages with front/back allocation.
+
+    ``write_page``/``read_page`` move whole pages (flash access granularity);
+    GraphStore's layouts are designed so that mutable graph updates touch a
+    single page (the paper's write-amplification argument).
+    """
+
+    def __init__(self, num_pages: int = 1 << 14, *, simulate_latency: bool = False,
+                 page_read_us: float = 0.0, page_write_us: float = 0.0):
+        self._pages = np.zeros((num_pages, SLOTS_PER_PAGE), dtype=SLOT_DTYPE)
+        self._front = 0                 # next free LPN in neighbor space
+        self._back = num_pages          # one past last used LPN in embedding space
+        self._free: list[int] = []      # recycled neighbor-space pages
+        self._lock = threading.Lock()
+        self._t0 = time.perf_counter()
+        self.stats = IOStats()
+        self.simulate_latency = simulate_latency
+        self.page_read_us = page_read_us
+        self.page_write_us = page_write_us
+
+    # ------------------------------------------------------------------ alloc
+    @property
+    def num_pages(self) -> int:
+        return self._pages.shape[0]
+
+    def _grow(self, min_extra: int) -> None:
+        old = self._pages
+        extra = max(min_extra, old.shape[0])
+        grown = np.zeros((old.shape[0] + extra, SLOTS_PER_PAGE), dtype=SLOT_DTYPE)
+        grown[: old.shape[0]] = old
+        # embedding space lives at the top: relocate it.
+        back_len = old.shape[0] - self._back
+        if back_len:
+            grown[-back_len:] = old[self._back:]
+            grown[self._back: old.shape[0]] = 0
+        self._back = grown.shape[0] - back_len
+        self._pages = grown
+
+    def alloc_front(self) -> int:
+        """Allocate one page in the neighbor space (graph pages)."""
+        with self._lock:
+            if self._free:
+                return self._free.pop()
+            if self._front >= self._back:
+                self._grow(1)
+            lpn = self._front
+            self._front += 1
+            return lpn
+
+    def alloc_back(self, n: int) -> int:
+        """Allocate ``n`` contiguous pages at the top (embedding space).
+
+        Returns the first LPN of the span (ascending order within the span).
+        """
+        with self._lock:
+            if self._back - n < self._front:
+                self._grow(n)
+            self._back -= n
+            return self._back
+
+    def free_page(self, lpn: int) -> None:
+        with self._lock:
+            self._free.append(lpn)
+
+    # -------------------------------------------------------------------- i/o
+    def _maybe_sleep(self, us: float):
+        if self.simulate_latency and us > 0:
+            time.sleep(us * 1e-6)
+
+    def write_page(self, lpn: int, data: np.ndarray, *, tag: str = "graph") -> None:
+        assert data.dtype == SLOT_DTYPE and data.shape == (SLOTS_PER_PAGE,)
+        self._maybe_sleep(self.page_write_us)
+        self._pages[lpn] = data
+        self.stats.record("write", lpn, PAGE_BYTES, tag, self._t0)
+
+    def write_span(self, lpn0: int, flat: np.ndarray, *, tag: str = "embed") -> None:
+        """Bulk sequential write of ``flat`` (int32) starting at page lpn0.
+
+        Stats are span-granular (one event) — per-page Python bookkeeping
+        would dwarf the simulated DMA itself.
+        """
+        n_pages = -(-flat.size // SLOTS_PER_PAGE)
+        self._maybe_sleep(self.page_write_us * n_pages)
+        full = flat.size // SLOTS_PER_PAGE
+        if full:
+            self._pages[lpn0: lpn0 + full] = \
+                flat[: full * SLOTS_PER_PAGE].reshape(full, SLOTS_PER_PAGE)
+        rem = flat.size - full * SLOTS_PER_PAGE
+        if rem:
+            self._pages[lpn0 + full, :rem] = flat[full * SLOTS_PER_PAGE:]
+            self._pages[lpn0 + full, rem:] = 0
+        self.stats.written_pages += n_pages
+        self.stats.written_bytes += n_pages * PAGE_BYTES
+        self.stats.events.append(IOEvent(
+            time.perf_counter() - self._t0, "write", lpn0,
+            n_pages * PAGE_BYTES, tag))
+
+    def read_page(self, lpn: int, *, tag: str = "graph") -> np.ndarray:
+        self._maybe_sleep(self.page_read_us)
+        self.stats.record("read", lpn, PAGE_BYTES, tag, self._t0)
+        return self._pages[lpn]
+
+    def read_span(self, lpn0: int, n_pages: int, *, tag: str = "embed") -> np.ndarray:
+        self._maybe_sleep(self.page_read_us * n_pages)
+        self.stats.read_pages += n_pages
+        self.stats.read_bytes += n_pages * PAGE_BYTES
+        self.stats.events.append(IOEvent(
+            time.perf_counter() - self._t0, "read", lpn0,
+            n_pages * PAGE_BYTES, tag))
+        return self._pages[lpn0: lpn0 + n_pages].reshape(-1)

@@ -1,0 +1,652 @@
+"""GraphStore — graph-centric archiving on a page block device (paper §4.1).
+
+Implements the paper's dual mapping:
+
+  * **H-type** (high-degree vertices): per-vertex chain of pages, each page
+    ``[count, next_lpn, n0, n1, ...]``.  The mapping table entry is
+    VID -> head LPN (we additionally keep a tail pointer so appends are O(1),
+    reads still walk the chain as in the paper).
+  * **L-type** (low-degree vertices): many vertices packed in one page.
+    Neighbor chunks grow from slot 0; meta grows from the page end:
+    ``slot[-1]=n_nodes, slot[-2]=data_len,`` then per node *i*
+    ``slot[-3-2i]=vid, slot[-4-2i]=chunk_offset``.  The L-type table key is
+    the *largest* VID stored in the page (range search, paper Fig. 8).
+  * **gmap**: VID -> {H, L} selector bitmap.
+
+Embeddings are stored sequentially in the *embedding space* (top of the
+device, paper Fig. 7) with no page-level mapping: the location of VID *v*'s
+feature row is computed from ``v`` directly.
+
+Bulk ingest (``update_graph``) overlaps graph preprocessing (edge array ->
+undirected, self-looped, sorted adjacency) with the heavy embedding-table
+write, reproducing the paper's Fig. 18 behaviour: from the user's viewpoint
+the bulk latency ~= data transfer + embedding write.
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .blockdev import BlockDevice, SLOTS_PER_PAGE, SLOT_DTYPE
+
+# H-type page layout
+_H_COUNT, _H_NEXT, _H_DATA = 0, 1, 2
+H_CAP = SLOTS_PER_PAGE - _H_DATA          # neighbors per H page
+
+# L-type page layout (meta from the end)
+_L_NNODES = SLOTS_PER_PAGE - 1
+_L_DATALEN = SLOTS_PER_PAGE - 2
+
+
+def _l_meta_vid(i: int) -> int:
+    return SLOTS_PER_PAGE - 3 - 2 * i
+
+
+def _l_meta_off(i: int) -> int:
+    return SLOTS_PER_PAGE - 4 - 2 * i
+
+
+@dataclass
+class BulkTimeline:
+    """Timestamped phase spans of a bulk ingest (for Fig. 18)."""
+    transfer: tuple[float, float] = (0.0, 0.0)
+    graph_pre: tuple[float, float] = (0.0, 0.0)
+    write_feature: tuple[float, float] = (0.0, 0.0)
+    write_graph: tuple[float, float] = (0.0, 0.0)
+    total: float = 0.0
+    user_visible: float = 0.0     # transfer + embedding write (+ graph flush tail)
+
+
+@dataclass
+class GraphStoreStats:
+    l_evictions: int = 0
+    unit_updates: int = 0
+    pages_h: int = 0
+    pages_l: int = 0
+    bulk: BulkTimeline = field(default_factory=BulkTimeline)
+
+
+class GraphStore:
+    def __init__(self, dev: BlockDevice | None = None, *, h_threshold: int = 128,
+                 feature_dim: int = 0):
+        self.dev = dev or BlockDevice()
+        self.h_threshold = int(h_threshold)
+        self.gmap: dict[int, str] = {}                 # vid -> 'H' | 'L'
+        self.h_table: dict[int, tuple[int, int]] = {}  # vid -> (head_lpn, tail_lpn)
+        self._l_keys: list[int] = []                   # sorted max-vid per L page
+        self._l_lpns: list[int] = []                   # parallel LPN list
+        self.feature_dim = int(feature_dim)
+        self._emb_base: int | None = None              # first LPN of embedding span
+        self._emb_rows = 0
+        self.num_vertices = 0
+        self.stats = GraphStoreStats()
+        self._free_vids: list[int] = []                # deleted VIDs, reused (paper)
+        self._lock = threading.RLock()
+
+    # ================================================================= helpers
+    def _classify(self, degree: int) -> str:
+        return "H" if degree > self.h_threshold else "L"
+
+    def _new_l_page(self) -> tuple[int, np.ndarray]:
+        lpn = self.dev.alloc_front()
+        page = np.zeros(SLOTS_PER_PAGE, dtype=SLOT_DTYPE)
+        self.stats.pages_l += 1
+        return lpn, page
+
+    @staticmethod
+    def _l_free_slots(page: np.ndarray) -> int:
+        n, dlen = int(page[_L_NNODES]), int(page[_L_DATALEN])
+        return SLOTS_PER_PAGE - 2 - 2 * n - dlen
+
+    @staticmethod
+    def _l_scan(page: np.ndarray, vid: int) -> tuple[int, int, int] | None:
+        """Return (meta_index, chunk_start, chunk_len) of vid in an L page
+        (vectorized: the FPGA scans page meta in hardware; a Python loop
+        here would dominate every near-storage GetNeighbors)."""
+        n, dlen = int(page[_L_NNODES]), int(page[_L_DATALEN])
+        if n == 0:
+            return None
+        vid_idx = _L_NNODES - 2 - 2 * np.arange(n)      # slot of meta vid i
+        vids = page[vid_idx]
+        offs = page[vid_idx - 1]
+        hit = np.nonzero(vids == vid)[0]
+        if not len(hit):
+            return None
+        i = int(hit[0])
+        start = int(offs[i])
+        later = offs[(offs > start) & (offs <= dlen)]
+        # chunk end = smallest offset beyond start (tombstones included —
+        # their offsets remain valid boundaries) or the data length.
+        end = int(later.min()) if len(later) else dlen
+        return i, start, end - start
+
+    def _l_lookup_page(self, vid: int) -> tuple[int, np.ndarray] | None:
+        """Range search the L table (paper Fig. 8): first key >= vid."""
+        k = bisect.bisect_left(self._l_keys, vid)
+        if k == len(self._l_keys):
+            return None
+        lpn = self._l_lpns[k]
+        return lpn, self.dev.read_page(lpn).copy()
+
+    # ============================================================ bulk ingest
+    def update_graph(self, edge_array: np.ndarray,
+                     embeddings: np.ndarray | None = None,
+                     *, already_undirected: bool = False) -> BulkTimeline:
+        """Paper's UpdateGraph(EdgeArray, Embeddings) bulk RPC.
+
+        Overlaps adjacency-list conversion with the (much larger) embedding
+        write by running them on two threads, as GraphStore overlaps the
+        conversion compute with the storage write burst.
+        """
+        tl = BulkTimeline()
+        t0 = time.perf_counter()
+
+        # --- "transfer": the edge array + embedding list arriving over RoP.
+        edge_array = np.asarray(edge_array, dtype=np.int64).reshape(-1, 2).copy()
+        if embeddings is not None:
+            embeddings = np.ascontiguousarray(embeddings, dtype=np.float32)
+        tl.transfer = (0.0, time.perf_counter() - t0)
+
+        csr_box: dict = {}
+
+        def graph_pre():
+            s = time.perf_counter() - t0
+            csr_box["csr"] = preprocess_edges(
+                edge_array, already_undirected=already_undirected)
+            csr_box["span"] = (s, time.perf_counter() - t0)
+
+        def write_feature():
+            s = time.perf_counter() - t0
+            if embeddings is not None:
+                self._write_embedding_table(embeddings)
+            csr_box["wf"] = (s, time.perf_counter() - t0)
+
+        th_g = threading.Thread(target=graph_pre)
+        th_f = threading.Thread(target=write_feature)
+        th_g.start(); th_f.start()
+        th_f.join()
+        user_visible_at = time.perf_counter() - t0     # embedding write done
+        th_g.join()
+
+        tl.graph_pre = csr_box["span"]
+        tl.write_feature = csr_box.get("wf", (0.0, 0.0))
+
+        # --- flush adjacency pages (small vs embeddings; paper Fig. 18c)
+        s = time.perf_counter() - t0
+        indptr, indices = csr_box["csr"]
+        self._write_adjacency(indptr, indices)
+        tl.write_graph = (s, time.perf_counter() - t0)
+
+        tl.total = time.perf_counter() - t0
+        tl.user_visible = max(user_visible_at, tl.transfer[1])
+        self.stats.bulk = tl
+        return tl
+
+    def _write_embedding_table(self, embeddings: np.ndarray) -> None:
+        n, d = embeddings.shape
+        if self.feature_dim and d != self.feature_dim:
+            raise ValueError(f"feature dim {d} != store dim {self.feature_dim}")
+        self.feature_dim = d
+        flat = embeddings.reshape(-1).view(np.int32)
+        n_pages = -(-flat.size // SLOTS_PER_PAGE)
+        base = self.dev.alloc_back(n_pages)
+        self.dev.write_span(base, flat, tag="embed")
+        self._emb_base = base
+        self._emb_rows = n
+
+    def _write_adjacency(self, indptr: np.ndarray, indices: np.ndarray) -> None:
+        n = len(indptr) - 1
+        degrees = np.diff(indptr)
+        self.num_vertices = max(self.num_vertices, n)
+
+        h_vids = np.nonzero(degrees > self.h_threshold)[0]
+        l_vids = np.nonzero((degrees > 0) & (degrees <= self.h_threshold))[0]
+
+        # ---- H-type: per-vertex page chains
+        for vid in h_vids:
+            nbrs = indices[indptr[vid]: indptr[vid + 1]]
+            self.gmap[int(vid)] = "H"
+            head = tail = -1
+            for c0 in range(0, len(nbrs), H_CAP):
+                chunk = nbrs[c0: c0 + H_CAP]
+                lpn = self.dev.alloc_front()
+                page = np.zeros(SLOTS_PER_PAGE, dtype=SLOT_DTYPE)
+                page[_H_COUNT] = len(chunk)
+                page[_H_NEXT] = -1
+                page[_H_DATA: _H_DATA + len(chunk)] = chunk
+                self.dev.write_page(lpn, page)
+                self.stats.pages_h += 1
+                if head < 0:
+                    head = lpn
+                else:
+                    prev = self.dev.read_page(tail).copy()
+                    prev[_H_NEXT] = lpn
+                    self.dev.write_page(tail, prev)
+                tail = lpn
+            self.h_table[int(vid)] = (head, tail)
+
+        # ---- L-type: greedy packing in ascending VID order (cumsum splits)
+        if len(l_vids):
+            sizes = degrees[l_vids] + 2                      # data + 2 meta slots
+            csum = np.concatenate([[0], np.cumsum(sizes)])
+            cap = SLOTS_PER_PAGE - 2
+            start = 0
+            while start < len(l_vids):
+                hi = np.searchsorted(csum, csum[start] + cap, side="right") - 1
+                hi = max(hi, start + 1)                       # at least one node
+                lpn, page = self._new_l_page()
+                dlen = 0
+                cnt = 0
+                for vid in l_vids[start:hi]:
+                    nbrs = indices[indptr[vid]: indptr[vid + 1]]
+                    page[_l_meta_vid(cnt)] = vid
+                    page[_l_meta_off(cnt)] = dlen
+                    page[dlen: dlen + len(nbrs)] = nbrs
+                    dlen += len(nbrs)
+                    cnt += 1
+                    self.gmap[int(vid)] = "L"
+                page[_L_NNODES] = cnt
+                page[_L_DATALEN] = dlen
+                self.dev.write_page(lpn, page)
+                self._l_keys.append(int(l_vids[hi - 1]))
+                self._l_lpns.append(lpn)
+                start = hi
+
+    # ================================================================ queries
+    def get_neighbors(self, vid: int) -> np.ndarray:
+        """Paper GetNeighbors(VID) unit RPC."""
+        with self._lock:
+            kind = self.gmap.get(int(vid))
+            if kind is None:
+                return np.empty(0, dtype=SLOT_DTYPE)
+            if kind == "H":
+                out = []
+                lpn, _ = self.h_table[int(vid)]
+                while lpn >= 0:
+                    page = self.dev.read_page(lpn)
+                    cnt = int(page[_H_COUNT])
+                    out.append(page[_H_DATA: _H_DATA + cnt].copy())
+                    lpn = int(page[_H_NEXT])
+                return np.concatenate(out) if out else np.empty(0, dtype=SLOT_DTYPE)
+            hit = self._l_lookup_page(vid)
+            if hit is None:
+                return np.empty(0, dtype=SLOT_DTYPE)
+            _, page = hit
+            found = self._l_scan(page, int(vid))
+            if found is None:
+                return np.empty(0, dtype=SLOT_DTYPE)
+            _, start, ln = found
+            return page[start: start + ln].copy()
+
+    def get_embed(self, vid: int) -> np.ndarray:
+        """Paper GetEmbed(VID): read only the pages covering row ``vid``."""
+        if self._emb_base is None:
+            raise KeyError("no embedding table loaded")
+        d = self.feature_dim
+        lo, hi = vid * d, (vid + 1) * d
+        p0, p1 = lo // SLOTS_PER_PAGE, -(-hi // SLOTS_PER_PAGE)
+        flat = self.dev.read_span(self._emb_base + p0, p1 - p0, tag="embed")
+        row = flat[lo - p0 * SLOTS_PER_PAGE: hi - p0 * SLOTS_PER_PAGE]
+        return row.view(np.float32).copy()
+
+    def get_embeds(self, vids: np.ndarray) -> np.ndarray:
+        """Batched embedding gather (one page-span read per row group)."""
+        return np.stack([self.get_embed(int(v)) for v in np.asarray(vids)])
+
+    # ============================================================== unit ops
+    def _l_collect(self, page: np.ndarray) -> list[tuple[int, np.ndarray]]:
+        """All live (vid, neighbor-chunk) pairs of an L page."""
+        n = int(page[_L_NNODES])
+        out = []
+        for i in range(n):
+            vid = int(page[_l_meta_vid(i)])
+            if vid < 0:
+                continue                                   # tombstone
+            meta = self._l_scan(page, vid)
+            _, start, ln = meta
+            out.append((vid, page[start: start + ln].copy()))
+        return out
+
+    @staticmethod
+    def _l_build_page(nodes: list[tuple[int, np.ndarray]]) -> np.ndarray:
+        page = np.zeros(SLOTS_PER_PAGE, dtype=SLOT_DTYPE)
+        dlen = 0
+        for i, (vid, ch) in enumerate(nodes):
+            page[_l_meta_vid(i)] = vid
+            page[_l_meta_off(i)] = dlen
+            page[dlen: dlen + len(ch)] = ch
+            dlen += len(ch)
+        page[_L_NNODES] = len(nodes)
+        page[_L_DATALEN] = dlen
+        return page
+
+    def _l_split_insert(self, k: int, vid: int, chunk: np.ndarray) -> None:
+        """Insert (vid, chunk) into L page k; split the page if full.
+
+        Paper adaptation: the paper evicts one neighbor set to a fresh page,
+        which breaks the range-search partition under out-of-order VIDs; we
+        use a range-preserving page split instead (same cost profile: one
+        extra page + one table insert)."""
+        lpn = self._l_lpns[k]
+        page = self.dev.read_page(lpn).copy()
+        nodes = [nc for nc in self._l_collect(page) if nc[0] != vid]
+        nodes.append((vid, chunk))
+        nodes.sort(key=lambda nc: nc[0])
+        need = sum(len(c) + 2 for _, c in nodes) + 2
+        if need <= SLOTS_PER_PAGE:
+            self.dev.write_page(lpn, self._l_build_page(nodes))
+            if vid > self._l_keys[k]:
+                self._l_keys[k] = vid
+            return
+        self.stats.l_evictions += 1
+        sizes = np.array([len(c) + 2 for _, c in nodes])
+        csum = np.cumsum(sizes)
+        half = int(np.searchsorted(csum, csum[-1] / 2)) + 1
+        half = min(max(half, 1), len(nodes) - 1)
+        low, high = nodes[:half], nodes[half:]
+        new_lpn, _ = self._new_l_page()
+        self.dev.write_page(new_lpn, self._l_build_page(low))
+        self.dev.write_page(lpn, self._l_build_page(high))
+        self._l_keys[k] = max(self._l_keys[k], high[-1][0])
+        self._l_keys.insert(k, low[-1][0])
+        self._l_lpns.insert(k, new_lpn)
+
+    def add_vertex(self, vid: int, embed: np.ndarray | None = None) -> None:
+        """AddVertex: self-loop only, starts as L-type (paper).  Ascending
+        VIDs append to the last page; out-of-order VIDs split-insert into
+        the page covering their range."""
+        with self._lock:
+            vid = int(vid)
+            if vid in self.gmap:
+                return
+            self.stats.unit_updates += 1
+            loop = np.array([vid], dtype=SLOT_DTYPE)
+            if not self._l_keys:
+                self._l_insert_new_page([vid], [loop])
+            elif vid > self._l_keys[-1]:
+                lpn = self._l_lpns[-1]
+                page = self.dev.read_page(lpn).copy()
+                if self._l_free_slots(page) >= 3:
+                    self._l_append_node(page, vid, loop)
+                    self.dev.write_page(lpn, page)
+                    self._l_keys[-1] = vid
+                else:
+                    self._l_insert_new_page([vid], [loop])
+            else:
+                k = bisect.bisect_left(self._l_keys, vid)
+                self._l_split_insert(k, vid, loop)
+            self.gmap[vid] = "L"
+            self.num_vertices = max(self.num_vertices, vid + 1)
+            if embed is not None:
+                self.update_embed(vid, embed)
+
+    def _l_insert_new_page(self, vids, chunks) -> None:
+        lpn, page = self._new_l_page()
+        dlen = 0
+        for i, (v, ch) in enumerate(zip(vids, chunks)):
+            page[_l_meta_vid(i)] = v
+            page[_l_meta_off(i)] = dlen
+            page[dlen: dlen + len(ch)] = ch
+            dlen += len(ch)
+        page[_L_NNODES] = len(vids)
+        page[_L_DATALEN] = dlen
+        self.dev.write_page(lpn, page)
+        key = int(max(vids))
+        k = bisect.bisect_left(self._l_keys, key)
+        self._l_keys.insert(k, key)
+        self._l_lpns.insert(k, lpn)
+
+    @staticmethod
+    def _l_append_node(page: np.ndarray, vid: int, chunk: np.ndarray) -> None:
+        n, dlen = int(page[_L_NNODES]), int(page[_L_DATALEN])
+        page[_l_meta_vid(n)] = vid
+        page[_l_meta_off(n)] = dlen
+        page[dlen: dlen + len(chunk)] = chunk
+        page[_L_NNODES] = n + 1
+        page[_L_DATALEN] = dlen + len(chunk)
+
+    def add_edge(self, dst: int, src: int) -> None:
+        """AddEdge: undirected — inserts src into N(dst) and dst into N(src)."""
+        with self._lock:
+            self.stats.unit_updates += 1
+            for v in (dst, src):
+                if v not in self.gmap:
+                    self.add_vertex(v)
+            self._insert_neighbor(int(dst), int(src))
+            if dst != src:
+                self._insert_neighbor(int(src), int(dst))
+
+    def _insert_neighbor(self, vid: int, nbr: int) -> None:
+        if self.gmap[vid] == "H":
+            head, tail = self.h_table[vid]
+            page = self.dev.read_page(tail).copy()
+            cnt = int(page[_H_COUNT])
+            if cnt < H_CAP:
+                page[_H_DATA + cnt] = nbr
+                page[_H_COUNT] = cnt + 1
+                self.dev.write_page(tail, page)
+            else:
+                lpn = self.dev.alloc_front()
+                newp = np.zeros(SLOTS_PER_PAGE, dtype=SLOT_DTYPE)
+                newp[_H_COUNT] = 1
+                newp[_H_NEXT] = -1
+                newp[_H_DATA] = nbr
+                self.dev.write_page(lpn, newp)
+                page[_H_NEXT] = lpn
+                self.dev.write_page(tail, page)
+                self.h_table[vid] = (head, lpn)
+                self.stats.pages_h += 1
+            return
+        # ---- L-type
+        k = bisect.bisect_left(self._l_keys, vid)
+        lpn = self._l_lpns[k]
+        page = self.dev.read_page(lpn).copy()
+        meta = self._l_scan(page, vid)
+        assert meta is not None, f"vid {vid} missing from L page"
+        mi, start, ln = meta
+
+        if ln + 1 > self.h_threshold:
+            # degree crossed the threshold: promote to H-type
+            nbrs = np.concatenate([page[start: start + ln],
+                                   np.array([nbr], dtype=SLOT_DTYPE)])
+            self._l_remove_node(page, lpn, vid)
+            self._promote_to_h(vid, nbrs)
+            return
+
+        if self._l_free_slots(page) >= 1:
+            dlen = int(page[_L_DATALEN])
+            if start + ln == dlen:                       # chunk is last: append
+                page[dlen] = nbr
+                page[_L_DATALEN] = dlen + 1
+            else:                                        # relocate chunk to end
+                chunk = page[start: start + ln].copy()
+                self._l_shift_left(page, start, ln)
+                dlen = int(page[_L_DATALEN])
+                page[dlen: dlen + ln] = chunk
+                page[dlen + ln] = nbr
+                page[_l_meta_off(mi)] = dlen
+                page[_L_DATALEN] = dlen + ln + 1
+            self.dev.write_page(lpn, page)
+            return
+
+        # no space: range-preserving split of this page (paper adaptation
+        # of the neighbor-set eviction; see _l_split_insert)
+        chunk = np.concatenate([page[start: start + ln],
+                                np.array([nbr], dtype=SLOT_DTYPE)])
+        self._l_split_insert(k, vid, chunk)
+
+    def _promote_to_h(self, vid: int, nbrs: np.ndarray) -> None:
+        head = tail = -1
+        for c0 in range(0, len(nbrs), H_CAP):
+            chunk = nbrs[c0: c0 + H_CAP]
+            lpn = self.dev.alloc_front()
+            page = np.zeros(SLOTS_PER_PAGE, dtype=SLOT_DTYPE)
+            page[_H_COUNT] = len(chunk)
+            page[_H_NEXT] = -1
+            page[_H_DATA: _H_DATA + len(chunk)] = chunk
+            self.dev.write_page(lpn, page)
+            self.stats.pages_h += 1
+            if head < 0:
+                head = lpn
+            else:
+                prev = self.dev.read_page(tail).copy()
+                prev[_H_NEXT] = lpn
+                self.dev.write_page(tail, prev)
+            tail = lpn
+        self.h_table[vid] = (head, tail)
+        self.gmap[vid] = "H"
+
+    def _l_shift_left(self, page: np.ndarray, start: int, ln: int) -> None:
+        """Remove chunk [start, start+ln) from the data region, fix offsets."""
+        dlen = int(page[_L_DATALEN])
+        page[start: dlen - ln] = page[start + ln: dlen].copy()
+        page[_L_DATALEN] = dlen - ln
+        n = int(page[_L_NNODES])
+        for j in range(n):
+            off = int(page[_l_meta_off(j)])
+            if off > start:
+                page[_l_meta_off(j)] = off - ln
+
+    def _l_remove_node(self, page: np.ndarray, lpn: int, vid: int) -> None:
+        meta = self._l_scan(page, vid)
+        if meta is None:
+            return
+        mi, start, ln = meta
+        self._l_shift_left(page, start, ln)
+        page[_l_meta_vid(mi)] = -1                       # tombstone (paper: reuse)
+        page[_l_meta_off(mi)] = int(page[_L_DATALEN])
+        self.dev.write_page(lpn, page)
+
+    def delete_edge(self, dst: int, src: int) -> None:
+        with self._lock:
+            self.stats.unit_updates += 1
+            self._remove_neighbor(int(dst), int(src))
+            if dst != src:
+                self._remove_neighbor(int(src), int(dst))
+
+    def _remove_neighbor(self, vid: int, nbr: int) -> None:
+        kind = self.gmap.get(vid)
+        if kind is None:
+            return
+        if kind == "H":
+            lpn, _ = self.h_table[vid]
+            while lpn >= 0:
+                page = self.dev.read_page(lpn).copy()
+                cnt = int(page[_H_COUNT])
+                data = page[_H_DATA: _H_DATA + cnt]
+                hit = np.nonzero(data == nbr)[0]
+                if len(hit):
+                    i = int(hit[0])
+                    data[i] = data[cnt - 1]
+                    page[_H_COUNT] = cnt - 1
+                    self.dev.write_page(lpn, page)
+                    return
+                lpn = int(page[_H_NEXT])
+            return
+        hit = self._l_lookup_page(vid)
+        if hit is None:
+            return
+        lpn, page = hit
+        meta = self._l_scan(page, vid)
+        if meta is None:
+            return
+        mi, start, ln = meta
+        data = page[start: start + ln]
+        pos = np.nonzero(data == nbr)[0]
+        if not len(pos):
+            return
+        i = int(pos[0])
+        page[start + i: start + ln - 1] = page[start + i + 1: start + ln].copy()
+        self._l_shift_tail_one(page, start, ln)
+        self.dev.write_page(lpn, page)
+
+    def _l_shift_tail_one(self, page: np.ndarray, start: int, ln: int) -> None:
+        """Shrink chunk at ``start`` by one slot, compacting the data region."""
+        dlen = int(page[_L_DATALEN])
+        page[start + ln - 1: dlen - 1] = page[start + ln: dlen].copy()
+        page[_L_DATALEN] = dlen - 1
+        n = int(page[_L_NNODES])
+        for j in range(n):
+            off = int(page[_l_meta_off(j)])
+            if off >= start + ln:
+                page[_l_meta_off(j)] = off - 1
+
+    def delete_vertex(self, vid: int) -> None:
+        with self._lock:
+            vid = int(vid)
+            self.stats.unit_updates += 1
+            nbrs = self.get_neighbors(vid)
+            for nbr in nbrs:
+                if int(nbr) != vid:
+                    self._remove_neighbor(int(nbr), vid)
+            kind = self.gmap.pop(vid, None)
+            if kind == "H":
+                lpn, _ = self.h_table.pop(vid)
+                while lpn >= 0:
+                    page = self.dev.read_page(lpn)
+                    nxt = int(page[_H_NEXT])
+                    self.dev.free_page(lpn)
+                    lpn = nxt
+            elif kind == "L":
+                hit = self._l_lookup_page(vid)
+                if hit is not None:
+                    lpn, page = hit
+                    self._l_remove_node(page, lpn, vid)
+            self._free_vids.append(vid)
+
+    def update_embed(self, vid: int, embed: np.ndarray) -> None:
+        """UpdateEmbed(VID, Embed): in-place page RMW of one feature row."""
+        if self._emb_base is None:
+            raise KeyError("no embedding table loaded")
+        d = self.feature_dim
+        row = np.ascontiguousarray(embed, dtype=np.float32).reshape(-1)
+        assert row.size == d
+        lo = vid * d
+        p0 = lo // SLOTS_PER_PAGE
+        within = lo - p0 * SLOTS_PER_PAGE
+        n_pages = -(-(within + d) // SLOTS_PER_PAGE)
+        flat = self.dev.read_span(self._emb_base + p0, n_pages, tag="embed").copy()
+        flat[within: within + d] = row.view(np.int32)
+        for i in range(n_pages):
+            self.dev.write_page(
+                self._emb_base + p0 + i,
+                flat[i * SLOTS_PER_PAGE: (i + 1) * SLOTS_PER_PAGE], tag="embed")
+
+    # ============================================================== export
+    def to_adjacency(self) -> dict[int, set[int]]:
+        """Full adjacency export (oracle/validation only — reads every page)."""
+        out: dict[int, set[int]] = {}
+        for vid in list(self.gmap):
+            out[vid] = set(int(x) for x in self.get_neighbors(vid))
+        return out
+
+
+# ---------------------------------------------------------------- preprocessing
+def preprocess_edges(edge_array: np.ndarray, *, already_undirected: bool = False,
+                     add_self_loops: bool = True) -> tuple[np.ndarray, np.ndarray]:
+    """Paper Fig. 2 graph preprocessing: edge array -> sorted undirected CSR.
+
+    [G-1] load edge array  [G-2] mirror {dst,src}->{src,dst}
+    [G-3] merge + sort -> VID-indexed structure  [G-4] inject self-loops.
+    Returns (indptr, indices) CSR over max(VID)+1 vertices.
+    """
+    e = np.asarray(edge_array, dtype=np.int64).reshape(-1, 2)
+    if e.size == 0:
+        return np.zeros(1, dtype=np.int64), np.empty(0, dtype=SLOT_DTYPE)
+    n = int(e.max()) + 1
+    if not already_undirected:
+        e = np.concatenate([e, e[:, ::-1]], axis=0)
+    if add_self_loops:
+        loops = np.arange(n, dtype=np.int64)
+        e = np.concatenate([e, np.stack([loops, loops], axis=1)], axis=0)
+    key = e[:, 0] * n + e[:, 1]
+    key = np.unique(key)                      # sort + dedup (the "radix sort")
+    src = key // n
+    dst = (key % n).astype(SLOT_DTYPE)
+    counts = np.bincount(src, minlength=n)
+    indptr = np.concatenate([[0], np.cumsum(counts)])
+    return indptr, dst

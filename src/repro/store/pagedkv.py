@@ -1,0 +1,101 @@
+"""Paged KV-cache manager — GraphStore's VID->LPN mapping generalized to
+LM serving (the paper's storage technique as a first-class serving feature).
+
+Exactly the H-type design: each *sequence* (≡ high-degree vertex) owns a
+chain of fixed-size pages recorded in a page table (≡ VID->LPN linked
+list); pages are allocated from a free list on demand as the sequence
+grows and recycled on sequence completion (the paper's deleted-VID reuse).
+The physical pool layout (P, page_size, KVH, head_dim) is what the Pallas
+``decode_attention`` kernel consumes via scalar-prefetched page tables.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class PagePool:
+    num_pages: int
+    page_size: int
+    num_layers: int
+    num_kv_heads: int
+    head_dim: int
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        shp = (self.num_layers, self.num_pages, self.page_size,
+               self.num_kv_heads, self.head_dim)
+        self.k = np.zeros(shp, self.dtype)
+        self.v = np.zeros(shp, self.dtype)
+        self._free: list[int] = list(range(self.num_pages - 1, -1, -1))
+        self.alloc_count = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise MemoryError("KV page pool exhausted")
+        self.alloc_count += 1
+        return self._free.pop()
+
+    def free(self, pages) -> None:
+        self._free.extend(int(p) for p in pages)
+
+
+@dataclass
+class Sequence:
+    sid: int
+    tokens: list
+    pages: list = field(default_factory=list)   # page-table chain (H-type)
+    length: int = 0                             # KV slots filled
+    done: bool = False
+    generated: list = field(default_factory=list)
+
+
+class PagedKVManager:
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self.seqs: dict[int, Sequence] = {}
+
+    def add_sequence(self, sid: int, tokens) -> Sequence:
+        seq = Sequence(sid=sid, tokens=list(tokens))
+        self.seqs[sid] = seq
+        return seq
+
+    def ensure_capacity(self, seq: Sequence, new_len: int) -> None:
+        ps = self.pool.page_size
+        while len(seq.pages) * ps < new_len:
+            seq.pages.append(self.pool.alloc())
+
+    def write_kv(self, seq: Sequence, layer: int, k: np.ndarray,
+                 v: np.ndarray, start: int) -> None:
+        """Write (T, KVH, hd) at logical positions [start, start+T)."""
+        ps = self.pool.page_size
+        t = k.shape[0]
+        self.ensure_capacity(seq, start + t)
+        for i in range(t):
+            pos = start + i
+            page = seq.pages[pos // ps]
+            off = pos % ps
+            self.pool.k[layer, page, off] = k[i]
+            self.pool.v[layer, page, off] = v[i]
+
+    def page_table(self, seqs, max_pages: int) -> np.ndarray:
+        """(B, max_pages) int32 table for the kernel (pad with page 0)."""
+        pt = np.zeros((len(seqs), max_pages), np.int32)
+        for i, s in enumerate(seqs):
+            pt[i, : len(s.pages)] = s.pages
+        return pt
+
+    def release(self, seq: Sequence) -> None:
+        self.pool.free(seq.pages)
+        seq.pages = []
+        self.seqs.pop(seq.sid, None)
+
+    def utilization(self) -> float:
+        used = self.pool.num_pages - self.pool.free_pages
+        return used / self.pool.num_pages

@@ -1,0 +1,123 @@
+"""Batch preprocessing — node sampling, reindexing, embedding lookup (paper §2.2).
+
+Reproduces the paper's B-1..B-5 pipeline directly against GraphStore (no host
+storage stack):
+
+  [B-1] read neighbors of the batch targets and sample ``fanout`` of them,
+        per hop, producing per-layer subgraphs;
+  [B-2] allocate new (local) VIDs in sampled order and reindex the subgraphs;
+  [B-3/4] gather the embeddings of all sampled nodes from the store;
+  [B-5] emit device-ready padded arrays.
+
+The subgraph layout is the *page-shaped* padded-neighbor block: a fixed-width
+``(num_dst, fanout)`` neighbor-index matrix plus mask.  This mirrors
+GraphStore's fixed-capacity page chunks and is exactly the ELL layout our
+Pallas SpMM kernel consumes — the near-storage format IS the accelerator
+format, which is the paper's end-to-end point.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class LayerBlock:
+    """One GNN layer's sampled bipartite block.
+
+    ``nbr[i, k]`` indexes into the *next* level's node list (local ids);
+    ``mask[i, k]`` is 1.0 for valid slots.  Row ``i`` aggregates into local
+    node ``i`` of this level (levels are prefix-ordered, see sample_batch).
+    """
+    nbr: np.ndarray        # (num_dst, fanout) int32
+    mask: np.ndarray       # (num_dst, fanout) float32
+    num_dst: int
+
+
+@dataclass
+class SampledBatch:
+    layers: list[LayerBlock]        # [layer_1 .. layer_L]: layer_L nearest targets
+    node_vids: np.ndarray           # (num_nodes,) global VIDs, sampled order
+    embeddings: np.ndarray | None   # (num_nodes, D) float32
+    num_targets: int
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.node_vids)
+
+
+def sample_batch(store, targets, fanouts, *, rng: np.random.Generator | None = None,
+                 fetch_embeddings: bool = True, pad_to: int | None = None) -> SampledBatch:
+    """Unique-neighbor sampling (GraphSAGE-style) with ``len(fanouts)`` hops.
+
+    ``fanouts[0]`` is the fanout of the hop nearest the targets (GNN layer L).
+    Level lists are prefix-ordered: level k+1's node list begins with level
+    k's nodes, so destination *i* of a block is node *i* of the deeper list —
+    the paper's "allocate new VIDs in the order of sampled nodes" rule.
+    """
+    rng = rng or np.random.default_rng(0)
+    targets = np.asarray(targets, dtype=np.int64)
+    levels: list[np.ndarray] = [targets]
+    blocks_rev: list[LayerBlock] = []
+
+    for fanout in fanouts:
+        frontier = levels[-1]
+        vid_to_local: dict[int, int] = {int(v): i for i, v in enumerate(frontier)}
+        next_nodes = list(frontier)
+        nbr = np.zeros((len(frontier), fanout), dtype=np.int32)
+        mask = np.zeros((len(frontier), fanout), dtype=np.float32)
+        for i, v in enumerate(frontier):
+            neigh = store.get_neighbors(int(v))            # [B-1] near-storage read
+            if len(neigh) == 0:
+                neigh = np.array([int(v)], dtype=np.int32)  # degenerate self-loop
+            if len(neigh) > fanout:
+                neigh = rng.choice(neigh, size=fanout, replace=False)
+            for k, u in enumerate(neigh):
+                u = int(u)
+                loc = vid_to_local.get(u)
+                if loc is None:                             # [B-2] reindex
+                    loc = len(next_nodes)
+                    vid_to_local[u] = loc
+                    next_nodes.append(u)
+                nbr[i, k] = loc
+                mask[i, k] = 1.0
+        blocks_rev.append(LayerBlock(nbr=nbr, mask=mask, num_dst=len(frontier)))
+        levels.append(np.asarray(next_nodes, dtype=np.int64))
+
+    node_vids = levels[-1]
+    emb = None
+    if fetch_embeddings and store.feature_dim:
+        emb = store.get_embeds(node_vids)                   # [B-3/4] gather
+
+    batch = SampledBatch(layers=list(reversed(blocks_rev)), node_vids=node_vids,
+                         embeddings=emb, num_targets=len(targets))
+    if pad_to is not None:
+        batch = pad_batch(batch, pad_to)
+    return batch
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pad_batch(batch: SampledBatch, multiple: int) -> SampledBatch:
+    """Pad node count and per-block dst counts to a multiple (shape stability
+    for jit: a handful of bucketed shapes instead of one per batch). [B-5]"""
+    n_pad = _round_up(batch.num_nodes, multiple)
+    layers = []
+    for blk in batch.layers:
+        d_pad = _round_up(blk.num_dst, multiple)
+        nbr = np.zeros((d_pad, blk.nbr.shape[1]), dtype=np.int32)
+        mask = np.zeros((d_pad, blk.nbr.shape[1]), dtype=np.float32)
+        nbr[: blk.num_dst] = blk.nbr
+        mask[: blk.num_dst] = blk.mask
+        layers.append(LayerBlock(nbr=nbr, mask=mask, num_dst=blk.num_dst))
+    emb = None
+    if batch.embeddings is not None:
+        emb = np.zeros((n_pad, batch.embeddings.shape[1]), dtype=np.float32)
+        emb[: batch.num_nodes] = batch.embeddings
+    vids = np.full(n_pad, -1, dtype=np.int64)
+    vids[: batch.num_nodes] = batch.node_vids
+    return SampledBatch(layers=layers, node_vids=vids, embeddings=emb,
+                        num_targets=batch.num_targets)

@@ -1,0 +1,123 @@
+"""AdamW in pure JAX (no optax dependency) with ZeRO-1 style optimizer-state
+sharding and an int8 error-feedback gradient compressor.
+
+The optimizer state mirrors the parameter pytree; ``opt_pspecs`` derives its
+PartitionSpecs from the parameter ParamDefs — with ``zero1=True`` the m/v
+moments additionally shard their largest replicated, dp-divisible dimension
+over the data axes (ZeRO-1: each DP rank owns a slice of optimizer state).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import layers as L
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+
+
+def schedule(c: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(c.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - c.warmup_steps)
+                    / jnp.maximum(c.decay_steps - c.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return c.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_state(params):
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+    }
+
+
+def abstract_state(abstract_params):
+    zero = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), abstract_params)
+    return {"step": jax.ShapeDtypeStruct((), jnp.int32), "m": zero, "v": zero}
+
+
+def _zero1_spec(pdef_spec: P, shape, dp_axes, dp_size: int) -> P:
+    """Add dp sharding on the largest unsharded, divisible dim (ZeRO-1)."""
+    entries = list(pdef_spec) + [None] * (len(shape) - len(pdef_spec))
+    best, best_dim = -1, -1
+    for i, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and dp_size > 0 and s % dp_size == 0 and s > best:
+            best, best_dim = s, i
+    if best_dim >= 0:
+        entries[best_dim] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return P(*entries)
+
+
+def opt_pspecs(param_defs, *, zero1: bool = False, dp_axes=("data",),
+               dp_size: int = 1):
+    base = L.pspec_tree(param_defs)
+    if not zero1:
+        mom = base
+    else:
+        defs_flat, treedef = jax.tree.flatten(param_defs, is_leaf=L.is_def)
+        specs_flat = []
+        for d in defs_flat:
+            spec = L.resolve_pspec(d.pspec)
+            specs_flat.append(_zero1_spec(spec, d.shape, tuple(dp_axes),
+                                          dp_size))
+        mom = jax.tree.unflatten(treedef, specs_flat)
+    return {"step": P(), "m": mom, "v": mom}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(c: AdamWConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = schedule(c, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1 - c.b1 ** step.astype(jnp.float32)
+    b2c = 1 - c.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(
+        lambda g, m: c.b1 * m + (1 - c.b1) * g.astype(jnp.float32) * scale,
+        grads, state["m"])
+    new_v = jax.tree.map(
+        lambda g, v: c.b2 * v
+        + (1 - c.b2) * jnp.square(g.astype(jnp.float32) * scale),
+        grads, state["v"])
+    new_params = jax.tree.map(
+        lambda p, m, v: (p - lr * (m / b1c / (jnp.sqrt(v / b2c) + c.eps)
+                                   + c.weight_decay * p)).astype(p.dtype),
+        params, new_m, new_v)
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# --------------------------------------------------- int8 EF compression
+def compress_int8(g, err):
+    """Error-feedback int8 quantization: returns (q, scale, new_err)."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, gf - deq
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,174 @@
+"""Fault-tolerant trainer: jit'd sharded train step (grad accumulation,
+remat, donation), async checkpointing with deterministic resume, straggler
+detection, and failure recovery (replay from last committed step).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import layers as L
+from ..models.api import ModelAPI
+from . import optimizer as O
+from .checkpoint import Checkpointer
+
+
+def make_train_step(api: ModelAPI, opt_cfg: O.AdamWConfig, *,
+                    grad_accum: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = api.train_loss(params, batch)
+        return loss, metrics
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, -1) + x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zero, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            metrics = {}
+        params, opt_state, om = O.apply_updates(opt_cfg, params, grads,
+                                                opt_state)
+        m = {"loss": loss, **{k: v for k, v in metrics.items()}, **om}
+        return params, opt_state, m
+
+    return step
+
+
+@dataclass
+class StragglerMonitor:
+    """Per-step deadline policy: EMA of step time; steps slower than
+    ``factor``x EMA are flagged.  At pod scale the supervisor maps flags to
+    a host and triggers re-slicing; single-process we record + expose."""
+    factor: float = 3.0
+    ema: float | None = None
+    alpha: float = 0.2
+    flagged: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        slow = self.ema is not None and dt > self.factor * self.ema
+        self.ema = dt if self.ema is None else \
+            (1 - self.alpha) * self.ema + self.alpha * dt
+        if slow:
+            self.flagged.append((step, dt))
+        return slow
+
+
+class Trainer:
+    def __init__(self, api: ModelAPI, shape, *, mesh=None, dp_axes=("data",),
+                 opt_cfg: O.AdamWConfig | None = None, grad_accum: int = 1,
+                 ckpt_dir: str | None = None, ckpt_every: int = 50,
+                 zero1: bool = False, seed: int = 0):
+        self.api = api
+        self.shape = shape
+        self.mesh = mesh
+        self.dp_axes = dp_axes
+        self.opt_cfg = opt_cfg or O.AdamWConfig()
+        self.grad_accum = grad_accum
+        self.ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self.monitor = StragglerMonitor()
+        self.seed = seed
+        self.metrics_log: list[dict] = []
+
+        step_fn = make_train_step(api, self.opt_cfg, grad_accum=grad_accum)
+        if mesh is not None:
+            with L.use_mesh(mesh, dp_axes):
+                pspecs = api.param_pspecs()
+                ospecs = O.opt_pspecs(api.param_defs(), zero1=zero1,
+                                      dp_axes=dp_axes,
+                                      dp_size=int(np.prod(
+                                          [mesh.shape[a] for a in dp_axes])))
+                bspecs = api.input_pspecs(shape)
+            ns = lambda tree: jax.tree.map(
+                lambda s: NamedSharding(mesh, s), tree)
+            self._in_sh = (ns(pspecs), ns(ospecs), ns(bspecs))
+            self._out_sh = (ns(pspecs), ns(ospecs), None)
+            self.step_fn = jax.jit(step_fn, in_shardings=self._in_sh,
+                                   out_shardings=self._out_sh,
+                                   donate_argnums=(0, 1))
+        else:
+            self._in_sh = None
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------ lifecycle
+    def init_or_restore(self):
+        params_proto = None
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            abs_p = self.api.abstract_params()
+            abs_o = O.abstract_state(abs_p)
+            shardings = None
+            if self._in_sh is not None:
+                shardings = {"params": self._in_sh[0], "opt": self._in_sh[1]}
+                tree, step = self.ckpt.restore(
+                    {"params": abs_p, "opt": abs_o},
+                    shardings={"params": self._in_sh[0],
+                               "opt": self._in_sh[1]})
+            else:
+                tree, step = self.ckpt.restore({"params": abs_p, "opt": abs_o})
+            return tree["params"], tree["opt"], step
+        params = self.api.init_params(self.seed)
+        opt_state = O.init_state(params)
+        if self._in_sh is not None:
+            params = jax.device_put(params, self._in_sh[0])
+            opt_state = jax.device_put(opt_state, self._in_sh[1])
+        return params, opt_state, 0
+
+    def run(self, num_steps: int, *, pipeline=None, fault_hook=None):
+        from ..data.pipeline import Pipeline
+        params, opt_state, start = self.init_or_restore()
+        pipe = pipeline or Pipeline(self.api.cfg, self.shape, seed=self.seed,
+                                    start_step=start, host_count=1)
+        ctx = L.use_mesh(self.mesh, self.dp_axes) if self.mesh is not None \
+            else _null_ctx()
+        with ctx:
+            step = start
+            while step < start + num_steps:
+                t0 = time.perf_counter()
+                ds, batch = pipe.next()
+                assert ds == step, f"pipeline desync {ds} != {step}"
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                if fault_hook is not None and fault_hook(step):
+                    # simulated node failure: deterministic replay from ckpt
+                    raise RuntimeError(f"injected fault at step {step}")
+                params, opt_state, m = self.step_fn(params, opt_state, batch)
+                m = {k: float(v) for k, v in m.items()}
+                dt = time.perf_counter() - t0
+                slow = self.monitor.observe(step, dt)
+                m.update(step=step, dt=dt, straggler=slow)
+                self.metrics_log.append(m)
+                step += 1
+                if self.ckpt and (step % self.ckpt_every == 0):
+                    self.ckpt.save(step, {"params": params, "opt": opt_state})
+            if self.ckpt:
+                self.ckpt.save(step, {"params": params, "opt": opt_state},
+                               blocking=True)
+        pipe.close()
+        return params, opt_state, step
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

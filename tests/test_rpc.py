@@ -1,0 +1,61 @@
+"""RoP transport: serialization round-trips (hypothesis), channel mechanics."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.rpc import serialize, deserialize, PCIeChannel, RPCServer, RPCClient
+
+
+prims = st.one_of(st.none(), st.booleans(), st.integers(-2**31, 2**31 - 1),
+                  st.floats(allow_nan=False, allow_infinity=False),
+                  st.text(max_size=20))
+nested = st.recursive(
+    prims, lambda c: st.one_of(
+        st.lists(c, max_size=4),
+        st.dictionaries(st.text(min_size=1, max_size=8), c, max_size=4)),
+    max_leaves=12)
+
+
+@settings(max_examples=50, deadline=None)
+@given(nested)
+def test_roundtrip_json_like(obj):
+    got = deserialize(serialize(obj))
+    assert got == obj or (obj != obj)
+
+
+def test_roundtrip_ndarrays():
+    rng = np.random.default_rng(0)
+    obj = {"a": rng.standard_normal((3, 4)).astype(np.float32),
+           "b": [rng.integers(0, 10, 5), "x", 3],
+           "c": {"d": rng.standard_normal(7)}}
+    got = deserialize(serialize(obj))
+    np.testing.assert_array_equal(got["a"], obj["a"])
+    np.testing.assert_array_equal(got["b"][0], obj["b"][0])
+    np.testing.assert_array_equal(got["c"]["d"], obj["c"]["d"])
+    assert got["b"][1:] == ["x", 3]
+
+
+def test_channel_counts_bytes_and_doorbell():
+    ch = PCIeChannel(buf_size=1 << 16)
+    pkt = serialize({"x": np.arange(100)})
+    ch.push(pkt)
+    out = ch.pull()
+    assert out == pkt
+    assert ch.stats.packets == 1
+    assert ch.stats.bytes_moved == len(pkt)
+
+
+def test_rpc_error_propagation():
+    class Svc:
+        def boom(self):
+            raise ValueError("nope")
+
+        def ok(self, x):
+            return x + 1
+
+    client = RPCClient(RPCServer(Svc()))
+    assert client.call("ok", x=41) == 42
+    try:
+        client.call("boom")
+        assert False
+    except RuntimeError as e:
+        assert "nope" in str(e)

@@ -1,0 +1,61 @@
+"""Batch preprocessing: k-hop structure, reindexing invariants, padding."""
+import numpy as np
+
+from repro.store.blockdev import BlockDevice
+from repro.store.graphstore import GraphStore
+from repro.store.sampler import sample_batch, pad_batch
+
+
+def _store(seed=0, n=120, e=700):
+    rng = np.random.default_rng(seed)
+    edges = np.stack([rng.integers(0, n, e), rng.zipf(1.4, e) % n],
+                     axis=1).astype(np.int64)
+    emb = rng.standard_normal((n, 16)).astype(np.float32)
+    gs = GraphStore(BlockDevice(), h_threshold=8)
+    gs.update_graph(edges, emb)
+    return gs
+
+
+def test_block_structure_and_prefix_ordering():
+    gs = _store()
+    targets = [3, 7, 11]
+    b = sample_batch(gs, targets, [4, 3], rng=np.random.default_rng(0))
+    assert len(b.layers) == 2
+    # prefix invariant: first num_targets nodes ARE the targets
+    assert list(b.node_vids[:3]) == targets
+    # layer_L (last) has num_dst == num_targets
+    assert b.layers[-1].num_dst == 3
+    # indices within bounds of the deeper level
+    deeper = b.num_nodes
+    for blk in b.layers:
+        assert blk.nbr.max() < deeper
+        deeper = blk.num_dst  # next block indexes into this level
+
+    # all sampled neighbors really are neighbors in the store
+    lvl_nodes = b.node_vids
+    blk = b.layers[0]
+    for i in range(blk.num_dst):
+        v = int(lvl_nodes[i])
+        nbrs = set(int(x) for x in gs.get_neighbors(v))
+        for k in range(blk.nbr.shape[1]):
+            if blk.mask[i, k]:
+                assert int(lvl_nodes[blk.nbr[i, k]]) in nbrs
+
+
+def test_embedding_gather_matches_store():
+    gs = _store(1)
+    b = sample_batch(gs, [1, 2], [3, 3], rng=np.random.default_rng(1))
+    for i, v in enumerate(b.node_vids):
+        np.testing.assert_array_equal(b.embeddings[i], gs.get_embed(int(v)))
+
+
+def test_sampling_deterministic_and_padding():
+    gs = _store(2)
+    b1 = sample_batch(gs, [5, 6], [4, 4], rng=np.random.default_rng(7))
+    b2 = sample_batch(gs, [5, 6], [4, 4], rng=np.random.default_rng(7))
+    np.testing.assert_array_equal(b1.node_vids, b2.node_vids)
+    p = pad_batch(b1, 32)
+    assert p.num_nodes % 32 == 0
+    for blk in p.layers:
+        assert blk.nbr.shape[0] % 32 == 0
+    np.testing.assert_array_equal(p.node_vids[: b1.num_nodes], b1.node_vids)
