@@ -39,9 +39,12 @@ WORKLOADS = {
 POWER = {"gtx1060_system": 447.0, "rtx3090_system": 214.0,
          "cssd_system": 111.0, "cssd_fpga": 16.3}
 
-# simulated SSD page latencies (2 GB/s sequential-ish)
+# simulated SSD page latencies (2 GB/s sequential-ish) plus the fixed
+# per-command round-trip a 4 KB random NVMe access pays (~80 us) — batched
+# commands amortise the latter, which is the near-storage batching argument
 PAGE_READ_US = PAGE_BYTES / (2e9) * 1e6
 PAGE_WRITE_US = PAGE_BYTES / (1.2e9) * 1e6
+CMD_LATENCY_US = 80.0
 
 
 def make_workload(name: str, seed: int = 0):
@@ -57,7 +60,8 @@ def make_workload(name: str, seed: int = 0):
 def storage_device():
     return BlockDevice(1 << 14, simulate_latency=True,
                        page_read_us=PAGE_READ_US,
-                       page_write_us=PAGE_WRITE_US)
+                       page_write_us=PAGE_WRITE_US,
+                       command_latency_us=CMD_LATENCY_US)
 
 
 # --------------------------------------------------- host-stack baseline

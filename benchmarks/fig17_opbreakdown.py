@@ -29,8 +29,9 @@ def run(workload="physics", model="gcn"):
     lines = []
     for cfg in ("octa", "lsap", "hetero"):
         program_config(svc.xbuilder, cfg)
-        svc.engine.run(dfg, feeds)                  # warm
-        svc.engine.run(dfg, feeds)
+        # fuse=False: the decomposition needs the unfused per-op timings
+        svc.engine.run(dfg, feeds, fuse=False)      # warm
+        svc.engine.run(dfg, feeds, fuse=False)
         gemm_t = sum(dt for op, _, dt in svc.engine.timings
                      if op in GEMM_OPS)
         simd_t = sum(dt for op, _, dt in svc.engine.timings

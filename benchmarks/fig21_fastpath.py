@@ -1,0 +1,83 @@
+"""Fig. 21 (repo extension) — fast-path before/after microbenchmarks.
+
+Isolates each layer of the vectorized batch-preprocessing + fused-execution
+pipeline against its seed implementation on the same store:
+
+  * ``neighbors``  — per-vid ``get_neighbors`` loop vs ``get_neighbors_batch``
+  * ``embeds``     — row-wise ``get_embed`` loop vs coalesced ``get_embeds``
+  * ``sampler``    — ``sample_batch_ref`` vs the vectorized ``sample_batch``
+  * ``engine``     — eager per-node dispatch vs the whole-DFG jit with the
+                     fused aggregate-combine kernel (steady state, hetero)
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import common as C
+from repro.core import gnn
+from repro.kernels.ops import program_config
+from repro.store.sampler import sample_batch, sample_batch_ref
+
+
+def run(workload="youtube", smoke=False):
+    if smoke:
+        workload = "chmleon"
+    edges, emb, _ = C.make_workload(workload)
+    svc, _ = C.hgnn_service(edges, emb)
+    store = svc.store
+    rng = np.random.default_rng(0)
+    lines = []
+
+    # ---- neighbors: one batched request vs a per-vid page walk
+    b = sample_batch(store, rng.integers(0, emb.shape[0], 8), [10, 10],
+                     rng=np.random.default_rng(0))
+    vids = b.node_vids
+    t_loop, _ = C.timeit(
+        lambda: [store.get_neighbors(int(v)) for v in vids], repeat=5)
+    t_batch, _ = C.timeit(lambda: store.get_neighbors_batch(vids), repeat=5)
+    lines.append(C.csv_line(f"fig21.{workload}.neighbors_loop", t_loop, ""))
+    lines.append(C.csv_line(f"fig21.{workload}.neighbors_batch", t_batch,
+                            f"speedup={t_loop/t_batch:.1f}x"))
+
+    # ---- embeddings: row-wise page reads vs coalesced span reads
+    t_rows, _ = C.timeit(
+        lambda: np.stack([store.get_embed(int(v)) for v in vids]), repeat=5)
+    t_coal, _ = C.timeit(lambda: store.get_embeds(vids), repeat=5)
+    lines.append(C.csv_line(f"fig21.{workload}.embeds_rowwise", t_rows, ""))
+    lines.append(C.csv_line(f"fig21.{workload}.embeds_coalesced", t_coal,
+                            f"speedup={t_rows/t_coal:.1f}x"))
+
+    # ---- full sampler
+    targets = rng.integers(0, emb.shape[0], 8)
+    t_ref, _ = C.timeit(
+        lambda: sample_batch_ref(store, targets, [10, 10],
+                                 rng=np.random.default_rng(0), pad_to=32),
+        repeat=5)
+    t_vec, _ = C.timeit(
+        lambda: sample_batch(store, targets, [10, 10],
+                             rng=np.random.default_rng(0), pad_to=32),
+        repeat=5)
+    lines.append(C.csv_line(f"fig21.{workload}.sampler_ref", t_ref, ""))
+    lines.append(C.csv_line(f"fig21.{workload}.sampler_vec", t_vec,
+                            f"speedup={t_ref/t_vec:.1f}x"))
+
+    # ---- engine: eager per-node dispatch vs cached whole-DFG jit (+fusion)
+    program_config(svc.xbuilder, "hetero")
+    params = gnn.init_params("gcn", [emb.shape[1], 128, 64], seed=0)
+    dfg = gnn.BUILD_DFG["gcn"](2)
+    bb = sample_batch(store, targets, [10, 10],
+                      rng=np.random.default_rng(0), pad_to=64)
+    feeds = gnn.dfg_feeds(
+        "gcn", params, jnp.asarray(bb.embeddings),
+        [(jnp.asarray(x.nbr), jnp.asarray(x.mask)) for x in bb.layers])
+    svc.engine.run(dfg, feeds, jit=False, fuse=False)          # warm
+    t_eager, _ = C.timeit(
+        lambda: svc.engine.run(dfg, feeds, jit=False, fuse=False), repeat=5)
+    svc.engine.run(dfg, feeds, jit=True)                       # warm + trace
+    t_jit, _ = C.timeit(
+        lambda: svc.engine.run(dfg, feeds, jit=True), repeat=5)
+    lines.append(C.csv_line(f"fig21.{workload}.engine_eager", t_eager, ""))
+    lines.append(C.csv_line(f"fig21.{workload}.engine_jit_fused", t_jit,
+                            f"speedup={t_eager/t_jit:.1f}x"))
+    return lines

@@ -1,9 +1,11 @@
 """Benchmark harness — one module per paper table/figure.
 
-  PYTHONPATH=src:. python -m benchmarks.run [--only fig3,fig14,...]
+  PYTHONPATH=src:. python -m benchmarks.run [--only fig3,fig14,...] [--smoke]
 
-Prints ``name,us_per_call,derived`` CSV (scaffold contract).  The roofline
-table (LM archs) reads the dry-run artifacts; run
+Prints ``name,us_per_call,derived`` CSV (scaffold contract).  ``--smoke``
+runs a CI-sized subset (fig19 batch-prep + fig21 fast-path on the small
+workload) so sampler/engine perf regressions surface at PR time.  The
+roofline table (LM archs) reads the dry-run artifacts; run
 ``python -m repro.launch.dryrun --all --both-meshes`` first for §Roofline.
 """
 from __future__ import annotations
@@ -18,11 +20,14 @@ import traceback
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: fig19 + fig21 on the small workload")
     args = ap.parse_args(argv)
 
     from . import (fig3_breakdown, fig14_end2end, fig15_energy,
                    fig16_pure_inference, fig17_opbreakdown, fig18_bulk,
-                   fig19_batchprep, fig20_mutable, table5_datasets)
+                   fig19_batchprep, fig20_mutable, fig21_fastpath,
+                   table5_datasets)
     suites = {
         "table5": table5_datasets.run,
         "fig3": fig3_breakdown.run,
@@ -33,7 +38,13 @@ def main(argv=None) -> None:
         "fig18": fig18_bulk.run,
         "fig19": fig19_batchprep.run,
         "fig20": fig20_mutable.run,
+        "fig21": fig21_fastpath.run,
     }
+    if args.smoke:
+        suites = {
+            "fig19": lambda: fig19_batchprep.run(workloads=("chmleon",)),
+            "fig21": lambda: fig21_fastpath.run(smoke=True),
+        }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     failures = 0

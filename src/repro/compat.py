@@ -1,0 +1,39 @@
+"""jax version compatibility shims.
+
+The codebase targets the current jax API; these helpers keep it running on
+older installations (e.g. 0.4.x) where ``jax.shard_map`` still lives in
+``jax.experimental`` with the ``check_rep``/``auto`` spelling and
+``jax.tree.flatten_with_path`` is only in ``jax.tree_util``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check: bool = False):
+    """``jax.shard_map`` with graceful fallback to the experimental API.
+
+    ``axis_names`` is the set of mesh axes over which ``f`` is manual (the
+    new-API meaning); the remaining axes stay automatic.  ``check`` maps to
+    ``check_vma`` (new) / ``check_rep`` (old).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # the old partial-manual (``auto=``) path trips an XLA manual-subgroup
+    # check inside jit on some versions; run fully manual instead — the
+    # replicated in_specs keep the computation identical.
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)
+
+
+def tree_flatten_with_path(tree):
+    fn = getattr(jax.tree, "flatten_with_path", None)
+    if fn is None:                                   # pragma: no cover
+        fn = jax.tree_util.tree_flatten_with_path
+    return fn(tree)

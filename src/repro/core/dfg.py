@@ -35,10 +35,12 @@ class DFG:
         self._nodes: list[_Node] = []
         self._ins: list[str] = []
         self._outs: dict[str, str] = {}
+        self._markup_cache: str | None = None   # memoized save() output
 
     # ------------------------------------------------- paper creation API
     def create_in(self, name: str) -> Ref:
         self._ins.append(name)
+        self._markup_cache = None
         return Ref(name)
 
     def create_op(self, op: str, inputs: list[Ref], n_out: int = 1,
@@ -47,21 +49,27 @@ class DFG:
         outs = [f"{seq}_{i}" for i in range(n_out)]
         self._nodes.append(_Node(seq, op, [str(i) for i in inputs], outs,
                                  attrs or {}))
+        self._markup_cache = None
         return [Ref(o) for o in outs]
 
     def create_out(self, name: str, src: Ref) -> None:
         self._outs[name] = str(src)
+        self._markup_cache = None
 
     # ------------------------------------------------- markup (de)serialize
     def save(self) -> str:
-        """Markup file (paper Fig. 10c), JSON-encoded."""
-        return json.dumps({
-            "inputs": self._ins,
-            "nodes": [{"seq": n.seq, "op": n.op, "in": n.inputs,
-                       "out": n.outputs, "attrs": n.attrs}
-                      for n in self._nodes],
-            "outputs": self._outs,
-        })
+        """Markup file (paper Fig. 10c), JSON-encoded.  Memoized: the jit
+        engine keys its trace cache on this string every call, and a
+        round-tripped DFG already holds its own markup."""
+        if self._markup_cache is None:
+            self._markup_cache = json.dumps({
+                "inputs": self._ins,
+                "nodes": [{"seq": n.seq, "op": n.op, "in": n.inputs,
+                           "out": n.outputs, "attrs": n.attrs}
+                          for n in self._nodes],
+                "outputs": self._outs,
+            })
+        return self._markup_cache
 
     @classmethod
     def load(cls, markup: str) -> "DFG":
@@ -71,6 +79,7 @@ class DFG:
         dfg._nodes = [_Node(n["seq"], n["op"], list(n["in"]), list(n["out"]),
                             dict(n.get("attrs", {}))) for n in obj["nodes"]]
         dfg._outs = dict(obj["outputs"])
+        dfg._markup_cache = markup
         return dfg
 
     # ------------------------------------------------- topological order
@@ -94,35 +103,179 @@ class DFG:
         return order
 
 
+# GCN layer chain folded into the fused aggregate-combine C-operation:
+# SpMM_Mean -> GEMM -> BiasAdd -> ReLU   =>   AggCombine(h, nbr, mask, w, b)
+_FUSE_CHAIN = ("SpMM_Mean", "GEMM", "BiasAdd", "ReLU")
+_FUSED_OP = "AggCombine"
+
+
+def fuse_aggregate_combine(nodes: list[_Node],
+                           protected: set[str]) -> list[_Node]:
+    """Rewrite SpMM_Mean->GEMM->BiasAdd->ReLU chains into AggCombine nodes.
+
+    A chain fuses only when every intermediate value has exactly one
+    consumer and is not a DFG output (``protected``).  The fused node is
+    placed at the ReLU's position, where all five inputs are available.
+    """
+    uses: dict[str, int] = {}
+    consumer: dict[str, _Node] = {}
+    for n in nodes:
+        for i in n.inputs:
+            uses[i] = uses.get(i, 0) + 1
+            consumer[i] = n
+    for r in protected:
+        uses[r] = uses.get(r, 0) + 2        # never fuse across an output
+
+    drop: set[int] = set()
+    replace: dict[int, _Node] = {}          # seq of ReLU node -> fused node
+    for n in nodes:
+        if n.op != _FUSE_CHAIN[0] or n.seq in drop:
+            continue
+        chain = [n]
+        ok = True
+        for want in _FUSE_CHAIN[1:]:
+            ref = chain[-1].outputs[0]
+            nxt = consumer.get(ref)
+            if (len(chain[-1].outputs) != 1 or uses.get(ref) != 1
+                    or nxt is None or nxt.op != want or nxt.inputs[0] != ref):
+                ok = False
+                break
+            chain.append(nxt)
+        if not ok:
+            continue
+        spmm_n, gemm_n, bias_n, relu_n = chain
+        fused = _Node(relu_n.seq, _FUSED_OP,
+                      list(spmm_n.inputs) + [gemm_n.inputs[1],
+                                             bias_n.inputs[1]],
+                      list(relu_n.outputs), {})
+        drop.update(x.seq for x in (spmm_n, gemm_n, bias_n))
+        replace[relu_n.seq] = fused
+
+    if not replace:
+        return nodes
+    return [replace.get(n.seq, n) for n in nodes if n.seq not in drop]
+
+
 class Engine:
-    """GraphRunner execution engine: dynamic binding + per-node execution."""
+    """GraphRunner execution engine: dynamic binding + per-node execution.
+
+    Two execution paths share the dynamic-binding semantics:
+
+      * **eager** (default): resolve + dispatch node by node, with honest
+        per-node timings (``self.timings``);
+      * **jit** (``run(..., jit=True)``): the maximal jit-safe suffix of the
+        DFG is traced *once* through the currently-bound C-kernels and
+        compiled as a single XLA program, cached per (markup, registry
+        version, input shapes/dtypes).  Stateful C-operations (registered
+        with ``jittable=False``, e.g. the near-storage BatchPre) run eagerly
+        in front of the traced suffix.  Re-programming User logic bumps the
+        registry version and invalidates stale traces.
+
+    Both paths first apply the aggregate-combine fusion pass whenever a
+    fused ``AggCombine`` C-kernel is resolvable (``fuse=None`` -> auto).
+    """
 
     def __init__(self, registry: KernelRegistry):
         self.registry = registry
         self.trace: list[tuple[str, str]] = []     # (op, device) per executed node
         self.timings: list[tuple[str, str, float]] = []
+        self._jit_cache: dict = {}
 
-    def run(self, dfg: DFG, feeds: dict[str, Any]) -> dict[str, Any]:
-        import time as _time
+    def run(self, dfg: DFG, feeds: dict[str, Any], *, jit: bool = False,
+            fuse: bool | None = None) -> dict[str, Any]:
         env: dict[str, Any] = dict(feeds)
         missing = [i for i in dfg._ins if i not in env]
         if missing:
             raise KeyError(f"missing DFG inputs: {missing}")
+        order = dfg.topo_nodes()
+        if fuse is None:
+            fuse = _FUSED_OP in self.registry.ops
+        if fuse:
+            order = fuse_aggregate_combine(order, set(dfg._outs.values()))
         self.trace = []
         self.timings = []
-        for node in dfg.topo_nodes():
-            device, fn = self.registry.resolve(node.op)
-            self.trace.append((node.op, device))
-            args = [env[i] for i in node.inputs]
-            t0 = _time.perf_counter()
-            out = fn(*args, **node.attrs) if node.attrs else fn(*args)
-            out = _block(out)
-            self.timings.append((node.op, device, _time.perf_counter() - t0))
-            if len(node.outputs) == 1:
-                env[node.outputs[0]] = out
-            else:
-                for ref, val in zip(node.outputs, out):
-                    env[ref] = val
+        if jit:
+            return self._run_jit(dfg, order, env, fuse)
+        for node in order:
+            self._exec_node(node, env)
+        return {name: env[src] for name, src in dfg._outs.items()}
+
+    # ------------------------------------------------------------ eager path
+    def _exec_node(self, node: _Node, env: dict[str, Any]) -> None:
+        import time as _time
+        device, fn = self.registry.resolve(node.op)
+        self.trace.append((node.op, device))
+        args = [env[i] for i in node.inputs]
+        t0 = _time.perf_counter()
+        out = fn(*args, **node.attrs) if node.attrs else fn(*args)
+        out = _block(out)
+        self.timings.append((node.op, device, _time.perf_counter() - t0))
+        if len(node.outputs) == 1:
+            env[node.outputs[0]] = out
+        else:
+            for ref, val in zip(node.outputs, out):
+                env[ref] = val
+
+    # -------------------------------------------------------------- jit path
+    def _run_jit(self, dfg: DFG, order: list[_Node], env: dict[str, Any],
+                 fuse: bool) -> dict[str, Any]:
+        import time as _time
+        # eager prefix: through the last jit-unsafe (stateful) node
+        cut = 0
+        for idx, node in enumerate(order):
+            if node.op in self.registry.unjittable:
+                cut = idx + 1
+        for node in order[:cut]:
+            self._exec_node(node, env)
+        suffix = order[cut:]
+        if not suffix:
+            return {name: env[src] for name, src in dfg._outs.items()}
+
+        produced: set[str] = set()
+        for n in suffix:
+            produced.update(n.outputs)
+        in_refs = sorted({i for n in suffix for i in n.inputs
+                          if i not in produced})
+        suffix_outs = [src for src in dict.fromkeys(dfg._outs.values())
+                       if src in produced]
+        arr_refs, sig, static_env = [], [], {}
+        for r in in_refs:
+            v = env[r]
+            if hasattr(v, "shape") and hasattr(v, "dtype"):
+                arr_refs.append(r)
+                sig.append((r, tuple(v.shape), str(v.dtype)))
+            else:                       # non-array feeds are trace constants
+                static_env[r] = v
+                sig.append((r, "static", repr(v)))
+        key = (dfg.save(), self.registry.version, fuse, tuple(sig),
+               tuple(suffix_outs))
+        hit = self._jit_cache.get(key)
+        if hit is None:
+            resolved = [self.registry.resolve(n.op) for n in suffix]
+            trace = [(n.op, d) for n, (d, _) in zip(suffix, resolved)]
+
+            def _program(*vals):
+                e = dict(static_env)
+                e.update(zip(arr_refs, vals))
+                for node, (_, fn) in zip(suffix, resolved):
+                    args = [e[i] for i in node.inputs]
+                    out = fn(*args, **node.attrs) if node.attrs else fn(*args)
+                    if len(node.outputs) == 1:
+                        e[node.outputs[0]] = out
+                    else:
+                        for ref, val in zip(node.outputs, out):
+                            e[ref] = val
+                return tuple(e[r] for r in suffix_outs)
+
+            import jax
+            hit = (jax.jit(_program), trace)
+            self._jit_cache[key] = hit
+        fn, trace = hit
+        self.trace.extend(trace)
+        t0 = _time.perf_counter()
+        results = _block(fn(*(env[r] for r in arr_refs)))
+        self.timings.append(("__dfg_jit__", "jit", _time.perf_counter() - t0))
+        env.update(zip(suffix_outs, results))
         return {name: env[src] for name, src in dfg._outs.items()}
 
 

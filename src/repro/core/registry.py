@@ -22,18 +22,29 @@ from typing import Callable
 class KernelRegistry:
     devices: dict[str, int] = field(default_factory=dict)
     ops: dict[str, list[tuple[str, Callable]]] = field(default_factory=dict)
+    unjittable: set[str] = field(default_factory=set)
+    # monotonically bumped on every (un)registration — the engine's whole-DFG
+    # jit cache keys on it so reprogramming invalidates stale traces.
+    version: int = 0
 
     # -- paper: RegisterDevice(newDevice)
     def register_device(self, name: str, priority: int) -> None:
         self.devices[name] = int(priority)
+        self.version += 1
 
     # -- paper: RegisterOpDefinition(newOp)
-    def register_op(self, op_name: str, device: str, fn: Callable) -> None:
+    def register_op(self, op_name: str, device: str, fn: Callable, *,
+                    jittable: bool = True) -> None:
         if device not in self.devices:
             raise KeyError(f"device {device!r} not registered")
         lst = self.ops.setdefault(op_name, [])
         lst[:] = [(d, f) for (d, f) in lst if d != device]   # re-registration wins
         lst.append((device, fn))
+        if not jittable:
+            self.unjittable.add(op_name)
+        else:
+            self.unjittable.discard(op_name)                 # re-registration wins
+        self.version += 1
 
     def unregister_device(self, device: str) -> None:
         """Drop a device and all its kernels (XBuilder partial reconfig)."""
@@ -42,6 +53,8 @@ class KernelRegistry:
             self.ops[name] = [(d, f) for (d, f) in self.ops[name] if d != device]
             if not self.ops[name]:
                 del self.ops[name]
+                self.unjittable.discard(name)
+        self.version += 1
 
     def resolve(self, op_name: str) -> tuple[str, Callable]:
         cands = self.ops.get(op_name)

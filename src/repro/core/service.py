@@ -74,16 +74,23 @@ class HolisticGNNService:
                 outs.append(jnp.asarray(blk.nbr))
                 outs.append(jnp.asarray(blk.mask))
             return tuple(outs)
-        self.registry.register_op("BatchPre", SHELL_DEVICE, batch_pre)
+        # stateful (touches the page store): must run eagerly ahead of the
+        # engine's whole-DFG jit trace.
+        self.registry.register_op("BatchPre", SHELL_DEVICE, batch_pre,
+                                  jittable=False)
 
     def run(self, dfg: str, batch, weights: dict | None = None,
-            fanouts=None, seed: int = 0):
+            fanouts=None, seed: int = 0, jit: bool = True):
         """Paper Run(DFG, batch).
 
         * If the DFG starts with a ``BatchPre`` node (service-style DFG),
           only the raw target VIDs are fed; sampling happens near storage.
         * Otherwise (model-only DFG, Fig. 10b) the service samples first and
           feeds H/nbr/mask inputs directly.
+
+        ``jit=True`` (default) runs the model portion through the engine's
+        cached whole-DFG trace; the sampler's ``pad_to`` bucketing keeps the
+        number of distinct shape signatures (and hence compiles) small.
         """
         dfg_obj = DFG.load(dfg) if isinstance(dfg, str) else dfg
         feeds = dict(weights or {})
@@ -97,7 +104,7 @@ class HolisticGNNService:
             for l, blk in enumerate(b.layers):
                 feeds[f"nbr{l}"] = jnp.asarray(blk.nbr)
                 feeds[f"mask{l}"] = jnp.asarray(blk.mask)
-        out = self.engine.run(dfg_obj, feeds)
+        out = self.engine.run(dfg_obj, feeds, jit=jit)
         return {k: np.asarray(v) for k, v in out.items()}
 
     def plugin(self, shared_lib: str):

@@ -1,6 +1,8 @@
 from . import ref
-from .ops import (gemm, spmm, sddmm, rmsnorm, flash_attention,
-                  decode_attention, set_interpret, BITSTREAMS, program_config)
+from .ops import (gemm, spmm, sddmm, rmsnorm, agg_combine, flash_attention,
+                  decode_attention, set_interpret, get_interpret,
+                  BITSTREAMS, program_config)
 
-__all__ = ["ref", "gemm", "spmm", "sddmm", "rmsnorm", "flash_attention",
-           "decode_attention", "set_interpret", "BITSTREAMS", "program_config"]
+__all__ = ["ref", "gemm", "spmm", "sddmm", "rmsnorm", "agg_combine",
+           "flash_attention", "decode_attention", "set_interpret",
+           "get_interpret", "BITSTREAMS", "program_config"]

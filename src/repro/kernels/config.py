@@ -1,0 +1,33 @@
+"""Global Pallas execution-mode switch.
+
+Every kernel wrapper defaults ``interpret=None`` and resolves it here, so a
+single ``set_interpret(False)`` flips the whole kernel library to native TPU
+compilation — direct callers no longer bypass the toggle by picking up a
+hardcoded per-kernel default.  Resolution happens *outside* the jitted
+wrappers: ``interpret`` is a static argument, so the resolved boolean (not
+``None``) must be what reaches the jit cache key.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases; resolve
+# whichever this installation provides so kernels work on both.
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+_INTERPRET = True
+
+
+def set_interpret(flag: bool) -> None:
+    """Global toggle: False on real TPU."""
+    global _INTERPRET
+    _INTERPRET = bool(flag)
+
+
+def get_interpret() -> bool:
+    return _INTERPRET
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return _INTERPRET if interpret is None else bool(interpret)

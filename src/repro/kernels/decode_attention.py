@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .config import CompilerParams, resolve_interpret
+
 _LANES = 128
 NEG_INF = -1e30
 
@@ -66,11 +68,18 @@ def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                        jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                      page_table: jax.Array, lengths: jax.Array, *,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool | None = None) -> jax.Array:
     """q (B,Hq,D); pages (P,ps,Hkv,D); page_table (B,PP); lengths (B,)."""
+    return _decode_attention(q, k_pages, v_pages, page_table, lengths,
+                             interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                      page_table: jax.Array, lengths: jax.Array, *,
+                      interpret: bool) -> jax.Array:
     b, hq, d = q.shape
     p_num, ps, hkv, _ = k_pages.shape
     pp = page_table.shape[1]
@@ -100,7 +109,7 @@ def decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(page_table, lengths, qg, k_pages, v_pages)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .config import CompilerParams, resolve_interpret
+
 _LANES = 128
 NEG_INF = -1e30
 
@@ -66,11 +68,18 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, bq: int = 128, bk: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """q (B,Hq,T,D); k,v (B,Hkv,S,D) with Hq % Hkv == 0 -> (B,Hq,T,D)."""
+    return _flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def _flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool, bq: int, bk: int,
+                     interpret: bool) -> jax.Array:
     b, hq, t, d = q.shape
     hkv, s_len = k.shape[1], k.shape[2]
     if hq != hkv:                                     # GQA: broadcast KV heads
@@ -102,7 +111,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, _LANES), jnp.float32),
             pltpu.VMEM((bq, _LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .config import CompilerParams, resolve_interpret
+
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
     k = pl.program_id(2)
@@ -40,10 +42,16 @@ def _pad_to(x, m, axis):
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def gemm(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
-         bk: int = 128, interpret: bool = True) -> jax.Array:
+         bk: int = 128, interpret: bool | None = None) -> jax.Array:
     """a (M,K) @ b (K,N) -> (M,N) in a's dtype (fp32 accumulate)."""
+    return _gemm(a, b, bm=bm, bn=bn, bk=bk,
+                 interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _gemm(a: jax.Array, b: jax.Array, *, bm: int, bn: int, bk: int,
+          interpret: bool) -> jax.Array:
     m, k = a.shape
     k2, n = b.shape
     assert k == k2
@@ -62,7 +70,7 @@ def gemm(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(ap, bp)

@@ -24,24 +24,18 @@ import jax
 import jax.numpy as jnp
 
 from ..core.xbuilder import Bitstream
+from .config import set_interpret, get_interpret
 from .gemm import gemm
 from .spmm import spmm
 from .sddmm import sddmm
 from .rmsnorm import rmsnorm
+from .agg_combine import agg_combine
 from .flash_attention import flash_attention
 from .decode_attention import decode_attention
 
-_INTERPRET = True
-
-
-def set_interpret(flag: bool) -> None:
-    """Global toggle: False on real TPU."""
-    global _INTERPRET
-    _INTERPRET = flag
-
 
 def _i():
-    return _INTERPRET
+    return get_interpret()
 
 
 # ----------------------------------------------------------- dense fallbacks
@@ -73,7 +67,7 @@ def octa_bitstream() -> Bitstream:
 
 def lsap_bitstream() -> Bitstream:
     return Bitstream(device="systolic", priority=300, kernels={
-        "GEMM": lambda a, b: gemm(a, b, interpret=_i()),
+        "GEMM": lambda a, b: gemm(a, b),
         "SpMM": functools.partial(_spmm_via_gemm),
         "SpMM_Mean": lambda h, n, m: _spmm_via_gemm(h, n, m, mode="mean"),
         "SpMM_Sum": lambda h, n, m: _spmm_via_gemm(h, n, m, mode="sum"),
@@ -83,12 +77,15 @@ def lsap_bitstream() -> Bitstream:
 
 def hetero_bitstream() -> Bitstream:
     bs = Bitstream(device="vector", priority=150, kernels={
-        "SpMM": lambda h, n, m, mode="mean": spmm(h, n, m, mode=mode,
-                                                  interpret=_i()),
-        "SpMM_Mean": lambda h, n, m: spmm(h, n, m, mode="mean", interpret=_i()),
-        "SpMM_Sum": lambda h, n, m: spmm(h, n, m, mode="sum", interpret=_i()),
-        "SDDMM": lambda h, n, m: sddmm(h, n, m, interpret=_i()),
-        "RMSNorm": lambda x, w: rmsnorm(x, w, interpret=_i()),
+        "SpMM": lambda h, n, m, mode="mean": spmm(h, n, m, mode=mode),
+        "SpMM_Mean": lambda h, n, m: spmm(h, n, m, mode="mean"),
+        "SpMM_Sum": lambda h, n, m: spmm(h, n, m, mode="sum"),
+        "SDDMM": lambda h, n, m: sddmm(h, n, m),
+        "RMSNorm": lambda x, w: rmsnorm(x, w),
+        # fused aggregate-combine: one whole GCN layer per kernel launch —
+        # the engine's fusion pass targets this C-operation when present.
+        "AggCombine": lambda h, n, m, w, b: agg_combine(h, n, m, w, b,
+                                                        mode="mean"),
     })
     return bs
 
@@ -96,7 +93,7 @@ def hetero_bitstream() -> Bitstream:
 def hetero_gemm_bitstream() -> Bitstream:
     """The systolic half of Hetero (program both this and hetero_bitstream)."""
     return Bitstream(device="systolic", priority=300, kernels={
-        "GEMM": lambda a, b: gemm(a, b, interpret=_i()),
+        "GEMM": lambda a, b: gemm(a, b),
     })
 
 
@@ -117,7 +114,8 @@ def program_config(xbuilder, name: str) -> float:
     return total
 
 
-__all__ = ["gemm", "spmm", "sddmm", "rmsnorm", "flash_attention",
-           "decode_attention", "set_interpret", "BITSTREAMS",
-           "program_config", "octa_bitstream", "lsap_bitstream",
-           "hetero_bitstream", "hetero_gemm_bitstream"]
+__all__ = ["gemm", "spmm", "sddmm", "rmsnorm", "agg_combine",
+           "flash_attention", "decode_attention", "set_interpret",
+           "get_interpret", "BITSTREAMS", "program_config",
+           "octa_bitstream", "lsap_bitstream", "hetero_bitstream",
+           "hetero_gemm_bitstream"]

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .config import CompilerParams, resolve_interpret
+
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -15,9 +17,15 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
     o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * w_ref[...]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "br", "interpret"))
 def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6, br: int = 256,
-            interpret: bool = True) -> jax.Array:
+            interpret: bool | None = None) -> jax.Array:
+    return _rmsnorm(x, w, eps=eps, br=br,
+                    interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "br", "interpret"))
+def _rmsnorm(x: jax.Array, w: jax.Array, *, eps: float, br: int,
+             interpret: bool) -> jax.Array:
     orig_shape = x.shape
     f = orig_shape[-1]
     x2 = x.reshape(-1, f)
@@ -34,7 +42,7 @@ def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6, br: int = 256,
         ],
         out_specs=pl.BlockSpec((br, f), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((bp, f), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(xp, w)

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .config import CompilerParams, resolve_interpret
+
 
 def _sddmm_kernel(h_ref, nbr_ref, mask_ref, o_ref):
     nbr = nbr_ref[...]
@@ -24,9 +26,15 @@ def _sddmm_kernel(h_ref, nbr_ref, mask_ref, o_ref):
     o_ref[...] = (g * dst[:, None, :] * mask[..., None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bd", "bf", "interpret"))
 def sddmm(h: jax.Array, nbr: jax.Array, mask: jax.Array, *, bd: int = 64,
-          bf: int = 128, interpret: bool = True) -> jax.Array:
+          bf: int = 128, interpret: bool | None = None) -> jax.Array:
+    return _sddmm(h, nbr, mask, bd=bd, bf=bf,
+                  interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "bf", "interpret"))
+def _sddmm(h: jax.Array, nbr: jax.Array, mask: jax.Array, *, bd: int,
+           bf: int, interpret: bool) -> jax.Array:
     n, f = h.shape
     d, k = nbr.shape
     bd = min(bd, max(8, d))
@@ -48,7 +56,7 @@ def sddmm(h: jax.Array, nbr: jax.Array, mask: jax.Array, *, bd: int = 64,
         ],
         out_specs=pl.BlockSpec((bd, k, bf), lambda i, j: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((dp, k, fp), h.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(hp, nbrp, maskp)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .config import CompilerParams, resolve_interpret
+
 
 def _spmm_kernel(h_ref, nbr_ref, mask_ref, o_ref, *, mode: str):
     nbr = nbr_ref[...]                    # (bd, K) int32
@@ -32,9 +34,16 @@ def _spmm_kernel(h_ref, nbr_ref, mask_ref, o_ref, *, mode: str):
     o_ref[...] = s.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "bd", "bf", "interpret"))
 def spmm(h: jax.Array, nbr: jax.Array, mask: jax.Array, *, mode: str = "mean",
-         bd: int = 128, bf: int = 128, interpret: bool = True) -> jax.Array:
+         bd: int = 128, bf: int = 128,
+         interpret: bool | None = None) -> jax.Array:
+    return _spmm(h, nbr, mask, mode=mode, bd=bd, bf=bf,
+                 interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bd", "bf", "interpret"))
+def _spmm(h: jax.Array, nbr: jax.Array, mask: jax.Array, *, mode: str,
+          bd: int, bf: int, interpret: bool) -> jax.Array:
     n, f = h.shape
     d, k = nbr.shape
     bd = min(bd, max(8, d))
@@ -54,7 +63,7 @@ def spmm(h: jax.Array, nbr: jax.Array, mask: jax.Array, *, mode: str = "mean",
         ],
         out_specs=pl.BlockSpec((bd, bf), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((dp, fp), h.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(hp, nbrp, maskp)

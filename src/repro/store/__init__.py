@@ -1,7 +1,8 @@
 from .blockdev import BlockDevice, PAGE_BYTES, SLOTS_PER_PAGE
 from .graphstore import GraphStore, preprocess_edges
-from .sampler import sample_batch, pad_batch, SampledBatch, LayerBlock
+from .sampler import (sample_batch, sample_batch_ref, pad_batch,
+                      SampledBatch, LayerBlock)
 
 __all__ = ["BlockDevice", "PAGE_BYTES", "SLOTS_PER_PAGE", "GraphStore",
-           "preprocess_edges", "sample_batch", "pad_batch", "SampledBatch",
-           "LayerBlock"]
+           "preprocess_edges", "sample_batch", "sample_batch_ref",
+           "pad_batch", "SampledBatch", "LayerBlock"]

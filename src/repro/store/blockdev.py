@@ -62,7 +62,8 @@ class BlockDevice:
     """
 
     def __init__(self, num_pages: int = 1 << 14, *, simulate_latency: bool = False,
-                 page_read_us: float = 0.0, page_write_us: float = 0.0):
+                 page_read_us: float = 0.0, page_write_us: float = 0.0,
+                 command_latency_us: float = 0.0):
         self._pages = np.zeros((num_pages, SLOTS_PER_PAGE), dtype=SLOT_DTYPE)
         self._front = 0                 # next free LPN in neighbor space
         self._back = num_pages          # one past last used LPN in embedding space
@@ -73,6 +74,13 @@ class BlockDevice:
         self.simulate_latency = simulate_latency
         self.page_read_us = page_read_us
         self.page_write_us = page_write_us
+        # fixed per-command round-trip (NVMe submission/completion + flash
+        # access setup): the cost that BATCHED commands amortise — one
+        # read_pages(n) pays it once, n read_page calls pay it n times.
+        self.command_latency_us = command_latency_us
+        # internal flash channels: a single queued multi-page command streams
+        # from all channels at once; serial single-page commands cannot.
+        self.channels = 8
 
     # ------------------------------------------------------------------ alloc
     @property
@@ -121,11 +129,19 @@ class BlockDevice:
     # -------------------------------------------------------------------- i/o
     def _maybe_sleep(self, us: float):
         if self.simulate_latency and us > 0:
-            time.sleep(us * 1e-6)
+            if us >= 1000.0:
+                time.sleep(us * 1e-6)
+            else:
+                # sub-millisecond waits: spin on the monotonic clock —
+                # time.sleep() has a multi-10µs scheduler floor that would
+                # swamp the simulated page latency with host noise.
+                end = time.perf_counter() + us * 1e-6
+                while time.perf_counter() < end:
+                    pass
 
     def write_page(self, lpn: int, data: np.ndarray, *, tag: str = "graph") -> None:
         assert data.dtype == SLOT_DTYPE and data.shape == (SLOTS_PER_PAGE,)
-        self._maybe_sleep(self.page_write_us)
+        self._maybe_sleep(self.command_latency_us + self.page_write_us)
         self._pages[lpn] = data
         self.stats.record("write", lpn, PAGE_BYTES, tag, self._t0)
 
@@ -136,7 +152,8 @@ class BlockDevice:
         would dwarf the simulated DMA itself.
         """
         n_pages = -(-flat.size // SLOTS_PER_PAGE)
-        self._maybe_sleep(self.page_write_us * n_pages)
+        self._maybe_sleep(self.command_latency_us
+                          + self.page_write_us * n_pages / self.channels)
         full = flat.size // SLOTS_PER_PAGE
         if full:
             self._pages[lpn0: lpn0 + full] = \
@@ -152,12 +169,32 @@ class BlockDevice:
             n_pages * PAGE_BYTES, tag))
 
     def read_page(self, lpn: int, *, tag: str = "graph") -> np.ndarray:
-        self._maybe_sleep(self.page_read_us)
+        self._maybe_sleep(self.command_latency_us + self.page_read_us)
         self.stats.record("read", lpn, PAGE_BYTES, tag, self._t0)
         return self._pages[lpn]
 
+    def read_pages(self, lpns, *, tag: str = "graph") -> np.ndarray:
+        """Batched scattered-page read -> (len(lpns), SLOTS_PER_PAGE).
+
+        One queued command for the whole set (NVMe queue-depth behaviour):
+        the simulated latency is still per-page (``n * page_read_us``) but
+        the submission overhead is paid once — this is what makes the
+        near-storage batch engines (GetNeighbors/GetEmbed) fast, versus one
+        ``read_page`` round-trip per page.
+        """
+        lpns = np.asarray(lpns, dtype=np.int64)
+        self._maybe_sleep(self.command_latency_us
+                          + self.page_read_us * len(lpns) / self.channels)
+        self.stats.read_pages += len(lpns)
+        self.stats.read_bytes += len(lpns) * PAGE_BYTES
+        self.stats.events.append(IOEvent(
+            time.perf_counter() - self._t0, "read",
+            int(lpns[0]) if len(lpns) else 0, len(lpns) * PAGE_BYTES, tag))
+        return self._pages[lpns]
+
     def read_span(self, lpn0: int, n_pages: int, *, tag: str = "embed") -> np.ndarray:
-        self._maybe_sleep(self.page_read_us * n_pages)
+        self._maybe_sleep(self.command_latency_us
+                          + self.page_read_us * n_pages / self.channels)
         self.stats.read_pages += n_pages
         self.stats.read_bytes += n_pages * PAGE_BYTES
         self.stats.events.append(IOEvent(

@@ -32,6 +32,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .blockdev import BlockDevice, SLOTS_PER_PAGE, SLOT_DTYPE
+from .sampler import _ramp
 
 # H-type page layout
 _H_COUNT, _H_NEXT, _H_DATA = 0, 1, 2
@@ -77,6 +78,10 @@ class GraphStore:
         self.h_threshold = int(h_threshold)
         self.gmap: dict[int, str] = {}                 # vid -> 'H' | 'L'
         self.h_table: dict[int, tuple[int, int]] = {}  # vid -> (head_lpn, tail_lpn)
+        # full chain LPN list per H vid (device-DRAM mapping metadata, like
+        # the tail pointer): lets batched GetNeighbors fetch whole chains in
+        # one queued read instead of one pointer-chase round per page.
+        self.h_chain: dict[int, list[int]] = {}
         self._l_keys: list[int] = []                   # sorted max-vid per L page
         self._l_lpns: list[int] = []                   # parallel LPN list
         self.feature_dim = int(feature_dim)
@@ -210,24 +215,7 @@ class GraphStore:
         for vid in h_vids:
             nbrs = indices[indptr[vid]: indptr[vid + 1]]
             self.gmap[int(vid)] = "H"
-            head = tail = -1
-            for c0 in range(0, len(nbrs), H_CAP):
-                chunk = nbrs[c0: c0 + H_CAP]
-                lpn = self.dev.alloc_front()
-                page = np.zeros(SLOTS_PER_PAGE, dtype=SLOT_DTYPE)
-                page[_H_COUNT] = len(chunk)
-                page[_H_NEXT] = -1
-                page[_H_DATA: _H_DATA + len(chunk)] = chunk
-                self.dev.write_page(lpn, page)
-                self.stats.pages_h += 1
-                if head < 0:
-                    head = lpn
-                else:
-                    prev = self.dev.read_page(tail).copy()
-                    prev[_H_NEXT] = lpn
-                    self.dev.write_page(tail, prev)
-                tail = lpn
-            self.h_table[int(vid)] = (head, tail)
+            self._write_h_chain(int(vid), nbrs)
 
         # ---- L-type: greedy packing in ascending VID order (cumsum splits)
         if len(l_vids):
@@ -282,6 +270,230 @@ class GraphStore:
             _, start, ln = found
             return page[start: start + ln].copy()
 
+    def _fetch_plan(self, vids_arr: np.ndarray):
+        """Shared front half of the batched near-storage queries.
+
+        Plans the whole request from the in-DRAM mapping tables (L range
+        table + H chain lists), fetches every needed page with a single
+        queued scatter-read, and locates each vid's data:
+
+        Returns ``(block, desc)`` with ``desc[i]`` one of
+          * ``None``                       — unknown vid,
+          * ``("L", row, start, end)``     — chunk slice of ``block[row]``,
+          * ``("H", rows, counts)``        — chain page rows + chunk counts.
+        """
+        h_items: list[tuple[int, int]] = []     # (position, vid)
+        l_pos: list[int] = []
+        l_vids: list[int] = []
+        desc: list = [None] * len(vids_arr)
+        for pos, v in enumerate(vids_arr.tolist()):
+            kind = self.gmap.get(v)
+            if kind == "H":
+                h_items.append((pos, v))
+            elif kind == "L":
+                l_pos.append(pos)
+                l_vids.append(v)
+
+        keys = np.asarray(self._l_keys, dtype=np.int64)
+        lq = np.asarray(l_vids, dtype=np.int64)
+        k = np.searchsorted(keys, lq)           # first key >= vid
+        miss = k == len(keys)
+        l_lpns = sorted({self._l_lpns[ki] for ki in k[~miss].tolist()})
+        h_lpns = sorted({lpn for _, vid in h_items
+                         for lpn in self.h_chain[vid]})
+
+        lpns = l_lpns + h_lpns                  # ONE queued scatter-read
+        if not lpns:
+            return None, desc
+        block = self.dev.read_pages(lpns)
+        row_of = {lpn: i for i, lpn in enumerate(lpns)}
+
+        if len(lq):
+            self._l_locate_batch(block, row_of, l_pos, lq, k, miss, desc)
+        for pos, vid in h_items:
+            rows = np.array([row_of[lpn] for lpn in self.h_chain[vid]],
+                            dtype=np.int64)
+            desc[pos] = ("H", rows, block[rows, _H_COUNT].astype(np.int64))
+        return block, desc
+
+    def get_neighbors_batch(self, vids) -> list[np.ndarray]:
+        """Batched GetNeighbors — the near-storage fast path.
+
+        One scatter-read serves the whole request (vs one page walk per
+        VID): L-type vids share their owning pages' single vectorized meta
+        scan, H-type chains are materialised straight from the fetched
+        block — the batched-DMA behaviour of the FPGA's hardware
+        GetNeighbors engine.
+
+        Returns a list of neighbor arrays aligned with ``vids`` (empty array
+        for unknown VIDs), each equal to ``get_neighbors(vid)``.
+        """
+        with self._lock:
+            vids_arr = np.asarray(vids, dtype=np.int64).reshape(-1)
+            block, desc = self._fetch_plan(vids_arr)
+            out: list = [None] * len(vids_arr)
+            for pos, d in enumerate(desc):
+                if d is None:
+                    out[pos] = np.empty(0, dtype=SLOT_DTYPE)
+                elif d[0] == "L":
+                    _, row, start, end = d
+                    out[pos] = block[row, start:end].copy()
+                else:
+                    _, rows, counts = d
+                    got = [block[r, _H_DATA: _H_DATA + int(c)]
+                           for r, c in zip(rows, counts)]
+                    out[pos] = (np.concatenate(got) if got
+                                else np.empty(0, dtype=SLOT_DTYPE))
+            return out
+
+    def sample_neighbors_batch(self, vids, fanout: int,
+                               rng: np.random.Generator):
+        """Fused near-storage GetNeighbors + fanout subsampling (B-1 half).
+
+        The decisive hub optimisation: a power-law hub with a 30K-neighbor
+        chain is *sampled by index* (Floyd, O(fanout)) against the chain's
+        page counts, so only the selected slots are ever touched — the full
+        neighbor list is never materialised.  Uniform draws are consumed in
+        vid order, one ``fanout`` block per over-full vertex, identical to
+        the reference sampler's per-vertex stream.
+
+        Returns ``(sel, lens)``: selected neighbors flattened row-major and
+        per-vid selection lengths (empty/unknown vids yield a self-loop).
+        """
+        with self._lock:
+            vids_arr = np.asarray(vids, dtype=np.int64).reshape(-1)
+            block, desc = self._fetch_plan(vids_arr)
+            flatb = block.reshape(-1) if block is not None else None
+            npos = len(vids_arr)
+
+            # numeric plan arrays (pure-int loop; all math below is vector)
+            lens = np.zeros(npos, dtype=np.int64)
+            is_l = np.zeros(npos, dtype=bool)
+            base = np.zeros(npos, dtype=np.int64)   # L: flat addr of chunk
+            for pos, d in enumerate(desc):
+                if d is None:
+                    continue
+                if d[0] == "L":
+                    is_l[pos] = True
+                    lens[pos] = d[3] - d[2]
+                    base[pos] = d[1] * SLOTS_PER_PAGE + d[2]
+                else:
+                    lens[pos] = int(d[2].sum())
+            over = lens > fanout
+            lens_sel = np.where(lens == 0, 1, np.minimum(lens, fanout))
+            out_offs = np.concatenate([[0], np.cumsum(lens_sel)[:-1]])
+            sel = np.empty(int(lens_sel.sum()), dtype=SLOT_DTYPE)
+
+            # degenerate rows: self-loop
+            empty = lens == 0
+            sel[out_offs[empty]] = vids_arr[empty]
+
+            # under-full rows copied through (one flat gather; H multi-chunk
+            # under-full rows are rare — degree <= fanout but H-mapped)
+            for cls in np.nonzero(~over & ~empty & ~is_l)[0]:
+                _, rows, counts = desc[cls]
+                o, c0 = int(out_offs[cls]), 0
+                for r, c in zip(rows, counts):
+                    sel[o + c0: o + c0 + int(c)] = \
+                        block[r, _H_DATA: _H_DATA + int(c)]
+                    c0 += int(c)
+            ul = ~over & ~empty & is_l
+            if ul.any():
+                lv = lens[ul]
+                src = np.repeat(base[ul], lv) + _ramp(lv)
+                sel[np.repeat(out_offs[ul], lv) + _ramp(lv)] = flatb[src]
+
+            # over-full rows: Floyd by index, vectorized across the frontier
+            # (k steps of whole-row vector math, no per-vertex python)
+            n_over = int(over.sum())
+            if n_over:
+                u = rng.random(n_over * fanout).reshape(-1, fanout)
+                m_arr = lens[over]
+                idx = np.empty((n_over, fanout), dtype=np.int64)
+                for j2 in range(fanout):
+                    t = (u[:, j2] * (m_arr - fanout + j2 + 1)).astype(np.int64)
+                    if j2:
+                        dup = (idx[:, :j2] == t[:, None]).any(axis=1)
+                        t = np.where(dup, m_arr - fanout + j2, t)
+                    idx[:, j2] = t
+                over_pos = np.nonzero(over)[0]
+                ol = over & is_l
+                if ol.any():
+                    ol_in_over = is_l[over_pos]
+                    src = base[ol][:, None] + idx[ol_in_over]
+                    dst = out_offs[ol][:, None] + np.arange(fanout)[None, :]
+                    sel[dst.reshape(-1)] = flatb[src.reshape(-1)]
+                for r_i, cls in enumerate(over_pos):
+                    if is_l[cls]:
+                        continue
+                    _, rows, counts = desc[cls]      # hub: index by page
+                    cum = np.cumsum(counts)
+                    p = np.searchsorted(cum, idx[r_i], side="right")
+                    off = idx[r_i] - np.where(p > 0, cum[p - 1], 0)
+                    o = int(out_offs[cls])
+                    sel[o: o + fanout] = block[rows[p], _H_DATA + off]
+            return sel, lens_sel
+
+    def _l_locate_batch(self, block, row_of, l_pos, lq, k, miss, desc) -> None:
+        """Vectorized L-page meta scan over every fetched page at once.
+
+        Builds the global (vid -> page row, chunk start, chunk end) tables
+        with a handful of array ops — the range partition makes per-page
+        ascending vids globally sorted, so one ``searchsorted`` resolves all
+        queries — and records ("L", row, start, end) descriptors.
+        """
+        kis = sorted(set(k[~miss].tolist()))
+        rows = np.array([row_of[self._l_lpns[ki]] for ki in kis],
+                        dtype=np.int64)
+        if not len(rows):
+            return
+        n_m = block[rows, _L_NNODES].astype(np.int64)
+        dlen_m = block[rows, _L_DATALEN].astype(np.int64)
+        nmax = int(n_m.max())
+        j = np.arange(nmax)
+        vid_slot = _L_NNODES - 2 - 2 * j                # meta slot of node j
+        vids_m = block[rows[:, None], vid_slot[None, :]].astype(np.int64)
+        offs_m = block[rows[:, None], vid_slot[None, :] - 1].astype(np.int64)
+        live = (j[None, :] < n_m[:, None]) & (vids_m >= 0)
+
+        # chunk ends: valid boundaries flattened with a per-row key so one
+        # global sort + one searchsorted serve every query.
+        big = SLOTS_PER_PAGE + 1
+        bound_ok = (j[None, :] < n_m[:, None]) & (offs_m <= dlen_m[:, None])
+        bkey = np.where(bound_ok,
+                        np.arange(len(rows))[:, None] * big + offs_m,
+                        np.iinfo(np.int64).max)
+        bkey = np.sort(bkey.reshape(-1))                # sentinels sort last
+        n_bounds = int(bound_ok.sum())
+        bkey = bkey[:n_bounds]                          # drop sentinels
+
+        # live nodes flattened; the range partition + per-page ascending
+        # packing make vids globally sorted already (checked; argsort only
+        # as a fallback for adversarial layouts)
+        rown, coln = np.nonzero(live)
+        flat_vids = vids_m[rown, coln]
+        flat_offs = offs_m[rown, coln]
+        if np.any(flat_vids[1:] < flat_vids[:-1]):      # pragma: no cover
+            sort2 = np.argsort(flat_vids, kind="stable")
+            flat_vids, flat_offs, rown = (flat_vids[sort2], flat_offs[sort2],
+                                          rown[sort2])
+        svids = flat_vids
+
+        q = np.searchsorted(svids, lq)
+        qc = np.clip(q, 0, max(len(svids) - 1, 0))
+        found = (~miss) & (len(svids) > 0) & (svids[qc] == lq)
+        prow = rown[qc]                                 # row within `sub`
+        start = flat_offs[qc]
+        e = np.searchsorted(bkey, prow * big + start, side="right")
+        ec = np.clip(e, 0, max(n_bounds - 1, 0))
+        in_row = (e < n_bounds) & (bkey[ec] // big == prow)
+        end = np.where(in_row, bkey[ec] % big, dlen_m[prow])
+
+        for i, pos in enumerate(l_pos):
+            if found[i]:
+                desc[pos] = ("L", int(rows[prow[i]]), int(start[i]),
+                             int(end[i]))
+
     def get_embed(self, vid: int) -> np.ndarray:
         """Paper GetEmbed(VID): read only the pages covering row ``vid``."""
         if self._emb_base is None:
@@ -294,8 +506,37 @@ class GraphStore:
         return row.view(np.float32).copy()
 
     def get_embeds(self, vids: np.ndarray) -> np.ndarray:
-        """Batched embedding gather (one page-span read per row group)."""
-        return np.stack([self.get_embed(int(v)) for v in np.asarray(vids)])
+        """Coalesced batched embedding gather.
+
+        All rows' covering pages are merged (duplicates and overlaps
+        collapsed) into one queued scatter-read; rows are then sliced out of
+        the fetched block with a vectorized gather.  The sequential layout
+        of the embedding space (paper Fig. 7) means adjacent VIDs share
+        pages, so the merged page set is far smaller than one span per row.
+        """
+        if self._emb_base is None:
+            raise KeyError("no embedding table loaded")
+        vids = np.asarray(vids, dtype=np.int64).reshape(-1)
+        d = self.feature_dim
+        out = np.empty((len(vids), d), dtype=np.float32)
+        if not len(vids):
+            return out
+        lo = vids * d
+        p0 = lo // SLOTS_PER_PAGE
+        p1 = (lo + d + SLOTS_PER_PAGE - 1) // SLOTS_PER_PAGE
+        span = int((p1 - p0).max())                     # pages per row (>=1)
+        cand = p0[:, None] + np.arange(span)[None, :]   # (rows, span)
+        pages = np.unique(cand[cand < p1[:, None]])     # merged page set
+        block = self.dev.read_pages(self._emb_base + pages, tag="embed")
+        # a row's pages are consecutive integers, hence adjacent rows of the
+        # fetched block — so each embedding row is CONTIGUOUS in the block's
+        # flat view and one broadcast gather slices every row at once
+        fstart = np.searchsorted(pages, p0) * SLOTS_PER_PAGE \
+            + (lo - p0 * SLOTS_PER_PAGE)
+        flatb = block.reshape(-1)
+        out[...] = flatb[fstart[:, None] + np.arange(d)[None, :]] \
+            .view(np.float32)
+        return out
 
     # ============================================================== unit ops
     def _l_collect(self, page: np.ndarray) -> list[tuple[int, np.ndarray]]:
@@ -439,6 +680,7 @@ class GraphStore:
                 page[_H_NEXT] = lpn
                 self.dev.write_page(tail, page)
                 self.h_table[vid] = (head, lpn)
+                self.h_chain[vid].append(lpn)
                 self.stats.pages_h += 1
             return
         # ---- L-type
@@ -480,7 +722,13 @@ class GraphStore:
         self._l_split_insert(k, vid, chunk)
 
     def _promote_to_h(self, vid: int, nbrs: np.ndarray) -> None:
+        self._write_h_chain(vid, nbrs)
+        self.gmap[vid] = "H"
+
+    def _write_h_chain(self, vid: int, nbrs: np.ndarray) -> None:
+        """Write a fresh H chain for ``vid`` and record its mapping."""
         head = tail = -1
+        chain: list[int] = []
         for c0 in range(0, len(nbrs), H_CAP):
             chunk = nbrs[c0: c0 + H_CAP]
             lpn = self.dev.alloc_front()
@@ -490,6 +738,7 @@ class GraphStore:
             page[_H_DATA: _H_DATA + len(chunk)] = chunk
             self.dev.write_page(lpn, page)
             self.stats.pages_h += 1
+            chain.append(lpn)
             if head < 0:
                 head = lpn
             else:
@@ -498,7 +747,7 @@ class GraphStore:
                 self.dev.write_page(tail, prev)
             tail = lpn
         self.h_table[vid] = (head, tail)
-        self.gmap[vid] = "H"
+        self.h_chain[vid] = chain
 
     def _l_shift_left(self, page: np.ndarray, start: int, ln: int) -> None:
         """Remove chunk [start, start+ln) from the data region, fix offsets."""
@@ -586,6 +835,7 @@ class GraphStore:
             kind = self.gmap.pop(vid, None)
             if kind == "H":
                 lpn, _ = self.h_table.pop(vid)
+                self.h_chain.pop(vid, None)
                 while lpn >= 0:
                     page = self.dev.read_page(lpn)
                     nxt = int(page[_H_NEXT])

@@ -14,7 +14,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from ..compat import shard_map
 
 
 def compressed_psum_mean(mesh, axis: str = "data"):
@@ -46,4 +46,4 @@ def compressed_psum_mean(mesh, axis: str = "data"):
     spec = P(axis)
     return shard_map(inner, mesh=mesh,
                      in_specs=(spec, spec), out_specs=(spec, spec),
-                     check_vma=False)
+                     check=False)

@@ -1,0 +1,33 @@
+"""Optional-hypothesis shim (satellite of the fast-path PR).
+
+``pytest.importorskip("hypothesis")`` at module scope would skip *every*
+test in a file, including the plain oracle tests; this shim instead keeps
+those running everywhere and skips only the property tests when hypothesis
+is absent.  When hypothesis is installed the real decorators are re-exported
+unchanged, so the property tests run exactly as before.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                           # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs any strategy construction at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed")(fn)

@@ -3,7 +3,8 @@ H/L-type mapping invariants, and a hypothesis property test driving random
 mutable-op sequences."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st
 
 from repro.store.blockdev import BlockDevice, SLOTS_PER_PAGE
 from repro.store.graphstore import GraphStore, preprocess_edges

@@ -1,6 +1,7 @@
 """RoP transport: serialization round-trips (hypothesis), channel mechanics."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st
 
 from repro.rpc import serialize, deserialize, PCIeChannel, RPCServer, RPCClient
 
