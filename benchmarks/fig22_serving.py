@@ -1,0 +1,212 @@
+"""Fig. 22 (repo extension) — closed-loop multi-client serving benchmark.
+
+Serial per-request baseline (one synchronous doorbell: every client queues
+behind the single in-flight command, the paper's pre-multi-queue situation)
+vs the concurrent serving runtime (multi-queue RoP + continuous batcher +
+device-DRAM embedding cache), warm and cold cache.
+
+Each of N clients runs a closed loop: submit one Run(DFG, batch), wait for
+its completion, repeat.  Both sides register the model once device-side
+(``put_weights``) and run in steady state — shape-bucket jit compiles are
+warmed untimed, as the paper's GPU baselines run precompiled kernels.
+Reported per mode: mean/percentile request latency and aggregate
+throughput; the headline number is the scheduler's throughput speedup over
+the serial doorbell at the same client count (acceptance target: >= 3x at
+16 clients).
+
+  PYTHONPATH=src:. python -m benchmarks.fig22_serving [--smoke]
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from . import common as C
+from repro.core import gnn
+from repro.core.service import HolisticGNNService, make_service_dfg
+from repro.rpc import RPCServer, RPCClient
+from repro.serve import ServingRuntime
+
+WEIGHTS_REF = "fig22-gcn"
+
+
+def _workload(n, e, feat, seed=0):
+    rng = np.random.default_rng(seed)
+    edges = np.stack([rng.integers(0, n, e), rng.zipf(1.4, e) % n],
+                     axis=1).astype(np.int64)
+    emb = rng.standard_normal((n, feat)).astype(np.float32)
+    return edges, emb
+
+
+def _service(edges, emb, weights, *, cache_pages):
+    svc = HolisticGNNService(h_threshold=64, pad_to=64,
+                             dev=C.storage_device(),
+                             cache_pages=cache_pages)
+    svc.store.update_graph(edges, emb)
+    svc.put_weights(WEIGHTS_REF, weights)
+    return svc
+
+
+def _requests(n, clients, per_client, batch):
+    """Deterministic per-client request streams (targets, seed)."""
+    streams = []
+    for c in range(clients):
+        rng = np.random.default_rng(1000 + c)
+        streams.append([(rng.integers(0, n, batch).tolist(), c * 10000 + r)
+                        for r in range(per_client)])
+    return streams
+
+
+def _closed_loop(issue_fn, streams):
+    """Run every client's stream concurrently; returns per-request latencies
+    (seconds) and the aggregate wall time."""
+    lat: list[float] = []
+    lock = threading.Lock()
+
+    def client_loop(cid):
+        mine = []
+        for targets, seed in streams[cid]:
+            t0 = time.perf_counter()
+            issue_fn(cid, targets, seed)
+            mine.append(time.perf_counter() - t0)
+        with lock:
+            lat.extend(mine)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=client_loop, args=(c,))
+               for c in range(len(streams))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return np.array(lat), time.perf_counter() - t0
+
+
+def _measure(issue_fn, streams, passes=2):
+    """Best-of-N timed passes (steady state; container stalls land on
+    single passes — same best-of methodology as common.timeit)."""
+    best = None
+    for _ in range(passes):
+        lat, wall = _closed_loop(issue_fn, streams)
+        if best is None or wall < best[1]:
+            best = (lat, wall)
+    return best
+
+
+def _report(name, lat, wall, n_req, extra=""):
+    rps = n_req / wall
+    derived = (f"rps={rps:.1f};p50ms={np.percentile(lat, 50) * 1e3:.1f};"
+               f"p95ms={np.percentile(lat, 95) * 1e3:.1f};"
+               f"p99ms={np.percentile(lat, 99) * 1e3:.1f}")
+    if extra:
+        derived += ";" + extra
+    return C.csv_line(name, float(lat.mean()), derived), rps
+
+
+def run(smoke=False, clients=16, per_client=12, batch=8):
+    import sys
+    if smoke:
+        clients, per_client = 4, 3
+        n, e, feat = 3000, 20000, 64
+    else:
+        n, e, feat = 20000, 100000, 128
+    # finer GIL quantum for the many-client closed loops (both modes);
+    # restored before returning
+    old_switch = sys.getswitchinterval()
+    sys.setswitchinterval(0.001)
+    try:
+        return _run(clients, per_client, batch, n, e, feat)
+    finally:
+        sys.setswitchinterval(old_switch)
+
+
+def _run(clients, per_client, batch, n, e, feat):
+    edges, emb = _workload(n, e, feat)
+    params = gnn.init_params("gcn", [feat, 64, 32], seed=1)
+    dfg = make_service_dfg("gcn", 2, [10, 10]).save()
+    weights = {k: v for k, v in
+               gnn.dfg_feeds("gcn", params, None, []).items() if k != "H"}
+    streams = _requests(n, clients, per_client, batch)
+    n_req = clients * per_client
+    lines = []
+
+    # ---- serial baseline: one synchronous doorbell, no cache
+    svc_s = _service(edges, emb, weights, cache_pages=None)
+    rpc = RPCClient(RPCServer(svc_s))
+    door = threading.Lock()                   # the single in-flight command
+
+    def serial_issue(cid, targets, seed):
+        with door:
+            rpc.call("run", dfg=dfg, batch=targets,
+                     weights_ref=WEIGHTS_REF, seed=seed)
+
+    # one untimed pass over the full streams (jit signature compiles):
+    # both sides are measured in steady state
+    _closed_loop(serial_issue, streams)
+    lat, wall = _measure(serial_issue, streams)
+    line, rps_serial = _report(f"fig22.serial.{clients}c", lat, wall, n_req)
+    lines.append(line)
+
+    # ---- scheduled runtime: multi-queue RoP + batcher + page cache
+    svc = _service(edges, emb, weights, cache_pages=8192)
+    rng = np.random.default_rng(7)
+    for g in (1, 2, 3, 4, 6, 8, 10, 12, 14, 16):   # warm group-size buckets
+        if g <= clients:
+            svc.run_batch(dfg, [{"targets":
+                                 rng.integers(0, n, batch).tolist(),
+                                 "seed": 1} for _ in range(g)],
+                          weights_ref=WEIGHTS_REF)
+    rt = ServingRuntime(svc, n_queues=min(clients, 16), queue_depth=64,
+                        max_group=16, max_pending=512)
+    stubs = [rt.client() for _ in range(clients)]
+
+    def sched_issue(cid, targets, seed):
+        stubs[cid].call("run", dfg=dfg, batch=targets,
+                        weights_ref=WEIGHTS_REF, seed=seed, timeout=600)
+
+    rt.start()
+    try:
+        _closed_loop(sched_issue, streams)                     # untimed
+        lat, wall = _measure(sched_issue, streams)             # warm cache
+        qos = rt.qos_snapshot()
+        hr = svc.store.cache.stats.hit_rate
+        line, rps_warm = _report(
+            f"fig22.sched_warm.{clients}c", lat, wall, n_req,
+            extra=(f"hit_rate={hr:.2f};"
+                   f"avg_group={qos['avg_group_size']:.1f}"))
+        lines.append(line)
+
+        # cold-cache passes: drop the cache each time, keep jit warm
+        best = None
+        for _ in range(2):
+            svc.store.cache.clear()
+            got = _closed_loop(sched_issue, streams)
+            if best is None or got[1] < best[1]:
+                best = got
+        lat, wall = best
+        line, rps_cold = _report(f"fig22.sched_cold.{clients}c", lat, wall,
+                                 n_req)
+        lines.append(line)
+    finally:
+        rt.stop()
+
+    lines.append(C.csv_line(
+        "fig22.speedup", 0.0,
+        f"warm={rps_warm / rps_serial:.1f}x;cold={rps_cold / rps_serial:.1f}x"
+        f";serial_rps={rps_serial:.1f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--per-client", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    for ln in run(smoke=args.smoke, clients=args.clients,
+                  per_client=args.per_client, batch=args.batch):
+        print(ln)

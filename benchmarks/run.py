@@ -27,7 +27,7 @@ def main(argv=None) -> None:
     from . import (fig3_breakdown, fig14_end2end, fig15_energy,
                    fig16_pure_inference, fig17_opbreakdown, fig18_bulk,
                    fig19_batchprep, fig20_mutable, fig21_fastpath,
-                   table5_datasets)
+                   fig22_serving, table5_datasets)
     suites = {
         "table5": table5_datasets.run,
         "fig3": fig3_breakdown.run,
@@ -39,11 +39,13 @@ def main(argv=None) -> None:
         "fig19": fig19_batchprep.run,
         "fig20": fig20_mutable.run,
         "fig21": fig21_fastpath.run,
+        "fig22": fig22_serving.run,
     }
     if args.smoke:
         suites = {
             "fig19": lambda: fig19_batchprep.run(workloads=("chmleon",)),
             "fig21": lambda: fig21_fastpath.run(smoke=True),
+            "fig22": lambda: fig22_serving.run(smoke=True),
         }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -1,23 +1,35 @@
-"""End-to-end driver (paper-kind = inference service): serve a stream of
-batched GNN inference requests against a near-storage graph, with live
-mutable updates interleaved — the deployment scenario of the paper.
+"""End-to-end driver (paper-kind = inference service): concurrent GNN
+serving against a near-storage graph through the serving runtime —
+multi-queue RoP, continuous request batching, and the device-DRAM
+embedding cache — with mixed-priority traffic and live mutations.
 
-  PYTHONPATH=src python examples/serve_gnn.py [--requests 20]
+Traffic mix per client round:
+  * interactive clients submit high-priority requests with a deadline;
+  * bulk clients submit best-effort requests that the scheduler coalesces
+    into fused super-batches;
+  * a mutator thread streams unit graph updates (add_edge / update_embed)
+    through the same queues — mutations dispatch immediately, never stuck
+    behind a model execution, and invalidate exactly the cached pages they
+    touch.
+
+  PYTHONPATH=src python examples/serve_gnn.py [--requests 20] [--clients 8]
 """
 import argparse
-import time
+import threading
 
 import numpy as np
 
 from repro.core.service import HolisticGNNService, make_service_dfg
 from repro.core import gnn
 from repro.kernels.ops import program_config
-from repro.rpc import RPCServer, RPCClient
+from repro.serve import ServingRuntime
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=20)
+    ap.add_argument("--requests", type=int, default=20,
+                    help="requests per client")
+    ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--model", default="gcn", choices=["gcn", "gin", "ngcf"])
     args = ap.parse_args()
@@ -28,9 +40,12 @@ def main():
                      1).astype(np.int64)
     emb = rng.standard_normal((n, feat)).astype(np.float32)
 
-    svc = HolisticGNNService(h_threshold=64, pad_to=64)
-    client = RPCClient(RPCServer(svc))
-    client.call("update_graph", edge_array=edges, embeddings=emb)
+    svc = HolisticGNNService(h_threshold=64, pad_to=64, cache_pages=4096)
+    runtime = ServingRuntime(svc, n_queues=min(args.clients, 8),
+                             max_group=16, max_pending=512)
+    boot = runtime.client()
+    runtime.start()
+    boot.call("update_graph", edge_array=edges, embeddings=emb, timeout=600)
     program_config(svc.xbuilder, "hetero")
 
     params = gnn.init_params(args.model, [feat, 64, 32], seed=1)
@@ -38,24 +53,89 @@ def main():
     weights = {k: v for k, v in
                gnn.dfg_feeds(args.model, params, None, []).items()
                if k != "H"}
+    # deploy the model device-side once; requests then carry only targets
+    boot.call("put_weights", name="deployed", weights=weights, timeout=600)
 
-    lat = []
-    for r in range(args.requests):
-        targets = rng.integers(0, n, args.batch_size).tolist()
-        t0 = time.perf_counter()
-        out = client.call("run", dfg=dfg, batch=targets, weights=weights,
-                          seed=r)
-        lat.append(time.perf_counter() - t0)
-        if r % 5 == 0:                       # live graph mutations mid-service
-            client.call("add_edge", dst=int(rng.integers(0, n)),
-                        src=int(rng.integers(0, n)))
-    lat = np.array(lat) * 1e3
-    print(f"{args.requests} requests x {args.batch_size} targets "
-          f"({args.model}): p50={np.percentile(lat, 50):.1f} ms "
-          f"p95={np.percentile(lat, 95):.1f} ms mean={lat.mean():.1f} ms")
-    print(f"store: {svc.store.stats.pages_h} H-pages, "
-          f"{svc.store.stats.pages_l} L-pages, "
-          f"{svc.store.dev.stats.read_pages} page reads")
+    lat = {"interactive": [], "bulk": []}
+    errors = []
+    lock = threading.Lock()
+    stop_mutator = threading.Event()
+
+    def client_loop(cid):
+        import time
+        cl = runtime.client()
+        crng = np.random.default_rng(100 + cid)
+        interactive = cid % 4 == 0            # every 4th client is latency-
+        kind = "interactive" if interactive else "bulk"     # sensitive
+        for r in range(args.requests):
+            targets = crng.integers(0, n, args.batch_size).tolist()
+            t0 = time.perf_counter()
+            try:
+                cl.call("run", dfg=dfg, batch=targets,
+                        weights_ref="deployed", seed=cid * 1000 + r,
+                        priority=10 if interactive else 0,
+                        deadline_s=30.0 if interactive else None,
+                        timeout=600)
+            except Exception as e:  # noqa: BLE001 — surfaced at exit
+                with lock:
+                    errors.append(f"client {cid} req {r}: {e}")
+                continue
+            with lock:
+                lat[kind].append(time.perf_counter() - t0)
+
+    def mutator_loop():
+        cl = runtime.client()
+        mrng = np.random.default_rng(999)
+        while not stop_mutator.is_set():
+            try:
+                cl.call("add_edge", dst=int(mrng.integers(0, n)),
+                        src=int(mrng.integers(0, n)), timeout=600)
+                cl.call("update_embed", vid=int(mrng.integers(0, n)),
+                        embed=mrng.standard_normal(feat).astype(np.float32),
+                        timeout=600)
+            except Exception as e:  # noqa: BLE001 — surfaced at exit
+                with lock:
+                    errors.append(f"mutator: {e}")
+            stop_mutator.wait(0.02)
+
+    threads = [threading.Thread(target=client_loop, args=(c,))
+               for c in range(args.clients)]
+    mut = threading.Thread(target=mutator_loop)
+    for t in threads:
+        t.start()
+    mut.start()
+    for t in threads:
+        t.join()
+    stop_mutator.set()
+    mut.join()
+
+    stats = boot.call("stats", timeout=600)
+    runtime.stop()
+
+    qos = stats["qos"]
+    for kind, xs in lat.items():
+        if not xs:
+            continue
+        xs = np.array(xs) * 1e3
+        print(f"{kind:12s} {len(xs):4d} reqs: p50={np.percentile(xs, 50):.1f} "
+              f"ms p95={np.percentile(xs, 95):.1f} ms "
+              f"p99={np.percentile(xs, 99):.1f} ms")
+    print(f"scheduler: {qos['groups']} groups, "
+          f"avg group size {qos['avg_group_size']:.1f}, "
+          f"throughput {qos['throughput_rps']:.1f} req/s, "
+          f"{qos['expired']} expired, {qos['rejected']} rejected")
+    cache = stats.get("embcache", {})
+    if cache:
+        print(f"embcache: hit rate {cache['hit_rate']:.2f} "
+              f"({cache['hits']} hits / {cache['misses']} misses, "
+              f"{cache['invalidations']} invalidations)")
+    print(f"store: {stats['store']['pages_h']} H-pages, "
+          f"{stats['store']['pages_l']} L-pages, "
+          f"{stats['store']['unit_updates']} unit updates, "
+          f"{stats['device']['read_pages']} device page reads")
+    if errors:
+        print(f"{len(errors)} failed requests; first: {errors[0]}")
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

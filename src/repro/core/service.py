@@ -25,8 +25,12 @@ from . import gnn
 
 class HolisticGNNService:
     def __init__(self, *, h_threshold: int = 128, pad_to: int = 64,
-                 dev: BlockDevice | None = None):
+                 dev: BlockDevice | None = None,
+                 cache_pages: int | None = None):
         self.store = GraphStore(dev or BlockDevice(), h_threshold=h_threshold)
+        if cache_pages:
+            from ..store.embcache import EmbeddingPageCache
+            self.store.attach_cache(EmbeddingPageCache(cache_pages))
         self.registry = KernelRegistry()
         self.xbuilder = XBuilder(self.registry)
         for name, fn in gnn.extra_shell_kernels().items():
@@ -34,6 +38,9 @@ class HolisticGNNService:
         self._register_batchpre()
         self.engine = Engine(self.registry)
         self.pad_to = pad_to
+        self._programs: dict[str, object] = {}   # markup -> ServiceProgram
+        self._weight_store: dict[str, dict] = {} # weights_ref -> feed dict
+        self.qos_provider = None                 # set by ServingRuntime
 
     # ------------------------------------------------------------- GraphStore
     def update_graph(self, edge_array, embeddings=None):
@@ -65,9 +72,9 @@ class HolisticGNNService:
 
     # ------------------------------------------------------------ GraphRunner
     def _register_batchpre(self):
-        def batch_pre(targets, *, fanouts, seed=0):
+        def batch_pre(targets, seed=0, *, fanouts):
             batch = sample_batch(self.store, np.asarray(targets), list(fanouts),
-                                 rng=np.random.default_rng(seed),
+                                 rng=np.random.default_rng(int(seed)),
                                  pad_to=self.pad_to)
             outs = [jnp.asarray(batch.embeddings)]
             for blk in batch.layers:
@@ -80,7 +87,8 @@ class HolisticGNNService:
                                   jittable=False)
 
     def run(self, dfg: str, batch, weights: dict | None = None,
-            fanouts=None, seed: int = 0, jit: bool = True):
+            fanouts=None, seed: int = 0, jit: bool = True,
+            weights_ref: str | None = None):
         """Paper Run(DFG, batch).
 
         * If the DFG starts with a ``BatchPre`` node (service-style DFG),
@@ -93,9 +101,11 @@ class HolisticGNNService:
         number of distinct shape signatures (and hence compiles) small.
         """
         dfg_obj = DFG.load(dfg) if isinstance(dfg, str) else dfg
-        feeds = dict(weights or {})
+        feeds = self._resolve_weights(weights, weights_ref)
         if "Batch" in dfg_obj._ins:
             feeds["Batch"] = np.asarray(batch)
+            if "Seed" in dfg_obj._ins:     # per-request sampling stream
+                feeds["Seed"] = int(seed)
         else:
             assert fanouts is not None, "model-only DFG needs fanouts"
             b = sample_batch(self.store, np.asarray(batch), list(fanouts),
@@ -106,6 +116,93 @@ class HolisticGNNService:
                 feeds[f"mask{l}"] = jnp.asarray(blk.mask)
         out = self.engine.run(dfg_obj, feeds, jit=jit)
         return {k: np.asarray(v) for k, v in out.items()}
+
+    def put_weights(self, name: str, weights: dict) -> dict:
+        """Register a model's weights device-side under ``name``.
+
+        Serving clients then pass ``weights_ref=name`` per request instead
+        of re-shipping the full weight set over RoP each time — the device
+        DRAM holds the deployed model next to the engine.
+        """
+        stored = {k: jnp.asarray(np.asarray(v)) for k, v in weights.items()}
+        self._weight_store[name] = stored
+        return {"name": name, "tensors": len(stored),
+                "bytes": int(sum(v.size * v.dtype.itemsize
+                                 for v in stored.values()))}
+
+    def _resolve_weights(self, weights: dict | None,
+                         weights_ref: str | None) -> dict:
+        if weights_ref is None:
+            return dict(weights or {})
+        stored = self._weight_store.get(weights_ref)
+        if stored is None:
+            raise KeyError(f"unknown weights_ref {weights_ref!r} "
+                           "(register with put_weights first)")
+        out = dict(stored)
+        out.update(weights or {})              # per-request overrides win
+        return out
+
+    def _service_program(self, markup: str):
+        """Cached BatchPre/model split of a service DFG (serving hot path)."""
+        if markup not in self._programs:
+            from ..serve.batcher import split_service_dfg
+            self._programs[markup] = split_service_dfg(DFG.load(markup))
+        return self._programs[markup]
+
+    def run_batch(self, dfg, requests, weights: dict | None = None,
+                  jit: bool = True, weights_ref: str | None = None):
+        """Continuous-batching entry: several Run requests against the same
+        service DFG as ONE fused engine execution.
+
+        ``requests`` is a list of ``{"targets": [...], "seed": int}``.  The
+        group is sampled near storage in one pass per hop (per-request rng
+        segments keep each request's sample bit-identical to a solo run),
+        composed into a block-diagonal super-batch, bucket-padded, and run
+        through the cached-jit model portion; each request gets back exactly
+        its own output rows.  Returns a list of per-request result dicts.
+        """
+        from ..serve.batcher import sample_group, pad_group
+        markup = dfg if isinstance(dfg, str) else dfg.save()
+        prog = self._service_program(markup)
+        if prog is None:
+            raise ValueError("run_batch needs a BatchPre-led service DFG")
+        batch, slices = sample_group(
+            self.store, [r["targets"] for r in requests],
+            [int(r.get("seed", 0)) for r in requests], prog.fanouts)
+        batch = pad_group(batch, self.pad_to)
+        feeds = self._resolve_weights(weights, weights_ref)
+        feeds[prog.feed_refs[0]] = jnp.asarray(batch.embeddings)
+        for l, blk in enumerate(batch.layers):
+            feeds[prog.feed_refs[1 + 2 * l]] = jnp.asarray(blk.nbr)
+            feeds[prog.feed_refs[2 + 2 * l]] = jnp.asarray(blk.mask)
+        out = self.engine.run(prog.model, feeds, jit=jit)
+        return [{k: np.asarray(v)[off: off + n] for k, v in out.items()}
+                for off, n in slices]
+
+    def stats(self):
+        """QoS / store / cache / device counters (the `stats` RPC).
+
+        The RPC dispatcher injects its own rolling per-method stats under
+        ``rpc``; the serving runtime contributes scheduler + transport QoS
+        under ``qos`` via ``qos_provider``.
+        """
+        dev = self.store.dev.stats
+        out = {
+            "store": {"pages_h": self.store.stats.pages_h,
+                      "pages_l": self.store.stats.pages_l,
+                      "unit_updates": self.store.stats.unit_updates,
+                      "l_evictions": self.store.stats.l_evictions,
+                      "num_vertices": self.store.num_vertices},
+            "device": {"read_pages": dev.read_pages,
+                       "written_pages": dev.written_pages,
+                       "read_bytes": dev.read_bytes,
+                       "written_bytes": dev.written_bytes},
+        }
+        if self.store.cache is not None:
+            out["embcache"] = self.store.cache.stats.snapshot()
+        if self.qos_provider is not None:
+            out["qos"] = self.qos_provider()
+        return out
 
     def plugin(self, shared_lib: str):
         """Paper Plugin(shared_lib): import a module exposing register(api)."""
@@ -127,7 +224,8 @@ def make_service_dfg(model: str, num_layers: int, fanouts) -> DFG:
     """Service-style DFG whose first node is BatchPre (paper Fig. 10a)."""
     g = DFG()
     batch = g.create_in("Batch")
-    outs = g.create_op("BatchPre", [batch], n_out=1 + 2 * num_layers,
+    seed = g.create_in("Seed")                # per-request sampling stream
+    outs = g.create_op("BatchPre", [batch, seed], n_out=1 + 2 * num_layers,
                        attrs={"fanouts": list(fanouts)})
     h, rest = outs[0], outs[1:]
     model_dfg = gnn.BUILD_DFG[model](num_layers)

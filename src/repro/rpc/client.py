@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import time
 
-from .transport import PCIeChannel, serialize, deserialize
+from .transport import PCIeChannel, serialize, deserialize, check_reply
 
 
 class RPCClient:
@@ -25,6 +25,4 @@ class RPCClient:
         t0 = time.perf_counter()
         resp = deserialize(self.rx.pull())
         self.rx.stats.serialize_secs += time.perf_counter() - t0
-        if not resp["ok"]:
-            raise RuntimeError(f"RPC {method} failed: {resp['error']}")
-        return resp.get("result")
+        return check_reply(resp, f"RPC {method}")

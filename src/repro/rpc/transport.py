@@ -86,6 +86,18 @@ def deserialize(data: bytes):
     return _decode(meta, buffers)
 
 
+def check_reply(resp: dict, label: str = "RPC"):
+    """Decode a reply dict: return the result, or raise with the
+    device-side error (and its formatted traceback, when shipped).
+    Shared by every host-side stub so the error contract lives here."""
+    if resp.get("ok"):
+        return resp.get("result")
+    msg = f"{label} failed: {resp.get('error')}"
+    if resp.get("traceback"):
+        msg += "\n--- device traceback ---\n" + resp["traceback"]
+    raise RuntimeError(msg)
+
+
 @dataclass
 class ChannelStats:
     packets: int = 0

@@ -1,0 +1,156 @@
+"""ServingRuntime — the concurrent serving loop of the CSSD: multi-queue
+RoP transport + RPC dispatch + continuous-batching scheduler over one
+``HolisticGNNService``.
+
+Command routing mirrors the device firmware split:
+
+  * ``run`` commands against a batchable (BatchPre-led) service DFG enter
+    the scheduler's admission queue and complete asynchronously, coalesced
+    into fused super-batches;
+  * everything else — mutations, unit queries, ``stats``, non-service DFGs —
+    dispatches immediately through the ordinary RPC server path, so a
+    mutable-graph update is never stuck behind a model execution.
+
+Operating modes:
+
+  * **threaded** (``start()``/``stop()``): a dispatcher thread drains the
+    submission queues, a scheduler thread runs fused groups — the serving
+    benchmark and example use this;
+  * **stepped** (``pump()``): single-threaded deterministic draining —
+    grouping and completion order become a pure function of submission
+    order, which the bit-exactness and mutable-under-load tests rely on.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+
+from ..rpc import RPCServer, MultiQueueRoP, AsyncRPCClient
+from ..rpc.transport import serialize, deserialize
+from .scheduler import BatchScheduler, AdmissionError
+
+
+class ServingRuntime:
+    def __init__(self, service, *, n_queues: int = 4, queue_depth: int = 64,
+                 max_group: int = 16, max_pending: int = 256,
+                 coalesce: bool = True, batch_window_s: float = 0.02):
+        self.service = service
+        self.rop = MultiQueueRoP(n_queues=n_queues, depth=queue_depth)
+        self.server = RPCServer(service)
+        self.scheduler = BatchScheduler(service, max_group=max_group,
+                                        max_pending=max_pending,
+                                        coalesce=coalesce,
+                                        batch_window_s=batch_window_s)
+        # the service's `stats` RPC pulls QoS + transport counters from here
+        service.qos_provider = self.qos_snapshot
+        self._threads: list[threading.Thread] = []
+        self._stop = threading.Event()
+        self._next_q = itertools.count()
+
+    # ---------------------------------------------------------------- clients
+    def client(self, qid: int | None = None) -> AsyncRPCClient:
+        """A host-side async stub; queues are assigned round-robin."""
+        if qid is None:
+            qid = next(self._next_q) % len(self.rop.pairs)
+        return AsyncRPCClient(self.rop, qid)
+
+    # ----------------------------------------------------------- device side
+    def _dispatch(self, qid: int, cmd_id: int, packet: bytes) -> None:
+        req = deserialize(packet)
+        method, kwargs = req["method"], dict(req.get("kwargs") or {})
+        if method == "run" and self.scheduler.accepts(kwargs.get("dfg")):
+            priority = int(kwargs.pop("priority", 0))
+            deadline_s = kwargs.pop("deadline_s", None)
+            weights_key = kwargs.pop("weights_key", None)
+
+            def on_done(resp: dict) -> None:
+                self.rop.post_completion(qid, cmd_id, serialize(resp))
+
+            try:
+                self.scheduler.submit(
+                    dfg=kwargs["dfg"], batch=kwargs["batch"],
+                    weights=kwargs.get("weights"),
+                    weights_ref=kwargs.get("weights_ref"),
+                    seed=kwargs.get("seed", 0),
+                    jit=kwargs.get("jit", True),
+                    priority=priority, deadline_s=deadline_s,
+                    weights_key=weights_key, on_done=on_done)
+            except AdmissionError as e:
+                on_done({"ok": False, "error": f"AdmissionError: {e}"})
+            return
+        kwargs.pop("priority", None)          # QoS hints are runtime-level,
+        kwargs.pop("deadline_s", None)        # not service kwargs
+        kwargs.pop("weights_key", None)
+        resp = self.server.dispatch(method, kwargs)
+        self.rop.post_completion(qid, cmd_id, serialize(resp))
+
+    # ---------------------------------------------------------- stepped mode
+    def pump(self) -> int:
+        """Drain every queued submission, then schedule to empty.
+
+        Deterministic: requests are admitted in queue round-robin order and
+        grouped by the scheduler's pure (priority, seq) policy.  Returns the
+        number of scheduler-completed requests.
+        """
+        while True:
+            got = self.rop.pop_submission(timeout=0)
+            if got is None:
+                break
+            self._dispatch(*got)
+        return self.scheduler.drain()
+
+    # ---------------------------------------------------------- threaded mode
+    def start(self) -> None:
+        if self._threads:
+            return
+        self._stop.clear()
+
+        def dispatcher():
+            while not self._stop.is_set():
+                got = self.rop.pop_submission(timeout=0.05)
+                if got is not None:
+                    self._dispatch(*got)
+
+        def worker():
+            # the worker drains submissions inline at every group boundary:
+            # under load the dispatcher thread is starved of scheduling
+            # quanta by the model execution, and groups would otherwise
+            # form half-empty.  The dispatcher still guarantees liveness
+            # for commands arriving DURING a group execution (mutations,
+            # stats) — they never wait for the batcher.
+            while not self._stop.is_set():
+                while True:
+                    got = self.rop.pop_submission(timeout=0)
+                    if got is None:
+                        break
+                    self._dispatch(*got)
+                if self.scheduler.step():
+                    continue
+                if self.scheduler.wait_for_work(timeout=0.05):
+                    time.sleep(0.0005)        # batching window still open
+
+        for fn, name in ((dispatcher, "rop-dispatch"), (worker, "batcher")):
+            th = threading.Thread(target=fn, name=name, daemon=True)
+            th.start()
+            self._threads.append(th)
+
+    def stop(self) -> None:
+        self._stop.set()
+        for th in self._threads:
+            th.join(timeout=5.0)
+        self._threads = []
+
+    def __enter__(self):
+        self.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -------------------------------------------------------------- telemetry
+    def qos_snapshot(self) -> dict:
+        out = self.scheduler.qos.snapshot(
+            queue_depth=self.scheduler.queue_depth)
+        out["transport"] = self.rop.stats_snapshot()
+        return out

@@ -81,6 +81,10 @@ class BlockDevice:
         # internal flash channels: a single queued multi-page command streams
         # from all channels at once; serial single-page commands cannot.
         self.channels = 8
+        # write observer: called as on_write(lpn0, n_pages) for every page
+        # write/free (and with the whole device span on _grow relocation) —
+        # the device-DRAM page cache hooks its invalidation here.
+        self.on_write = None
 
     # ------------------------------------------------------------------ alloc
     @property
@@ -99,6 +103,8 @@ class BlockDevice:
             grown[self._back: old.shape[0]] = 0
         self._back = grown.shape[0] - back_len
         self._pages = grown
+        if self.on_write is not None:          # embedding span relocated:
+            self.on_write(0, grown.shape[0])   # every cached LPN is stale
 
     def alloc_front(self) -> int:
         """Allocate one page in the neighbor space (graph pages)."""
@@ -125,6 +131,8 @@ class BlockDevice:
     def free_page(self, lpn: int) -> None:
         with self._lock:
             self._free.append(lpn)
+        if self.on_write is not None:
+            self.on_write(lpn, 1)
 
     # -------------------------------------------------------------------- i/o
     def _maybe_sleep(self, us: float):
@@ -144,6 +152,8 @@ class BlockDevice:
         self._maybe_sleep(self.command_latency_us + self.page_write_us)
         self._pages[lpn] = data
         self.stats.record("write", lpn, PAGE_BYTES, tag, self._t0)
+        if self.on_write is not None:
+            self.on_write(lpn, 1)
 
     def write_span(self, lpn0: int, flat: np.ndarray, *, tag: str = "embed") -> None:
         """Bulk sequential write of ``flat`` (int32) starting at page lpn0.
@@ -167,6 +177,8 @@ class BlockDevice:
         self.stats.events.append(IOEvent(
             time.perf_counter() - self._t0, "write", lpn0,
             n_pages * PAGE_BYTES, tag))
+        if self.on_write is not None:
+            self.on_write(lpn0, n_pages)
 
     def read_page(self, lpn: int, *, tag: str = "graph") -> np.ndarray:
         self._maybe_sleep(self.command_latency_us + self.page_read_us)

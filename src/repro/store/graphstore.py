@@ -69,6 +69,7 @@ class GraphStoreStats:
     pages_h: int = 0
     pages_l: int = 0
     bulk: BulkTimeline = field(default_factory=BulkTimeline)
+    cache: object | None = None   # CacheStats once a page cache is attached
 
 
 class GraphStore:
@@ -91,6 +92,25 @@ class GraphStore:
         self.stats = GraphStoreStats()
         self._free_vids: list[int] = []                # deleted VIDs, reused (paper)
         self._lock = threading.RLock()
+        self.cache = None                              # device-DRAM page cache
+        self._cache_graph = True
+
+    def attach_cache(self, cache, *, cache_graph_pages: bool = True) -> None:
+        """Front batched page reads with a device-DRAM LRU (serving hot set).
+
+        Invalidation rides the device's write hook, so every mutable-graph
+        path (unit updates, splits, promotions, embedding RMWs, device
+        growth) drops exactly the pages it dirtied.
+        """
+        self.cache = cache
+        self._cache_graph = cache_graph_pages
+        self.stats.cache = cache.stats
+        self.dev.on_write = cache.invalidate
+
+    def _read_pages_cached(self, lpns, tag: str) -> np.ndarray:
+        if self.cache is not None and (tag == "embed" or self._cache_graph):
+            return self.cache.read_pages(self.dev, lpns, tag=tag)
+        return self.dev.read_pages(lpns, tag=tag)
 
     # ================================================================= helpers
     def _classify(self, degree: int) -> str:
@@ -305,7 +325,7 @@ class GraphStore:
         lpns = l_lpns + h_lpns                  # ONE queued scatter-read
         if not lpns:
             return None, desc
-        block = self.dev.read_pages(lpns)
+        block = self._read_pages_cached(lpns, "graph")
         row_of = {lpn: i for i, lpn in enumerate(lpns)}
 
         if len(lq):
@@ -347,7 +367,8 @@ class GraphStore:
             return out
 
     def sample_neighbors_batch(self, vids, fanout: int,
-                               rng: np.random.Generator):
+                               rng: np.random.Generator | None = None, *,
+                               segments=None, rngs=None):
         """Fused near-storage GetNeighbors + fanout subsampling (B-1 half).
 
         The decisive hub optimisation: a power-law hub with a 30K-neighbor
@@ -356,6 +377,14 @@ class GraphStore:
         neighbor list is never materialised.  Uniform draws are consumed in
         vid order, one ``fanout`` block per over-full vertex, identical to
         the reference sampler's per-vertex stream.
+
+        Multi-request mode (the serving batcher): ``vids`` may concatenate
+        several requests' frontiers — ``segments`` gives the per-request row
+        counts and ``rngs`` the per-request generators.  Each segment's
+        draws then come from its own stream, exactly as a solo call over
+        that segment would consume them, so a coalesced super-request stays
+        bit-identical per request while the page fetch remains ONE queued
+        scatter-read for everything.
 
         Returns ``(sel, lens)``: selected neighbors flattened row-major and
         per-vid selection lengths (empty/unknown vids yield a self-loop).
@@ -407,7 +436,14 @@ class GraphStore:
             # (k steps of whole-row vector math, no per-vertex python)
             n_over = int(over.sum())
             if n_over:
-                u = rng.random(n_over * fanout).reshape(-1, fanout)
+                if rngs is not None:
+                    bounds = np.concatenate([[0], np.cumsum(segments)])
+                    parts = [g.random(int(over[bounds[s]: bounds[s + 1]]
+                                          .sum()) * fanout)
+                             for s, g in enumerate(rngs)]
+                    u = np.concatenate(parts).reshape(-1, fanout)
+                else:
+                    u = rng.random(n_over * fanout).reshape(-1, fanout)
                 m_arr = lens[over]
                 idx = np.empty((n_over, fanout), dtype=np.int64)
                 for j2 in range(fanout):
@@ -498,12 +534,13 @@ class GraphStore:
         """Paper GetEmbed(VID): read only the pages covering row ``vid``."""
         if self._emb_base is None:
             raise KeyError("no embedding table loaded")
-        d = self.feature_dim
-        lo, hi = vid * d, (vid + 1) * d
-        p0, p1 = lo // SLOTS_PER_PAGE, -(-hi // SLOTS_PER_PAGE)
-        flat = self.dev.read_span(self._emb_base + p0, p1 - p0, tag="embed")
-        row = flat[lo - p0 * SLOTS_PER_PAGE: hi - p0 * SLOTS_PER_PAGE]
-        return row.view(np.float32).copy()
+        with self._lock:
+            d = self.feature_dim
+            lo, hi = vid * d, (vid + 1) * d
+            p0, p1 = lo // SLOTS_PER_PAGE, -(-hi // SLOTS_PER_PAGE)
+            flat = self.dev.read_span(self._emb_base + p0, p1 - p0, tag="embed")
+            row = flat[lo - p0 * SLOTS_PER_PAGE: hi - p0 * SLOTS_PER_PAGE]
+            return row.view(np.float32).copy()
 
     def get_embeds(self, vids: np.ndarray) -> np.ndarray:
         """Coalesced batched embedding gather.
@@ -521,13 +558,18 @@ class GraphStore:
         out = np.empty((len(vids), d), dtype=np.float32)
         if not len(vids):
             return out
+        with self._lock:
+            return self._get_embeds_locked(vids, out)
+
+    def _get_embeds_locked(self, vids: np.ndarray, out: np.ndarray) -> np.ndarray:
+        d = self.feature_dim
         lo = vids * d
         p0 = lo // SLOTS_PER_PAGE
         p1 = (lo + d + SLOTS_PER_PAGE - 1) // SLOTS_PER_PAGE
         span = int((p1 - p0).max())                     # pages per row (>=1)
         cand = p0[:, None] + np.arange(span)[None, :]   # (rows, span)
         pages = np.unique(cand[cand < p1[:, None]])     # merged page set
-        block = self.dev.read_pages(self._emb_base + pages, tag="embed")
+        block = self._read_pages_cached(self._emb_base + pages, "embed")
         # a row's pages are consecutive integers, hence adjacent rows of the
         # fetched block — so each embedding row is CONTIGUOUS in the block's
         # flat view and one broadcast gather slices every row at once
@@ -852,19 +894,22 @@ class GraphStore:
         """UpdateEmbed(VID, Embed): in-place page RMW of one feature row."""
         if self._emb_base is None:
             raise KeyError("no embedding table loaded")
-        d = self.feature_dim
-        row = np.ascontiguousarray(embed, dtype=np.float32).reshape(-1)
-        assert row.size == d
-        lo = vid * d
-        p0 = lo // SLOTS_PER_PAGE
-        within = lo - p0 * SLOTS_PER_PAGE
-        n_pages = -(-(within + d) // SLOTS_PER_PAGE)
-        flat = self.dev.read_span(self._emb_base + p0, n_pages, tag="embed").copy()
-        flat[within: within + d] = row.view(np.int32)
-        for i in range(n_pages):
-            self.dev.write_page(
-                self._emb_base + p0 + i,
-                flat[i * SLOTS_PER_PAGE: (i + 1) * SLOTS_PER_PAGE], tag="embed")
+        with self._lock:
+            d = self.feature_dim
+            row = np.ascontiguousarray(embed, dtype=np.float32).reshape(-1)
+            assert row.size == d
+            lo = vid * d
+            p0 = lo // SLOTS_PER_PAGE
+            within = lo - p0 * SLOTS_PER_PAGE
+            n_pages = -(-(within + d) // SLOTS_PER_PAGE)
+            flat = self.dev.read_span(self._emb_base + p0, n_pages,
+                                      tag="embed").copy()
+            flat[within: within + d] = row.view(np.int32)
+            for i in range(n_pages):
+                self.dev.write_page(
+                    self._emb_base + p0 + i,
+                    flat[i * SLOTS_PER_PAGE: (i + 1) * SLOTS_PER_PAGE],
+                    tag="embed")
 
     # ============================================================== export
     def to_adjacency(self) -> dict[int, set[int]]:

@@ -148,6 +148,26 @@ def _ramp(lens: np.ndarray) -> np.ndarray:
     return np.arange(total) - np.repeat(starts, lens)
 
 
+def _build_level(frontier: np.ndarray, flat: np.ndarray, lens: np.ndarray,
+                 fanout: int) -> tuple[LayerBlock, np.ndarray]:
+    """[B-2/B-5] reindex one frontier's selected neighbors and scatter them
+    into the page-shaped padded block.  (The serving batcher's fused
+    multi-request sampler performs the same construction group-wide with a
+    request-tagged reindex — ``repro.serve.batcher.sample_group``.)
+    """
+    flat = flat.astype(np.int64, copy=False)
+    local, next_nodes = _reindex(frontier, flat)
+    rows = np.repeat(np.arange(len(frontier)), lens)
+    offs = np.concatenate([[0], np.cumsum(lens)[:-1]])
+    cols = np.arange(len(flat)) - np.repeat(offs, lens)
+    nbr = np.zeros((len(frontier), fanout), dtype=np.int32)
+    mask = np.zeros((len(frontier), fanout), dtype=np.float32)
+    nbr[rows, cols] = local
+    mask[rows, cols] = 1.0
+    return (LayerBlock(nbr=nbr, mask=mask, num_dst=len(frontier)),
+            next_nodes)
+
+
 def _reindex(frontier: np.ndarray, flat: np.ndarray):
     """[B-2] vectorized first-seen reindex.
 
@@ -207,16 +227,8 @@ def sample_batch(store, targets, fanouts, *, rng: np.random.Generator | None = N
         else:
             neigh = _gather_neighbors(store, frontier)
             flat, lens = _subsample_batch(rng, frontier, neigh, fanout)
-        flat = flat.astype(np.int64, copy=False)
-        local, next_nodes = _reindex(frontier, flat)
-        rows = np.repeat(np.arange(len(frontier)), lens)
-        offs = np.concatenate([[0], np.cumsum(lens)[:-1]])
-        cols = np.arange(len(flat)) - np.repeat(offs, lens)
-        nbr = np.zeros((len(frontier), fanout), dtype=np.int32)
-        mask = np.zeros((len(frontier), fanout), dtype=np.float32)
-        nbr[rows, cols] = local
-        mask[rows, cols] = 1.0
-        blocks_rev.append(LayerBlock(nbr=nbr, mask=mask, num_dst=len(frontier)))
+        block, next_nodes = _build_level(frontier, flat, lens, fanout)
+        blocks_rev.append(block)
         levels.append(next_nodes)
 
     node_vids = levels[-1]

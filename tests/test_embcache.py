@@ -1,0 +1,123 @@
+"""Device-DRAM page cache: hit/miss accounting, LRU eviction, and — the
+part that matters for mutable-graph serving — write-hook invalidation
+across every mutation path (unit updates, embedding RMWs, page splits,
+device growth/relocation)."""
+import numpy as np
+
+from repro.store.blockdev import BlockDevice
+from repro.store.embcache import EmbeddingPageCache
+from repro.store.graphstore import GraphStore
+
+
+def _twin_stores(seed=0, n=300, e=2500, feat=24, h_threshold=8,
+                 cache_pages=4096, num_pages=1 << 14):
+    """Two identical stores; only the first gets a page cache."""
+    rng = np.random.default_rng(seed)
+    src = rng.zipf(1.4, e) % n
+    dst = rng.integers(0, n, e)
+    edges = np.stack([dst, src], axis=1).astype(np.int64)
+    emb = rng.standard_normal((n, feat)).astype(np.float32)
+    stores = []
+    for _ in range(2):
+        gs = GraphStore(BlockDevice(num_pages), h_threshold=h_threshold)
+        gs.update_graph(edges, emb)
+        stores.append(gs)
+    cached, plain = stores
+    cached.attach_cache(EmbeddingPageCache(cache_pages))
+    return cached, plain, n
+
+
+def test_cached_reads_match_and_hit_counters_advance():
+    cached, plain, n = _twin_stores()
+    rng = np.random.default_rng(1)
+    vids = rng.integers(0, n, 64)
+    np.testing.assert_array_equal(cached.get_embeds(vids),
+                                  plain.get_embeds(vids))
+    st = cached.cache.stats
+    assert st.misses > 0 and st.hits == 0          # cold pass: all misses
+    miss0 = st.misses
+    np.testing.assert_array_equal(cached.get_embeds(vids),
+                                  plain.get_embeds(vids))
+    assert st.misses == miss0 and st.hits > 0      # warm pass: all hits
+    assert st.bytes_from_cache > 0
+    assert cached.stats.cache is st                # surfaced via store stats
+
+
+def test_graph_pages_cached_and_batch_reads_match():
+    cached, plain, n = _twin_stores()
+    vids = list(range(n))
+    for _ in range(2):                             # cold then warm
+        got = cached.get_neighbors_batch(vids)
+        want = plain.get_neighbors_batch(vids)
+        for v, (g, w) in enumerate(zip(got, want)):
+            np.testing.assert_array_equal(g, w, err_msg=str(v))
+    assert cached.cache.stats.hits > 0
+
+
+def test_update_embed_invalidates():
+    cached, plain, n = _twin_stores()
+    vids = np.arange(32)
+    cached.get_embeds(vids)                        # warm the cache
+    new_row = np.full(cached.feature_dim, 7.5, np.float32)
+    for gs in (cached, plain):
+        gs.update_embed(5, new_row)
+    inv0 = cached.cache.stats.invalidations
+    assert inv0 > 0                                # RMW dropped its pages
+    np.testing.assert_array_equal(cached.get_embeds(vids),
+                                  plain.get_embeds(vids))
+    np.testing.assert_array_equal(cached.get_embed(5), new_row)
+
+
+def test_mutation_sequence_stays_coherent():
+    """add_edge / delete_edge / delete_vertex / add_vertex interleaved with
+    cached reads: the cached store tracks the plain one exactly."""
+    cached, plain, n = _twin_stores(h_threshold=4)
+    rng = np.random.default_rng(2)
+    vids = list(range(n))
+    for step in range(30):
+        a, b = int(rng.integers(0, n)), int(rng.integers(0, n))
+        op = step % 4
+        for gs in (cached, plain):
+            if op == 0:
+                gs.add_edge(a, b)
+            elif op == 1:
+                gs.delete_edge(a, b)
+            elif op == 2:
+                gs.delete_vertex(a)
+            else:
+                gs.add_vertex(n + step)
+        got = cached.get_neighbors_batch(vids)
+        want = plain.get_neighbors_batch(vids)
+        for v, (g, w) in enumerate(zip(got, want)):
+            np.testing.assert_array_equal(g, w,
+                                          err_msg=f"step {step} vid {v}")
+        np.testing.assert_array_equal(cached.get_embeds(np.arange(16)),
+                                      plain.get_embeds(np.arange(16)))
+
+
+def test_lru_eviction_bounded_and_correct():
+    cached, plain, n = _twin_stores(cache_pages=4)
+    rng = np.random.default_rng(3)
+    for _ in range(6):
+        vids = rng.integers(0, n, 40)
+        np.testing.assert_array_equal(cached.get_embeds(vids),
+                                      plain.get_embeds(vids))
+    assert len(cached.cache) <= 4
+    assert cached.cache.stats.evictions > 0
+
+
+def test_device_grow_relocation_invalidates_everything():
+    """_grow relocates the embedding span to new LPNs; stale cached pages
+    must not survive it."""
+    cached, plain, n = _twin_stores(num_pages=16, n=40, e=200, feat=24)
+    vids = np.arange(20)
+    cached.get_embeds(vids)                        # populate the cache
+    pages0 = cached.dev.num_pages
+    k = 0
+    while cached.dev.num_pages == pages0:          # force front-alloc growth
+        for gs in (cached, plain):
+            gs.add_vertex(1000 + k)
+        k += 1
+        assert k < 20000, "device never grew"
+    np.testing.assert_array_equal(cached.get_embeds(vids),
+                                  plain.get_embeds(vids))

@@ -1,9 +1,16 @@
-"""RoP transport: serialization round-trips (hypothesis), channel mechanics."""
+"""RoP transport: serialization round-trips (hypothesis), channel mechanics,
+multi-queue submission/completion rings, rolling per-method server stats."""
+import threading
+
 import numpy as np
+import pytest
 
 from _hyp import given, settings, st
 
-from repro.rpc import serialize, deserialize, PCIeChannel, RPCServer, RPCClient
+from repro.rpc import (serialize, deserialize, PCIeChannel, RPCServer,
+                       RPCClient, MultiQueueRoP, AsyncRPCClient,
+                       QueueFullError)
+from repro.rpc.server import _RECENT_WINDOW
 
 
 prims = st.one_of(st.none(), st.booleans(), st.integers(-2**31, 2**31 - 1),
@@ -45,18 +52,115 @@ def test_channel_counts_bytes_and_doorbell():
     assert ch.stats.bytes_moved == len(pkt)
 
 
+class _Svc:
+    def boom(self):
+        raise ValueError("nope")
+
+    def ok(self, x):
+        return x + 1
+
+    def stats(self):
+        return {"custom": 1}
+
+
 def test_rpc_error_propagation():
-    class Svc:
-        def boom(self):
-            raise ValueError("nope")
-
-        def ok(self, x):
-            return x + 1
-
-    client = RPCClient(RPCServer(Svc()))
+    client = RPCClient(RPCServer(_Svc()))
     assert client.call("ok", x=41) == 42
     try:
         client.call("boom")
         assert False
     except RuntimeError as e:
         assert "nope" in str(e)
+
+
+def test_rpc_error_carries_device_traceback():
+    client = RPCClient(RPCServer(_Svc()))
+    with pytest.raises(RuntimeError) as ei:
+        client.call("boom")
+    msg = str(ei.value)
+    assert "device traceback" in msg and "Traceback" in msg
+    assert "ValueError" in msg                  # the device-side frame info
+
+
+def test_method_stats_bounded_rolling():
+    server = RPCServer(_Svc())
+    client = RPCClient(server)
+    for i in range(_RECENT_WINDOW + 40):
+        client.call("ok", x=i)
+    with pytest.raises(RuntimeError):
+        client.call("boom")
+    ms = server.method_stats["ok"]
+    assert ms.calls == _RECENT_WINDOW + 40      # totals keep counting
+    assert len(ms.recent_s) == _RECENT_WINDOW   # window stays bounded
+    assert server.method_stats["boom"].errors == 1
+    assert not hasattr(server, "call_log")      # the unbounded log is gone
+    snap = server.stats_snapshot()
+    assert snap["ok"]["recent_n"] == _RECENT_WINDOW
+    assert snap["ok"]["total_s"] >= 0.0
+
+
+def test_stats_rpc_injects_rolling_method_stats():
+    client = RPCClient(RPCServer(_Svc()))
+    client.call("ok", x=1)
+    out = client.call("stats")
+    assert out["custom"] == 1
+    assert out["rpc"]["ok"]["calls"] == 1       # injected by the dispatcher
+
+
+# --------------------------------------------------------------- multi-queue
+def test_multiqueue_out_of_order_completion_and_tracking():
+    rop = MultiQueueRoP(n_queues=2, depth=8)
+    a = rop.submit(0, b"pkt-a", method="x")
+    b = rop.submit(1, b"pkt-b", method="y")
+    assert rop.depth_in_flight == 2
+    # device drains round-robin across queues
+    got = [rop.pop_submission(timeout=0) for _ in range(2)]
+    assert {g[1] for g in got} == {a, b}
+    assert rop.pop_submission(timeout=0) is None
+    # completions may land out of submission order
+    rop.post_completion(1, b, b"done-b")
+    rop.post_completion(0, a, b"done-a")
+    assert rop.wait_completion(0, a) == b"done-a"
+    assert rop.wait_completion(1, b) == b"done-b"
+    assert rop.depth_in_flight == 0
+    st = rop.stats_snapshot()
+    assert st["queues"][0]["submitted"] == 1
+    assert st["queues"][1]["completed"] == 1
+
+
+def test_multiqueue_backpressure():
+    rop = MultiQueueRoP(n_queues=1, depth=2)
+    rop.submit(0, b"1")
+    rop.submit(0, b"2")
+    with pytest.raises(QueueFullError):
+        rop.submit(0, b"3")
+    assert rop.pairs[0].stats.rejected == 1
+
+
+def test_async_client_against_device_thread():
+    """Many concurrent logical clients against one device poll loop."""
+    rop = MultiQueueRoP(n_queues=3, depth=16)
+    server = RPCServer(_Svc())
+    stop = threading.Event()
+
+    def device():
+        while not stop.is_set():
+            got = rop.pop_submission(timeout=0.02)
+            if got is not None:
+                qid, cmd_id, packet = got
+                rop.post_completion(qid, cmd_id, server.handle(packet))
+
+    th = threading.Thread(target=device, daemon=True)
+    th.start()
+    try:
+        clients = [AsyncRPCClient(rop, q) for q in range(3)]
+        cmds = [(c, c.submit("ok", x=i * 10 + j))
+                for j in range(4) for i, c in enumerate(clients)]
+        results = [c.result(cid, timeout=30) for c, cid in cmds]
+        assert results == [i * 10 + j + 1
+                           for j in range(4) for i in range(3)]
+        with pytest.raises(RuntimeError, match="device traceback"):
+            clients[0].call("boom", timeout=30)
+    finally:
+        stop.set()
+        th.join(timeout=5)

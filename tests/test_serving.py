@@ -1,0 +1,352 @@
+"""Concurrent serving runtime: fused-group bit-exactness vs serial
+execution, scheduler QoS mechanics (priorities, deadlines, admission
+backpressure), and mutable-ops-under-load cache coherence."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.service import HolisticGNNService, make_service_dfg
+from repro.core.dfg import DFG
+from repro.core import gnn
+from repro.serve import ServingRuntime, BatchScheduler, AdmissionError
+from repro.serve.batcher import split_service_dfg, sample_group, pad_group
+from repro.store.sampler import sample_batch
+
+
+def _service(seed=0, n=600, e=5000, feat=32, cache_pages=2048):
+    rng = np.random.default_rng(seed)
+    edges = np.stack([rng.integers(0, n, e), rng.zipf(1.4, e) % n],
+                     axis=1).astype(np.int64)
+    emb = rng.standard_normal((n, feat)).astype(np.float32)
+    svc = HolisticGNNService(h_threshold=16, pad_to=32,
+                             cache_pages=cache_pages)
+    svc.store.update_graph(edges, emb)
+    return svc, n
+
+
+def _model_setup(model, feat=32):
+    params = gnn.init_params(model, [feat, 16, 8], seed=1)
+    dfg = make_service_dfg(model, 2, [5, 5]).save()
+    weights = {k: v for k, v in
+               gnn.dfg_feeds(model, params, None, []).items() if k != "H"}
+    return dfg, weights
+
+
+# ------------------------------------------------------------------ batcher
+def test_split_service_dfg():
+    dfg = make_service_dfg("gcn", 2, [5, 5])
+    prog = split_service_dfg(dfg)
+    assert prog is not None
+    assert prog.fanouts == [5, 5]
+    assert len(prog.feed_refs) == 5                  # H + 2 * (nbr, mask)
+    assert "Batch" not in prog.model._ins and "Seed" not in prog.model._ins
+    assert all(r in prog.model._ins for r in prog.feed_refs)
+    # model-only DFG (no BatchPre) is not batchable
+    assert split_service_dfg(gnn.build_gcn_dfg(2)) is None
+
+
+def test_sample_group_matches_solo_sampling():
+    svc, n = _service()
+    rng = np.random.default_rng(3)
+    targets = [rng.integers(0, n, s) for s in (8, 3, 1, 8)]
+    seeds = [11, 12, 13, 14]
+    grp, slices = sample_group(svc.store, targets, seeds, [5, 5])
+    assert [s[1] for s in slices] == [8, 3, 1, 8]
+    for r, (t, s) in enumerate(zip(targets, seeds)):
+        solo = sample_batch(svc.store, t, [5, 5],
+                            rng=np.random.default_rng(s))
+        off, nt = slices[r]
+        # target-level rows of the composed deepest-to-shallowest stack
+        np.testing.assert_array_equal(
+            solo.layers[-1].mask, grp.layers[-1].mask[off: off + nt])
+        # per-request node vids survive composition (scattered, not reordered)
+        assert set(solo.node_vids.tolist()) <= set(grp.node_vids.tolist())
+
+
+def test_pad_group_buckets_are_geometric():
+    from repro.serve.batcher import _bucket
+    svc, n = _service()
+    grp, _ = sample_group(svc.store, [np.arange(8)], [0], [5, 5])
+    padded = pad_group(grp, 32)
+    for dim in ([padded.num_nodes] +
+                [b.nbr.shape[0] for b in padded.layers]):
+        assert dim >= 32 and _bucket(dim, 32) == dim   # a bucket fixed point
+    # half-octave ladder: bounded signatures, bounded (<= 33%) waste
+    assert [_bucket(x, 32) for x in (1, 32, 33, 48, 49, 64, 97, 130)] == \
+        [32, 32, 48, 48, 64, 64, 128, 192]
+
+
+# -------------------------------------------------------- fused == serial
+@pytest.mark.parametrize("model", ["gcn", "gin", "ngcf"])
+def test_run_batch_bit_identical_to_serial(model):
+    svc, n = _service()
+    dfg, weights = _model_setup(model)
+    rng = np.random.default_rng(5)
+    reqs = [{"targets": rng.integers(0, n, sz).tolist(), "seed": 50 + i}
+            for i, sz in enumerate([8, 3, 8, 1, 16])]
+    fused = svc.run_batch(dfg, reqs, weights=weights, jit=True)
+    for r, f in zip(reqs, fused):
+        nt = len(r["targets"])
+        serial = svc.run(dfg, r["targets"], weights=weights,
+                         seed=r["seed"], jit=True)
+        for k in serial:
+            np.testing.assert_array_equal(serial[k][:nt], f[k][:nt])
+
+
+def test_scheduled_runtime_bit_identical_to_serial():
+    """The acceptance-criteria check at runtime level: a seeded scheduler
+    run produces bit-identical per-request outputs to serial execution."""
+    svc, n = _service()
+    dfg, weights = _model_setup("gcn")
+    rt = ServingRuntime(svc, n_queues=3, max_group=8)
+    rng = np.random.default_rng(6)
+    cmds = []
+    for i in range(6):
+        c = rt.client()
+        targets = rng.integers(0, n, 8).tolist()
+        cmds.append((c, c.submit("run", dfg=dfg, batch=targets,
+                                 weights=weights, seed=i), targets, i))
+    assert rt.pump() == 6
+    assert rt.scheduler.qos.groups >= 1
+    assert rt.scheduler.qos.grouped_requests == 6
+    for c, cid, targets, i in cmds:
+        got = c.result(cid)["Result"]
+        want = svc.run(dfg, targets, weights=weights, seed=i)["Result"]
+        np.testing.assert_array_equal(want[:8], got[:8], err_msg=f"req {i}")
+
+
+def test_scheduler_priorities_schedule_first():
+    svc, n = _service()
+    dfg_a, weights = _model_setup("gcn")
+    dfg_b = make_service_dfg("gcn", 2, [4, 4]).save()   # different program
+    sched = BatchScheduler(svc, max_group=8, batch_window_s=0)
+    order = []
+    def done(tag):
+        return lambda resp: order.append(tag)
+    for i in range(3):
+        sched.submit(dfg=dfg_a, batch=[i], weights=weights, seed=i,
+                     priority=0, on_done=done(f"bulk{i}"))
+    sched.submit(dfg=dfg_b, batch=[0], weights=weights, seed=9,
+                 priority=5, on_done=done("urgent"))
+    assert sched.step() == 1                  # high-priority singleton first
+    assert order == ["urgent"]
+    assert sched.step() == 3                  # bulk group coalesces after
+    assert len(order) == 4
+
+
+def test_scheduler_deadline_expiry():
+    svc, n = _service()
+    dfg, weights = _model_setup("gcn")
+    sched = BatchScheduler(svc, batch_window_s=0)
+    got = []
+    sched.submit(dfg=dfg, batch=[1, 2], weights=weights, deadline_s=-0.001,
+                 on_done=got.append)
+    assert sched.step() == 0                  # expired, nothing executed
+    assert len(got) == 1 and not got[0]["ok"]
+    assert "DeadlineExceeded" in got[0]["error"]
+    assert sched.qos.expired == 1
+
+
+def test_admission_backpressure():
+    svc, n = _service()
+    dfg, weights = _model_setup("gcn")
+    sched = BatchScheduler(svc, max_pending=2)
+    for i in range(2):
+        sched.submit(dfg=dfg, batch=[i], weights=weights,
+                     on_done=lambda r: None)
+    with pytest.raises(AdmissionError):
+        sched.submit(dfg=dfg, batch=[9], weights=weights,
+                     on_done=lambda r: None)
+    assert sched.qos.rejected == 1
+    # through the runtime the rejection becomes an error completion
+    rt = ServingRuntime(svc, max_pending=1)
+    c = rt.client()
+    ids = [c.submit("run", dfg=dfg, batch=[i], weights=weights, seed=i)
+           for i in range(3)]
+    rt.pump()
+    outcomes = []
+    for cid in ids:
+        try:
+            c.result(cid)
+            outcomes.append("ok")
+        except RuntimeError as e:
+            assert "AdmissionError" in str(e)
+            outcomes.append("rejected")
+    assert outcomes.count("rejected") == 2 and outcomes.count("ok") == 1
+
+
+def test_scheduler_error_fans_out_with_traceback():
+    svc, n = _service()
+    dfg, _ = _model_setup("gcn")
+    rt = ServingRuntime(svc)
+    c = rt.client()
+    cid = c.submit("run", dfg=dfg, batch=[1], weights={}, seed=0)  # no weights
+    rt.pump()
+    with pytest.raises(RuntimeError, match="device traceback"):
+        c.result(cid)
+
+
+def test_weights_fingerprint_prevents_wrong_coalescing():
+    svc, n = _service()
+    dfg, weights = _model_setup("gcn")
+    params2 = gnn.init_params("gcn", [32, 16, 8], seed=99)
+    weights2 = {k: v for k, v in
+                gnn.dfg_feeds("gcn", params2, None, []).items() if k != "H"}
+    rt = ServingRuntime(svc, max_group=8)
+    c = rt.client()
+    t = [1, 2, 3]
+    c1 = c.submit("run", dfg=dfg, batch=t, weights=weights, seed=0)
+    c2 = c.submit("run", dfg=dfg, batch=t, weights=weights2, seed=0)
+    rt.pump()
+    assert rt.scheduler.qos.groups == 2       # two groups, not one
+    out1, out2 = c.result(c1)["Result"], c.result(c2)["Result"]
+    np.testing.assert_array_equal(
+        out1[:3], svc.run(dfg, t, weights=weights, seed=0)["Result"][:3])
+    np.testing.assert_array_equal(
+        out2[:3], svc.run(dfg, t, weights=weights2, seed=0)["Result"][:3])
+
+
+def test_weights_registry_equivalence_and_coalescing():
+    """put_weights + weights_ref: device-resident weights give the same
+    results as shipping weights per request, and requests coalesce on ref."""
+    svc, n = _service()
+    dfg, weights = _model_setup("gcn")
+    info = svc.put_weights("m1", weights)
+    assert info["tensors"] == len(weights) and info["bytes"] > 0
+    t = [1, 2, 3]
+    a = svc.run(dfg, t, weights=weights, seed=3)["Result"]
+    b = svc.run(dfg, t, weights_ref="m1", seed=3)["Result"]
+    np.testing.assert_array_equal(a, b)
+    fused = svc.run_batch(dfg, [{"targets": t, "seed": 3}],
+                          weights_ref="m1")[0]["Result"]
+    np.testing.assert_array_equal(a[:3], fused[:3])
+    with pytest.raises(KeyError):
+        svc.run(dfg, t, weights_ref="unregistered")
+    rt = ServingRuntime(svc, max_group=8)
+    c = rt.client()
+    ids = [c.submit("run", dfg=dfg, batch=t, weights_ref="m1", seed=s)
+           for s in range(3)]
+    rt.pump()
+    assert rt.scheduler.qos.groups == 1       # one fused group via the ref
+    for s, cid in enumerate(ids):
+        np.testing.assert_array_equal(
+            c.result(cid)["Result"][:3],
+            svc.run(dfg, t, weights_ref="m1", seed=s)["Result"][:3])
+
+
+def test_qos_telemetry_via_stats_rpc():
+    svc, n = _service()
+    dfg, weights = _model_setup("gcn")
+    rt = ServingRuntime(svc)
+    c = rt.client()
+    for i in range(5):
+        c.submit("run", dfg=dfg, batch=[i, i + 1], weights=weights, seed=i)
+    rt.pump()
+    cid = c.submit("stats")
+    rt.pump()
+    st = c.result(cid)
+    qos = st["qos"]
+    assert qos["completed"] == 5 and qos["queue_depth"] == 0
+    assert qos["p99_latency_s"] >= qos["p50_latency_s"] > 0
+    assert qos["throughput_rps"] > 0 and qos["groups"] >= 1
+    assert st["embcache"]["hits"] + st["embcache"]["misses"] > 0
+    assert "run" in st["rpc"] or "stats" in st["rpc"]
+    # the stats command itself is still in flight while snapshotting
+    assert st["qos"]["transport"]["in_flight"] <= 1
+
+
+# ------------------------------------------------- mutable ops under load
+def test_mutable_ops_under_load_match_serial_reference():
+    """Interleave unit mutations with scheduled run groups (deterministic
+    stepping) and assert every scheduled output is bit-identical to a serial
+    reference service receiving the same operation sequence — the cache
+    invalidation correctness check."""
+    svc, n = _service(cache_pages=512)
+    ref, _ = _service(cache_pages=None)       # twin without cache, serial
+    dfg, weights = _model_setup("gcn")
+    rt = ServingRuntime(svc, n_queues=2, max_group=8)
+    mut_client = rt.client()
+    rng = np.random.default_rng(7)
+    seed_ctr = 0
+    for round_ in range(6):
+        # a batch of concurrent runs...
+        cmds = []
+        cl = rt.client()
+        for _ in range(4):
+            t = rng.integers(0, n, 6).tolist()
+            cmds.append((t, seed_ctr,
+                         cl.submit("run", dfg=dfg, batch=t, weights=weights,
+                                   seed=seed_ctr)))
+            seed_ctr += 1
+        rt.pump()
+        for t, s, cid in cmds:
+            got = cl.result(cid)["Result"]
+            want = ref.run(dfg, t, weights=weights, seed=s)["Result"]
+            np.testing.assert_array_equal(want[:6], got[:6],
+                                          err_msg=f"round {round_}")
+        # ...then mutations through the SAME runtime (sync dispatch path),
+        # mirrored onto the reference store
+        a, b = int(rng.integers(0, n)), int(rng.integers(0, n))
+        row = rng.standard_normal(32).astype(np.float32)
+        mids = [mut_client.submit("add_edge", dst=a, src=b),
+                mut_client.submit("update_embed", vid=a, embed=row),
+                mut_client.submit("delete_vertex", vid=(a + 1) % n)]
+        rt.pump()
+        for mid in mids:
+            mut_client.result(mid)
+        ref.store.add_edge(a, b)
+        ref.store.update_embed(a, row)
+        ref.store.delete_vertex((a + 1) % n)
+    assert svc.store.cache.stats.invalidations > 0
+    assert svc.store.cache.stats.hits > 0
+
+
+def test_mutable_ops_threaded_stress_cache_coherent():
+    """Threaded mode: concurrent clients + live mutations; after quiescing,
+    cached reads must equal device truth."""
+    svc, n = _service(cache_pages=512)
+    dfg, weights = _model_setup("gcn")
+    rt = ServingRuntime(svc, n_queues=4, max_group=8)
+    rt.start()
+    errors = []
+
+    def runner(i):
+        try:
+            cl = rt.client()
+            rng = np.random.default_rng(100 + i)
+            for j in range(4):
+                out = cl.call("run", dfg=dfg,
+                              batch=rng.integers(0, n, 6).tolist(),
+                              weights=weights, seed=i * 10 + j, timeout=120)
+                assert np.isfinite(out["Result"]).all()
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    def mutator():
+        try:
+            cl = rt.client()
+            rng = np.random.default_rng(999)
+            for _ in range(12):
+                cl.call("add_edge", dst=int(rng.integers(0, n)),
+                        src=int(rng.integers(0, n)), timeout=120)
+                cl.call("update_embed", vid=int(rng.integers(0, n)),
+                        embed=rng.standard_normal(32).astype(np.float32),
+                        timeout=120)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=runner, args=(i,)) for i in range(4)]
+    threads.append(threading.Thread(target=mutator))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    rt.stop()
+    assert not errors, errors
+    # quiesced: cache contents must agree with the device
+    vids = np.arange(min(n, 128))
+    warm = svc.store.get_embeds(vids)
+    svc.store.cache.clear()
+    truth = svc.store.get_embeds(vids)
+    np.testing.assert_array_equal(warm, truth)
