@@ -57,11 +57,12 @@ def make_workload(name: str, seed: int = 0):
     return edges, emb, bucket
 
 
-def storage_device():
+def storage_device(*, full_trace: bool = False):
     return BlockDevice(1 << 14, simulate_latency=True,
                        page_read_us=PAGE_READ_US,
                        page_write_us=PAGE_WRITE_US,
-                       command_latency_us=CMD_LATENCY_US)
+                       command_latency_us=CMD_LATENCY_US,
+                       trace_events=full_trace)
 
 
 # --------------------------------------------------- host-stack baseline

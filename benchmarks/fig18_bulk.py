@@ -58,7 +58,7 @@ def run(workloads=("cs", "physics", "road-tx")):
             f"overlapped_frac={max(0.0, hidden)/max(g1-g0, 1e-9):.2f}"))
     # (c) cs time-series from device events
     edges, emb, _ = C.make_workload("cs")
-    gs = GraphStore(C.storage_device(), h_threshold=64)
+    gs = GraphStore(C.storage_device(full_trace=True), h_threshold=64)
     tl = gs.update_graph(edges, emb)
     ev = gs.dev.stats.events
     emb_w = [e for e in ev if e.kind == "write" and e.tag == "embed"]

@@ -1,0 +1,182 @@
+"""Fig. 23 (repo extension) — CSSD-array scale-out sweep.
+
+The paper's §8 scale-out story is an array of CSSDs; this benchmark sweeps
+a ``ShardedGraphStore`` over 1/2/4/8 simulated devices and reports:
+
+  * **batch-preprocessing throughput** (the Fig. 19 workload shape): one
+    ``sample_batch`` per measurement — per hop, ONE queued scatter-read per
+    shard issued concurrently, plus the striped embedding gather.  The
+    sweep uses array-scale flash latencies (per-page flash time dominant,
+    the regime a hundred-billion-edge device actually operates in) so the
+    channel-parallel argument shows up as wall-clock speedup;
+  * **serving throughput** (the Fig. 22 closed-loop shape): N clients in a
+    closed loop against a ServingRuntime whose fused groups sample across
+    the array;
+  * **per-shard IO balance**: min/max read-page ratio across shards — the
+    hash partition should keep the array within a few percent of even.
+
+  PYTHONPATH=src:. python -m benchmarks.fig23_sharded [--smoke]
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from . import common as C
+from repro.core import gnn
+from repro.core.service import HolisticGNNService, make_service_dfg
+from repro.serve import ServingRuntime
+from repro.store import ShardedGraphStore, sample_batch
+from repro.store.blockdev import BlockDevice
+
+# Array-scale device profile: a QLC-class 4 KB random read (200 us raw,
+# 25 us effective across 8 channels ~ 160 MB/s random per device).  Unlike
+# the fig19/fig22 profile (command-latency dominated, the batching
+# argument), here the per-page flash time dominates — that is the regime
+# where adding devices, like adding channels, buys bandwidth.
+PAGE_READ_US = 200.0
+PAGE_WRITE_US = 250.0
+CMD_LATENCY_US = 20.0
+
+
+def shard_devices(n: int) -> list[BlockDevice]:
+    return [BlockDevice(1 << 15, simulate_latency=True,
+                        page_read_us=PAGE_READ_US,
+                        page_write_us=PAGE_WRITE_US,
+                        command_latency_us=CMD_LATENCY_US)
+            for _ in range(n)]
+
+
+def _balance(reads: list[int]) -> str:
+    lo, hi = min(reads), max(reads)
+    return f"balance={lo / hi:.2f}" if hi else "balance=1.00"
+
+
+# ------------------------------------------------- A: batch preprocessing
+def _prep_workload(n, e, feat, seed=0):
+    """Paper-shaped scale-out workload: power-law edges and a FEATURE-HEAVY
+    embedding table (Table 5: embedding tables are 100-700x the edge
+    array), so batch preprocessing is embedding-gather bound — the regime
+    the array actually buys bandwidth in."""
+    rng = np.random.default_rng(seed)
+    edges = np.stack([rng.integers(0, n, e), rng.zipf(1.35, e) % n],
+                     axis=1).astype(np.int64)
+    emb = rng.standard_normal((n, feat)).astype(np.float32)
+    return edges, emb
+
+
+def _prep_sweep(lines, shard_counts, w, batch, fanouts, repeat):
+    n, e, feat = (3000, 16000, 256) if w == "small" else (40000, 120000, 1024)
+    edges, emb = _prep_workload(n, e, feat)
+    targets = np.random.default_rng(0).integers(0, n, batch)
+    base_tp = None
+    for ns in shard_counts:
+        store = ShardedGraphStore(devs=shard_devices(ns), h_threshold=64)
+        store.update_graph(edges, emb)
+        reads0 = [d.stats.read_pages for d in store.devs]
+
+        def prep():
+            return sample_batch(store, targets, list(fanouts),
+                                rng=np.random.default_rng(0), pad_to=64)
+
+        prep()                                          # warm
+        t, _ = C.timeit(prep, repeat=repeat)
+        tp = 1.0 / t                                    # batches / s
+        if base_tp is None:
+            base_tp = tp
+        reads = [d.stats.read_pages - r0
+                 for d, r0 in zip(store.devs, reads0)]
+        lines.append(C.csv_line(
+            f"fig23.prep.{w}.{ns}shard", t,
+            f"batches_per_s={tp:.1f};speedup={tp / base_tp:.2f}x;"
+            + _balance(reads)))
+    return lines
+
+
+# ----------------------------------------------------------- B: serving
+def _serve_sweep(lines, shard_counts, clients, per_client, batch, feat):
+    n, e = 12000, 70000
+    rng = np.random.default_rng(0)
+    edges = np.stack([rng.integers(0, n, e), rng.zipf(1.4, e) % n],
+                     axis=1).astype(np.int64)
+    emb = rng.standard_normal((n, feat)).astype(np.float32)
+    params = gnn.init_params("gcn", [feat, 32, 16], seed=1)
+    dfg = make_service_dfg("gcn", 2, [10, 10]).save()
+    weights = {k: v for k, v in
+               gnn.dfg_feeds("gcn", params, None, []).items() if k != "H"}
+    streams = [[(np.random.default_rng(1000 + c)
+                 .integers(0, n, batch).tolist(), c * 10000 + r)
+                for r in range(per_client)] for c in range(clients)]
+    n_req = clients * per_client
+    base_rps = None
+    for ns in shard_counts:
+        svc = HolisticGNNService(h_threshold=64, pad_to=64,
+                                 devs=shard_devices(ns))
+        svc.store.update_graph(edges, emb)
+        svc.put_weights("fig23", weights)
+        for g in (1, 2, 4, clients):                   # warm jit buckets
+            svc.run_batch(dfg, [{"targets": streams[0][0][0], "seed": 1}
+                                for _ in range(g)], weights_ref="fig23")
+        rt = ServingRuntime(svc, n_queues=min(clients, 8),
+                            max_group=clients, max_pending=256)
+        stubs = [rt.client() for _ in range(clients)]
+        lat: list[float] = []
+        lock = threading.Lock()
+
+        def loop(cid):
+            mine = []
+            for targets, seed in streams[cid]:
+                t0 = time.perf_counter()
+                stubs[cid].call("run", dfg=dfg, batch=targets,
+                                weights_ref="fig23", seed=seed, timeout=600)
+                mine.append(time.perf_counter() - t0)
+            with lock:
+                lat.extend(mine)
+
+        rt.start()
+        try:
+            t0 = time.perf_counter()
+            ths = [threading.Thread(target=loop, args=(c,))
+                   for c in range(clients)]
+            for t in ths:
+                t.start()
+            for t in ths:
+                t.join()
+            wall = time.perf_counter() - t0
+        finally:
+            rt.stop()
+        rps = n_req / wall
+        if base_rps is None:
+            base_rps = rps
+        reads = [d.stats.read_pages for d in svc.store.devs]
+        lines.append(C.csv_line(
+            f"fig23.serve.{clients}c.{ns}shard",
+            float(np.mean(lat)),
+            f"rps={rps:.1f};speedup={rps / base_rps:.2f}x;"
+            f"p95ms={np.percentile(lat, 95) * 1e3:.1f};" + _balance(reads)))
+    return lines
+
+
+def run(smoke: bool = False, shard_counts=(1, 2, 4, 8)):
+    lines: list[str] = []
+    if smoke:
+        shard_counts = (1, 2)
+        prep_args = ("small", 32, [10, 10], 2)
+        serve_args = (4, 3, 8, 64)
+    else:
+        prep_args = ("large", 128, [15, 10], 3)
+        serve_args = (8, 6, 8, 128)
+    _prep_sweep(lines, shard_counts, *prep_args)
+    _serve_sweep(lines, shard_counts, *serve_args)
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for ln in run(smoke=args.smoke):
+        print(ln)

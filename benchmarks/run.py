@@ -3,8 +3,9 @@
   PYTHONPATH=src:. python -m benchmarks.run [--only fig3,fig14,...] [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV (scaffold contract).  ``--smoke``
-runs a CI-sized subset (fig19 batch-prep + fig21 fast-path on the small
-workload) so sampler/engine perf regressions surface at PR time.  The
+runs a CI-sized subset (fig19 batch-prep + fig21 fast-path + fig22 serving
++ fig23 sharding on the small workloads) so sampler/engine/scale-out perf
+regressions surface at PR time.  The
 roofline table (LM archs) reads the dry-run artifacts; run
 ``python -m repro.launch.dryrun --all --both-meshes`` first for §Roofline.
 """
@@ -27,7 +28,7 @@ def main(argv=None) -> None:
     from . import (fig3_breakdown, fig14_end2end, fig15_energy,
                    fig16_pure_inference, fig17_opbreakdown, fig18_bulk,
                    fig19_batchprep, fig20_mutable, fig21_fastpath,
-                   fig22_serving, table5_datasets)
+                   fig22_serving, fig23_sharded, table5_datasets)
     suites = {
         "table5": table5_datasets.run,
         "fig3": fig3_breakdown.run,
@@ -40,12 +41,14 @@ def main(argv=None) -> None:
         "fig20": fig20_mutable.run,
         "fig21": fig21_fastpath.run,
         "fig22": fig22_serving.run,
+        "fig23": fig23_sharded.run,
     }
     if args.smoke:
         suites = {
             "fig19": lambda: fig19_batchprep.run(workloads=("chmleon",)),
             "fig21": lambda: fig21_fastpath.run(smoke=True),
             "fig22": lambda: fig22_serving.run(smoke=True),
+            "fig23": lambda: fig23_sharded.run(smoke=True),
         }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

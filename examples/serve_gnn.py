@@ -32,6 +32,9 @@ def main():
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--model", default="gcn", choices=["gcn", "gin", "ngcf"])
+    ap.add_argument("--shards", type=int, default=1,
+                    help="CSSD array size: the graph is hash-partitioned "
+                         "across N simulated devices (1 = single CSSD)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -40,7 +43,8 @@ def main():
                      1).astype(np.int64)
     emb = rng.standard_normal((n, feat)).astype(np.float32)
 
-    svc = HolisticGNNService(h_threshold=64, pad_to=64, cache_pages=4096)
+    svc = HolisticGNNService(h_threshold=64, pad_to=64, cache_pages=4096,
+                             n_shards=args.shards)
     runtime = ServingRuntime(svc, n_queues=min(args.clients, 8),
                              max_group=16, max_pending=512)
     boot = runtime.client()
@@ -133,6 +137,11 @@ def main():
           f"{stats['store']['pages_l']} L-pages, "
           f"{stats['store']['unit_updates']} unit updates, "
           f"{stats['device']['read_pages']} device page reads")
+    for i, sh in enumerate(stats.get("shards", [])):
+        hr = sh["embcache"]["hit_rate"] if sh["embcache"] else 0.0
+        print(f"  shard {i}: {sh['device']['read_pages']} reads, "
+              f"{sh['device']['written_pages']} writes, "
+              f"cache hit rate {hr:.2f}")
     if errors:
         print(f"{len(errors)} failed requests; first: {errors[0]}")
         raise SystemExit(1)

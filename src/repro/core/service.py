@@ -26,11 +26,25 @@ from . import gnn
 class HolisticGNNService:
     def __init__(self, *, h_threshold: int = 128, pad_to: int = 64,
                  dev: BlockDevice | None = None,
-                 cache_pages: int | None = None):
-        self.store = GraphStore(dev or BlockDevice(), h_threshold=h_threshold)
+                 cache_pages: int | None = None,
+                 n_shards: int = 1, devs: list | None = None):
+        """``n_shards > 1`` (or an explicit ``devs`` device list) backs the
+        service with a hash-partitioned CSSD array (``ShardedGraphStore``)
+        instead of one device — every RPC below is shard-transparent, and
+        sampling stays bit-identical to the single-device store."""
+        if devs is not None or n_shards > 1:
+            if dev is not None:
+                raise ValueError("dev= is single-device only; pass the "
+                                 "array as devs=[...] instead")
+            from ..store.sharded import ShardedGraphStore
+            self.store = ShardedGraphStore(
+                n_shards=None if devs is not None else n_shards,
+                devs=devs, h_threshold=h_threshold)
+        else:
+            self.store = GraphStore(dev or BlockDevice(),
+                                    h_threshold=h_threshold)
         if cache_pages:
-            from ..store.embcache import EmbeddingPageCache
-            self.store.attach_cache(EmbeddingPageCache(cache_pages))
+            self.store.attach_cache_pages(cache_pages)
         self.registry = KernelRegistry()
         self.xbuilder = XBuilder(self.registry)
         for name, fn in gnn.extra_shell_kernels().items():
@@ -179,25 +193,45 @@ class HolisticGNNService:
         return [{k: np.asarray(v)[off: off + n] for k, v in out.items()}
                 for off, n in slices]
 
+    @staticmethod
+    def _device_counters(dev_stats) -> dict:
+        return {"read_pages": dev_stats.read_pages,
+                "written_pages": dev_stats.written_pages,
+                "read_bytes": dev_stats.read_bytes,
+                "written_bytes": dev_stats.written_bytes}
+
     def stats(self):
         """QoS / store / cache / device counters (the `stats` RPC).
 
         The RPC dispatcher injects its own rolling per-method stats under
         ``rpc``; the serving runtime contributes scheduler + transport QoS
-        under ``qos`` via ``qos_provider``.
+        under ``qos`` via ``qos_provider``.  Against a sharded store the
+        ``device``/``embcache`` sections aggregate the array and ``shards``
+        breaks out per-shard cache hit rates and page counters, so
+        operators (and fig23) can read shard balance without poking store
+        internals.
         """
-        dev = self.store.dev.stats
+        st = self.store.stats
+        shards = getattr(self.store, "shards", None)
+        devs = [sh.dev for sh in shards] if shards else [self.store.dev]
         out = {
-            "store": {"pages_h": self.store.stats.pages_h,
-                      "pages_l": self.store.stats.pages_l,
-                      "unit_updates": self.store.stats.unit_updates,
-                      "l_evictions": self.store.stats.l_evictions,
-                      "num_vertices": self.store.num_vertices},
-            "device": {"read_pages": dev.read_pages,
-                       "written_pages": dev.written_pages,
-                       "read_bytes": dev.read_bytes,
-                       "written_bytes": dev.written_bytes},
+            "store": {"pages_h": st.pages_h,
+                      "pages_l": st.pages_l,
+                      "unit_updates": st.unit_updates,
+                      "l_evictions": st.l_evictions,
+                      "num_vertices": self.store.num_vertices,
+                      "n_shards": len(devs)},
+            "device": {k: sum(self._device_counters(d.stats)[k]
+                              for d in devs)
+                       for k in ("read_pages", "written_pages",
+                                 "read_bytes", "written_bytes")},
         }
+        if shards:
+            out["shards"] = [
+                {"device": self._device_counters(sh.dev.stats),
+                 "embcache": (sh.cache.stats.snapshot()
+                              if sh.cache is not None else None)}
+                for sh in shards]
         if self.store.cache is not None:
             out["embcache"] = self.store.cache.stats.snapshot()
         if self.qos_provider is not None:

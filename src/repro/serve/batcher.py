@@ -11,9 +11,11 @@ Pieces:
   * ``sample_group`` — the fused multi-request sampler: per hop, every
     request's frontier joins one concatenated near-storage
     ``sample_neighbors_batch`` call (a single queued scatter-read serves the
-    whole group) with *per-request rng segments*, so each request's sample
-    is bit-identical to a solo run; reindexing stays request-local (no
-    cross-request dedup — that would change sampling semantics);
+    whole group — one PER SHARD, fanned out concurrently, when the store is
+    a ``ShardedGraphStore`` array) with *per-request rng segments*, so each
+    request's sample is bit-identical to a solo run; reindexing stays
+    request-local (no cross-request dedup — that would change sampling
+    semantics);
   * prefix-preserving composition — per-request blocks are merged into one
     block-diagonal super-batch whose level lists keep the engine's
     prefix-ordering invariant (level k is a prefix of level k+1), so

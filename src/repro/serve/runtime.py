@@ -11,6 +11,13 @@ Command routing mirrors the device firmware split:
     dispatches immediately through the ordinary RPC server path, so a
     mutable-graph update is never stuck behind a model execution.
 
+The runtime is shard-transparent: against a ``ShardedGraphStore``-backed
+service, a fused group's per-hop sampling fans one scatter-read out to
+every shard concurrently (the store's fetch pool), mutable commands route
+to the owning shard's device (whose ``on_write`` hook invalidates that
+shard's page cache), and the ``stats`` RPC carries per-shard cache + IO
+telemetry next to the scheduler QoS block.
+
 Operating modes:
 
   * **threaded** (``start()``/``stop()``): a dispatcher thread drains the

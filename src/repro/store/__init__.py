@@ -1,8 +1,10 @@
 from .blockdev import BlockDevice, PAGE_BYTES, SLOTS_PER_PAGE
 from .graphstore import GraphStore, preprocess_edges
+from .sharded import ShardedGraphStore, partition_csr
 from .sampler import (sample_batch, sample_batch_ref, pad_batch,
                       SampledBatch, LayerBlock)
 
 __all__ = ["BlockDevice", "PAGE_BYTES", "SLOTS_PER_PAGE", "GraphStore",
+           "ShardedGraphStore", "partition_csr",
            "preprocess_edges", "sample_batch", "sample_batch_ref",
            "pad_batch", "SampledBatch", "LayerBlock"]

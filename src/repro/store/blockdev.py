@@ -11,12 +11,16 @@ pages backed by numpy.  Two address spaces mirror Figure 7 of the paper:
 
 The device records per-operation byte counters and timestamped I/O events
 so benchmarks can reconstruct bandwidth timelines (paper Fig. 18c) and
-write-amplification stats.
+write-amplification stats.  The event log is a bounded ring by default —
+sustained serving traffic must not grow device memory (same argument as
+the RPC server's rolling per-method stats); benchmarks that reconstruct
+full timelines opt into an unbounded trace with ``trace_events=True``.
 """
 from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -24,6 +28,8 @@ import numpy as np
 PAGE_BYTES = 4096
 SLOT_DTYPE = np.int32
 SLOTS_PER_PAGE = PAGE_BYTES // 4  # 1024 int32 slots
+
+EVENTS_CAP = 4096                 # default I/O event ring size
 
 
 @dataclass
@@ -41,7 +47,10 @@ class IOStats:
     written_pages: int = 0
     read_bytes: int = 0
     written_bytes: int = 0
-    events: list = field(default_factory=list)
+    # bounded ring: an append-only list would grow without limit under the
+    # serving runtime; ``BlockDevice(trace_events=True)`` swaps in an
+    # unbounded deque for benchmarks that need the full trace
+    events: deque = field(default_factory=lambda: deque(maxlen=EVENTS_CAP))
 
     def record(self, kind: str, lpn: int, nbytes: int, tag: str, t0: float):
         if kind == "read":
@@ -51,6 +60,51 @@ class IOStats:
             self.written_pages += 1
             self.written_bytes += nbytes
         self.events.append(IOEvent(time.perf_counter() - t0, kind, lpn, nbytes, tag))
+
+
+def sleep_us(us: float) -> None:
+    """Wall-clock wait of ``us`` microseconds (simulated device time).
+
+    Millisecond-plus waits use ``time.sleep``; sub-millisecond waits spin
+    on the monotonic clock (sleep() has a multi-10µs scheduler floor that
+    would swamp the simulated page latency with host noise), yielding the
+    GIL at every probe (sleep(0) = sched_yield) so commands in flight on
+    OTHER simulated devices — the shards of a CSSD array — burn their
+    flash time concurrently instead of serializing behind the interpreter
+    lock.
+    """
+    if us <= 0:
+        return
+    if us >= 1000.0:
+        time.sleep(us * 1e-6)
+    else:
+        end = time.perf_counter() + us * 1e-6
+        while time.perf_counter() < end:
+            time.sleep(0)
+
+
+class _LatencyAccount:
+    """Deferred simulated-latency accumulator (see ``defer_latency``)."""
+    __slots__ = ("us",)
+
+    def __init__(self):
+        self.us = 0.0
+
+
+class _DeferCtx:
+    __slots__ = ("dev", "acct")
+
+    def __init__(self, dev):
+        self.dev = dev
+
+    def __enter__(self) -> _LatencyAccount:
+        self.acct = _LatencyAccount()
+        self.dev._defer.acct = self.acct
+        return self.acct
+
+    def __exit__(self, *exc):
+        self.dev._defer.acct = None
+        return False
 
 
 class BlockDevice:
@@ -63,7 +117,7 @@ class BlockDevice:
 
     def __init__(self, num_pages: int = 1 << 14, *, simulate_latency: bool = False,
                  page_read_us: float = 0.0, page_write_us: float = 0.0,
-                 command_latency_us: float = 0.0):
+                 command_latency_us: float = 0.0, trace_events: bool = False):
         self._pages = np.zeros((num_pages, SLOTS_PER_PAGE), dtype=SLOT_DTYPE)
         self._front = 0                 # next free LPN in neighbor space
         self._back = num_pages          # one past last used LPN in embedding space
@@ -71,6 +125,8 @@ class BlockDevice:
         self._lock = threading.Lock()
         self._t0 = time.perf_counter()
         self.stats = IOStats()
+        if trace_events:
+            self.stats.events = deque()        # unbounded full trace
         self.simulate_latency = simulate_latency
         self.page_read_us = page_read_us
         self.page_write_us = page_write_us
@@ -85,6 +141,21 @@ class BlockDevice:
         # write/free (and with the whole device span on _grow relocation) —
         # the device-DRAM page cache hooks its invalidation here.
         self.on_write = None
+        # per-thread deferred-latency slot (see defer_latency)
+        self._defer = threading.local()
+
+    def defer_latency(self):
+        """Context manager: accumulate this thread's simulated latency on
+        this device instead of sleeping, yielding the accumulator.
+
+        The sharded coordinator wraps each shard's fetch in this and then
+        pays ONE ``sleep_us(max(per-shard totals))`` — the devices of an
+        array run their commands concurrently, exactly as the flash
+        channels inside one device do (whose parallelism is modelled the
+        same analytic way).  Thread-local, so a mutation landing from
+        another thread mid-fetch still pays its own latency inline.
+        """
+        return _DeferCtx(self)
 
     # ------------------------------------------------------------------ alloc
     @property
@@ -137,15 +208,11 @@ class BlockDevice:
     # -------------------------------------------------------------------- i/o
     def _maybe_sleep(self, us: float):
         if self.simulate_latency and us > 0:
-            if us >= 1000.0:
-                time.sleep(us * 1e-6)
-            else:
-                # sub-millisecond waits: spin on the monotonic clock —
-                # time.sleep() has a multi-10µs scheduler floor that would
-                # swamp the simulated page latency with host noise.
-                end = time.perf_counter() + us * 1e-6
-                while time.perf_counter() < end:
-                    pass
+            acct = getattr(self._defer, "acct", None)
+            if acct is not None:
+                acct.us += us                 # deferred: coordinator pays
+                return
+            sleep_us(us)
 
     def write_page(self, lpn: int, data: np.ndarray, *, tag: str = "graph") -> None:
         assert data.dtype == SLOT_DTYPE and data.shape == (SLOTS_PER_PAGE,)

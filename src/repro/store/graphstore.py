@@ -51,6 +51,124 @@ def _l_meta_off(i: int) -> int:
     return SLOTS_PER_PAGE - 4 - 2 * i
 
 
+def neighbors_from_plan(vids_arr: np.ndarray, block, desc) -> list[np.ndarray]:
+    """Materialise per-vid neighbor arrays out of a fetched plan.
+
+    Shared back half of the batched GetNeighbors: the single-device store
+    feeds it one ``_fetch_plan`` result; the sharded coordinator feeds it a
+    recomposition of N per-shard plans (descriptor rows re-based into the
+    concatenated block) — either way the output equals ``get_neighbors``
+    per vid.
+    """
+    out: list = [None] * len(vids_arr)
+    for pos, d in enumerate(desc):
+        if d is None:
+            out[pos] = np.empty(0, dtype=SLOT_DTYPE)
+        elif d[0] == "L":
+            _, row, start, end = d
+            out[pos] = block[row, start:end].copy()
+        else:
+            _, rows, counts = d
+            got = [block[r, _H_DATA: _H_DATA + int(c)]
+                   for r, c in zip(rows, counts)]
+            out[pos] = (np.concatenate(got) if got
+                        else np.empty(0, dtype=SLOT_DTYPE))
+    return out
+
+
+def select_from_plan(vids_arr: np.ndarray, block, desc, fanout: int,
+                     rng: np.random.Generator | None = None, *,
+                     segments=None, rngs=None):
+    """Fanout selection over a fetched plan — the back half of the fused
+    near-storage sample (see ``GraphStore.sample_neighbors_batch``).
+
+    A pure function of (plan, rng): hubs are Floyd-sampled BY INDEX against
+    their chain page counts, uniform draws are consumed one ``fanout``
+    block per over-full vertex in frontier order (or per-request segment
+    order when ``segments``/``rngs`` are given).  The sharded coordinator
+    recomposes N per-shard plans into one global (block, desc) and runs
+    this same code, which is why an N-shard sample is bit-identical to the
+    single-device sample under the same seed.
+    """
+    flatb = block.reshape(-1) if block is not None else None
+    npos = len(vids_arr)
+
+    # numeric plan arrays (pure-int loop; all math below is vector)
+    lens = np.zeros(npos, dtype=np.int64)
+    is_l = np.zeros(npos, dtype=bool)
+    base = np.zeros(npos, dtype=np.int64)   # L: flat addr of chunk
+    for pos, d in enumerate(desc):
+        if d is None:
+            continue
+        if d[0] == "L":
+            is_l[pos] = True
+            lens[pos] = d[3] - d[2]
+            base[pos] = d[1] * SLOTS_PER_PAGE + d[2]
+        else:
+            lens[pos] = int(d[2].sum())
+    over = lens > fanout
+    lens_sel = np.where(lens == 0, 1, np.minimum(lens, fanout))
+    out_offs = np.concatenate([[0], np.cumsum(lens_sel)[:-1]])
+    sel = np.empty(int(lens_sel.sum()), dtype=SLOT_DTYPE)
+
+    # degenerate rows: self-loop
+    empty = lens == 0
+    sel[out_offs[empty]] = vids_arr[empty]
+
+    # under-full rows copied through (one flat gather; H multi-chunk
+    # under-full rows are rare — degree <= fanout but H-mapped)
+    for cls in np.nonzero(~over & ~empty & ~is_l)[0]:
+        _, rows, counts = desc[cls]
+        o, c0 = int(out_offs[cls]), 0
+        for r, c in zip(rows, counts):
+            sel[o + c0: o + c0 + int(c)] = \
+                block[r, _H_DATA: _H_DATA + int(c)]
+            c0 += int(c)
+    ul = ~over & ~empty & is_l
+    if ul.any():
+        lv = lens[ul]
+        src = np.repeat(base[ul], lv) + _ramp(lv)
+        sel[np.repeat(out_offs[ul], lv) + _ramp(lv)] = flatb[src]
+
+    # over-full rows: Floyd by index, vectorized across the frontier
+    # (k steps of whole-row vector math, no per-vertex python)
+    n_over = int(over.sum())
+    if n_over:
+        if rngs is not None:
+            bounds = np.concatenate([[0], np.cumsum(segments)])
+            parts = [g.random(int(over[bounds[s]: bounds[s + 1]]
+                                  .sum()) * fanout)
+                     for s, g in enumerate(rngs)]
+            u = np.concatenate(parts).reshape(-1, fanout)
+        else:
+            u = rng.random(n_over * fanout).reshape(-1, fanout)
+        m_arr = lens[over]
+        idx = np.empty((n_over, fanout), dtype=np.int64)
+        for j2 in range(fanout):
+            t = (u[:, j2] * (m_arr - fanout + j2 + 1)).astype(np.int64)
+            if j2:
+                dup = (idx[:, :j2] == t[:, None]).any(axis=1)
+                t = np.where(dup, m_arr - fanout + j2, t)
+            idx[:, j2] = t
+        over_pos = np.nonzero(over)[0]
+        ol = over & is_l
+        if ol.any():
+            ol_in_over = is_l[over_pos]
+            src = base[ol][:, None] + idx[ol_in_over]
+            dst = out_offs[ol][:, None] + np.arange(fanout)[None, :]
+            sel[dst.reshape(-1)] = flatb[src.reshape(-1)]
+        for r_i, cls in enumerate(over_pos):
+            if is_l[cls]:
+                continue
+            _, rows, counts = desc[cls]      # hub: index by page
+            cum = np.cumsum(counts)
+            p = np.searchsorted(cum, idx[r_i], side="right")
+            off = idx[r_i] - np.where(p > 0, cum[p - 1], 0)
+            o = int(out_offs[cls])
+            sel[o: o + fanout] = block[rows[p], _H_DATA + off]
+    return sel, lens_sel
+
+
 @dataclass
 class BulkTimeline:
     """Timestamped phase spans of a bulk ingest (for Fig. 18)."""
@@ -106,6 +224,14 @@ class GraphStore:
         self._cache_graph = cache_graph_pages
         self.stats.cache = cache.stats
         self.dev.on_write = cache.invalidate
+
+    def attach_cache_pages(self, capacity_pages: int,
+                           **kw) -> None:
+        """Attach a fresh device-DRAM page cache of ``capacity_pages``
+        (uniform entry point with the sharded store, which splits the
+        budget across its shards' devices)."""
+        from .embcache import EmbeddingPageCache
+        self.attach_cache(EmbeddingPageCache(capacity_pages), **kw)
 
     def _read_pages_cached(self, lpns, tag: str) -> np.ndarray:
         if self.cache is not None and (tag == "embed" or self._cache_graph):
@@ -348,23 +474,19 @@ class GraphStore:
         Returns a list of neighbor arrays aligned with ``vids`` (empty array
         for unknown VIDs), each equal to ``get_neighbors(vid)``.
         """
+        vids_arr = np.asarray(vids, dtype=np.int64).reshape(-1)
+        block, desc = self.fetch_plan(vids_arr)
+        return neighbors_from_plan(vids_arr, block, desc)
+
+    def fetch_plan(self, vids_arr):
+        """Locked plan fetch over vids this store holds — the *fetch* phase
+        of the batched queries (one queued scatter-read).  The sharded
+        coordinator calls this once per shard, concurrently; the returned
+        block is a snapshot copy, so selection can run outside the lock.
+        """
         with self._lock:
-            vids_arr = np.asarray(vids, dtype=np.int64).reshape(-1)
-            block, desc = self._fetch_plan(vids_arr)
-            out: list = [None] * len(vids_arr)
-            for pos, d in enumerate(desc):
-                if d is None:
-                    out[pos] = np.empty(0, dtype=SLOT_DTYPE)
-                elif d[0] == "L":
-                    _, row, start, end = d
-                    out[pos] = block[row, start:end].copy()
-                else:
-                    _, rows, counts = d
-                    got = [block[r, _H_DATA: _H_DATA + int(c)]
-                           for r, c in zip(rows, counts)]
-                    out[pos] = (np.concatenate(got) if got
-                                else np.empty(0, dtype=SLOT_DTYPE))
-            return out
+            return self._fetch_plan(
+                np.asarray(vids_arr, dtype=np.int64).reshape(-1))
 
     def sample_neighbors_batch(self, vids, fanout: int,
                                rng: np.random.Generator | None = None, *,
@@ -389,86 +511,10 @@ class GraphStore:
         Returns ``(sel, lens)``: selected neighbors flattened row-major and
         per-vid selection lengths (empty/unknown vids yield a self-loop).
         """
-        with self._lock:
-            vids_arr = np.asarray(vids, dtype=np.int64).reshape(-1)
-            block, desc = self._fetch_plan(vids_arr)
-            flatb = block.reshape(-1) if block is not None else None
-            npos = len(vids_arr)
-
-            # numeric plan arrays (pure-int loop; all math below is vector)
-            lens = np.zeros(npos, dtype=np.int64)
-            is_l = np.zeros(npos, dtype=bool)
-            base = np.zeros(npos, dtype=np.int64)   # L: flat addr of chunk
-            for pos, d in enumerate(desc):
-                if d is None:
-                    continue
-                if d[0] == "L":
-                    is_l[pos] = True
-                    lens[pos] = d[3] - d[2]
-                    base[pos] = d[1] * SLOTS_PER_PAGE + d[2]
-                else:
-                    lens[pos] = int(d[2].sum())
-            over = lens > fanout
-            lens_sel = np.where(lens == 0, 1, np.minimum(lens, fanout))
-            out_offs = np.concatenate([[0], np.cumsum(lens_sel)[:-1]])
-            sel = np.empty(int(lens_sel.sum()), dtype=SLOT_DTYPE)
-
-            # degenerate rows: self-loop
-            empty = lens == 0
-            sel[out_offs[empty]] = vids_arr[empty]
-
-            # under-full rows copied through (one flat gather; H multi-chunk
-            # under-full rows are rare — degree <= fanout but H-mapped)
-            for cls in np.nonzero(~over & ~empty & ~is_l)[0]:
-                _, rows, counts = desc[cls]
-                o, c0 = int(out_offs[cls]), 0
-                for r, c in zip(rows, counts):
-                    sel[o + c0: o + c0 + int(c)] = \
-                        block[r, _H_DATA: _H_DATA + int(c)]
-                    c0 += int(c)
-            ul = ~over & ~empty & is_l
-            if ul.any():
-                lv = lens[ul]
-                src = np.repeat(base[ul], lv) + _ramp(lv)
-                sel[np.repeat(out_offs[ul], lv) + _ramp(lv)] = flatb[src]
-
-            # over-full rows: Floyd by index, vectorized across the frontier
-            # (k steps of whole-row vector math, no per-vertex python)
-            n_over = int(over.sum())
-            if n_over:
-                if rngs is not None:
-                    bounds = np.concatenate([[0], np.cumsum(segments)])
-                    parts = [g.random(int(over[bounds[s]: bounds[s + 1]]
-                                          .sum()) * fanout)
-                             for s, g in enumerate(rngs)]
-                    u = np.concatenate(parts).reshape(-1, fanout)
-                else:
-                    u = rng.random(n_over * fanout).reshape(-1, fanout)
-                m_arr = lens[over]
-                idx = np.empty((n_over, fanout), dtype=np.int64)
-                for j2 in range(fanout):
-                    t = (u[:, j2] * (m_arr - fanout + j2 + 1)).astype(np.int64)
-                    if j2:
-                        dup = (idx[:, :j2] == t[:, None]).any(axis=1)
-                        t = np.where(dup, m_arr - fanout + j2, t)
-                    idx[:, j2] = t
-                over_pos = np.nonzero(over)[0]
-                ol = over & is_l
-                if ol.any():
-                    ol_in_over = is_l[over_pos]
-                    src = base[ol][:, None] + idx[ol_in_over]
-                    dst = out_offs[ol][:, None] + np.arange(fanout)[None, :]
-                    sel[dst.reshape(-1)] = flatb[src.reshape(-1)]
-                for r_i, cls in enumerate(over_pos):
-                    if is_l[cls]:
-                        continue
-                    _, rows, counts = desc[cls]      # hub: index by page
-                    cum = np.cumsum(counts)
-                    p = np.searchsorted(cum, idx[r_i], side="right")
-                    off = idx[r_i] - np.where(p > 0, cum[p - 1], 0)
-                    o = int(out_offs[cls])
-                    sel[o: o + fanout] = block[rows[p], _H_DATA + off]
-            return sel, lens_sel
+        vids_arr = np.asarray(vids, dtype=np.int64).reshape(-1)
+        block, desc = self.fetch_plan(vids_arr)
+        return select_from_plan(vids_arr, block, desc, fanout, rng,
+                                segments=segments, rngs=rngs)
 
     def _l_locate_batch(self, block, row_of, l_pos, lq, k, miss, desc) -> None:
         """Vectorized L-page meta scan over every fetched page at once.
@@ -490,12 +536,46 @@ class GraphStore:
         vid_slot = _L_NNODES - 2 - 2 * j                # meta slot of node j
         vids_m = block[rows[:, None], vid_slot[None, :]].astype(np.int64)
         offs_m = block[rows[:, None], vid_slot[None, :] - 1].astype(np.int64)
-        live = (j[None, :] < n_m[:, None]) & (vids_m >= 0)
+        in_meta = j[None, :] < n_m[:, None]
+        live = in_meta & (vids_m >= 0)
 
-        # chunk ends: valid boundaries flattened with a per-row key so one
-        # global sort + one searchsorted serve every query.
+        # chunk ends.  Fast path: bulk-packed pages keep offsets strictly
+        # ascending in meta order (no tombstones, no relocations), so node
+        # j's chunk ends where node j+1's begins — no sort needed.  Any
+        # mutated page (unit updates relocate chunks and leave tombstones)
+        # falls back to the general boundary sort below.
+        clean = np.all((~in_meta[:, 1:])
+                       | (offs_m[:, 1:] > offs_m[:, :-1]), axis=1) \
+            if nmax > 1 else np.ones(len(rows), dtype=bool)
+        clean &= np.all(live == in_meta, axis=1)
+        if clean.all():
+            rown, coln = np.nonzero(live)
+            flat_vids = vids_m[rown, coln]
+            if not np.any(flat_vids[1:] < flat_vids[:-1]):
+                ends_m = np.concatenate(
+                    [offs_m[:, 1:], np.zeros((len(rows), 1), np.int64)],
+                    axis=1)
+                last = np.maximum(n_m - 1, 0)
+                ends_m[np.arange(len(rows)), last] = dlen_m
+                flat_offs = offs_m[rown, coln]
+                flat_ends = ends_m[rown, coln]
+                q = np.searchsorted(flat_vids, lq)
+                qc = np.clip(q, 0, max(len(flat_vids) - 1, 0))
+                found = (~miss) & (len(flat_vids) > 0) \
+                    & (flat_vids[qc] == lq)
+                prow = rown[qc]
+                start = flat_offs[qc]
+                end = flat_ends[qc]
+                for i, pos in enumerate(l_pos):
+                    if found[i]:
+                        desc[pos] = ("L", int(rows[prow[i]]), int(start[i]),
+                                     int(end[i]))
+                return
+
+        # general path: valid boundaries flattened with a per-row key so
+        # one global sort + one searchsorted serve every query.
         big = SLOTS_PER_PAGE + 1
-        bound_ok = (j[None, :] < n_m[:, None]) & (offs_m <= dlen_m[:, None])
+        bound_ok = in_meta & (offs_m <= dlen_m[:, None])
         bkey = np.where(bound_ok,
                         np.arange(len(rows))[:, None] * big + offs_m,
                         np.iinfo(np.int64).max)
@@ -874,21 +954,27 @@ class GraphStore:
             for nbr in nbrs:
                 if int(nbr) != vid:
                     self._remove_neighbor(int(nbr), vid)
-            kind = self.gmap.pop(vid, None)
-            if kind == "H":
-                lpn, _ = self.h_table.pop(vid)
-                self.h_chain.pop(vid, None)
-                while lpn >= 0:
-                    page = self.dev.read_page(lpn)
-                    nxt = int(page[_H_NEXT])
-                    self.dev.free_page(lpn)
-                    lpn = nxt
-            elif kind == "L":
-                hit = self._l_lookup_page(vid)
-                if hit is not None:
-                    lpn, page = hit
-                    self._l_remove_node(page, lpn, vid)
-            self._free_vids.append(vid)
+            self._drop_vertex_pages(vid)
+
+    def _drop_vertex_pages(self, vid: int) -> None:
+        """Release ``vid``'s own mapping + pages (not its neighbors' backlinks
+        — the sharded coordinator removes those on each neighbor's owning
+        shard before calling this on the owner)."""
+        kind = self.gmap.pop(vid, None)
+        if kind == "H":
+            lpn, _ = self.h_table.pop(vid)
+            self.h_chain.pop(vid, None)
+            while lpn >= 0:
+                page = self.dev.read_page(lpn)
+                nxt = int(page[_H_NEXT])
+                self.dev.free_page(lpn)
+                lpn = nxt
+        elif kind == "L":
+            hit = self._l_lookup_page(vid)
+            if hit is not None:
+                lpn, page = hit
+                self._l_remove_node(page, lpn, vid)
+        self._free_vids.append(vid)
 
     def update_embed(self, vid: int, embed: np.ndarray) -> None:
         """UpdateEmbed(VID, Embed): in-place page RMW of one feature row."""

@@ -23,6 +23,15 @@ Two implementations share the exact sampling semantics:
     first-seen reindex instead of the per-neighbor dict walk;
   * ``sample_batch_ref``  — the original per-vertex loop, kept as the oracle.
 
+Each hop is an explicit plan -> fetch -> build pipeline: the store's fused
+``sample_neighbors_batch`` plans the frontier from its in-DRAM mapping
+tables, fetches every needed page (ONE queued scatter-read on a single
+device; one PER SHARD, issued concurrently, on a ``ShardedGraphStore``
+array) and Floyd-selects by index; ``_build_level`` then recomposes the
+global frontier for the next hop.  The store keeps the fanout draws in
+per-vertex frontier order, so single-device, sharded, and reference
+samplers are bit-identical under the same seed.
+
 With the same rng both produce bit-identical blocks/vids/embeddings (the
 fast path draws the per-vertex fanout subsamples in the same order), which
 the fast-path tests assert.

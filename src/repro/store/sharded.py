@@ -1,0 +1,443 @@
+"""ShardedGraphStore — hash-partitioned coordinator over a CSSD array.
+
+The paper serves a hundred-billion-edge graph from ONE CSSD and argues
+scale-out as an array of such devices (§8; Fig. 18's channel-parallel
+bandwidth argument, one level up).  This coordinator makes that concrete:
+the graph lives partitioned across N BlockDevices, each behind its own
+partition-local ``GraphStore`` (mapping tables + page layout + optional
+device-DRAM page cache), and every batched query fans out so each shard
+pays its command latency *concurrently* — the same amortisation the flash
+channels give inside one device.
+
+Partitioning is by vertex hash (``vid % n_shards``):
+
+  * **adjacency** — vid's neighbor chunks live on shard ``vid % N``, keyed
+    by the GLOBAL vid.  Neighbor values are global vids, so no translation
+    table exists anywhere; the owned-vid subset ``{s, s+N, ...}`` is still
+    ascending, so the shard-local L-page range search is unchanged;
+  * **embeddings** — vid's feature row is row ``vid // N`` of its shard's
+    sequential embedding space.  Round-robin striping keeps each shard's
+    row space dense, so the shard-local address math (row -> page span) is
+    exactly the single-device math;
+  * **mutable ops** (unit updates, bulk ingest, embed RMWs) route to the
+    owning shard; each device's ``on_write`` hook invalidates that shard's
+    page cache, precisely as on one device.
+
+Read-side batched queries run in three explicit phases:
+
+  plan   — partition the query positions by owning shard (pure table math,
+           no I/O);
+  fetch  — ONE locked scatter-read per shard (``GraphStore.fetch_plan`` /
+           ``get_embeds``); each shard's simulated flash + command time is
+           deferred and the array pays a single wait equal to the slowest
+           shard, the same analytic concurrency model as the flash
+           channels inside one device (divide, don't sum);
+  build  — per-shard plans are recomposed into one global (block, desc) —
+           descriptor rows re-based into the concatenated block — and fed
+           to the SAME ``select_from_plan``/``neighbors_from_plan`` code
+           the single-device store runs.
+
+Because the recomposed plan is position-identical to the single-device
+plan (same per-vid neighbor lists, same order) and the selection consumes
+its rng stream in global frontier order, an N-shard sample is
+**bit-identical** to the 1-device sample under the same seed —
+``tests/test_sharded_store.py`` asserts this for N in {1, 2, 4} all the
+way through ``run``/``run_batch``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from .blockdev import BlockDevice, sleep_us
+from .graphstore import (BulkTimeline, GraphStore, GraphStoreStats,
+                         neighbors_from_plan, preprocess_edges,
+                         select_from_plan)
+
+
+def partition_csr(indptr: np.ndarray, indices: np.ndarray,
+                  n_shards: int, shard: int):
+    """Mask a global CSR down to the rows shard ``shard`` owns.
+
+    Non-owned rows keep indptr slots with zero degree, so the row index
+    space stays global and ``GraphStore._write_adjacency`` (which skips
+    degree-0 rows) lays out exactly the owned vertices.
+    """
+    n = len(indptr) - 1
+    degrees = np.diff(indptr)
+    own = (np.arange(n) % n_shards) == shard
+    deg_s = np.where(own, degrees, 0)
+    indptr_s = np.concatenate([[0], np.cumsum(deg_s)])
+    row_of = np.repeat(np.arange(n), degrees)
+    return indptr_s, indices[own[row_of]]
+
+
+class _AggCacheStats:
+    """Aggregated view over the shards' per-device cache counters."""
+
+    def __init__(self, shards):
+        self._shards = shards
+
+    def snapshot(self) -> dict:
+        tot = dict.fromkeys(("hits", "misses", "evictions", "invalidations",
+                             "bytes_from_cache", "bytes_from_dev"), 0)
+        for sh in self._shards:
+            snap = sh.cache.stats.snapshot()
+            for k in tot:
+                tot[k] += snap[k]
+        n = tot["hits"] + tot["misses"]
+        tot["hit_rate"] = tot["hits"] / n if n else 0.0
+        return tot
+
+    @property
+    def hit_rate(self) -> float:
+        return self.snapshot()["hit_rate"]
+
+    @property
+    def hits(self) -> int:
+        return self.snapshot()["hits"]
+
+    @property
+    def misses(self) -> int:
+        return self.snapshot()["misses"]
+
+    @property
+    def invalidations(self) -> int:
+        return self.snapshot()["invalidations"]
+
+
+class _ShardedCacheView:
+    """Duck-type of ``EmbeddingPageCache`` for telemetry/maintenance call
+    sites (``.stats`` snapshots, ``.clear()``) spanning every shard."""
+
+    def __init__(self, shards):
+        self._shards = shards
+        self.stats = _AggCacheStats(shards)
+
+    def clear(self) -> None:
+        for sh in self._shards:
+            sh.cache.clear()
+
+
+class ShardedGraphStore:
+    """Drop-in for ``GraphStore`` across the query/mutation surface the
+    service layer uses, backed by ``n_shards`` partition-local stores."""
+
+    def __init__(self, n_shards: int | None = None,
+                 devs: list | None = None, *,
+                 h_threshold: int = 128, feature_dim: int = 0):
+        if devs is not None:
+            if n_shards is not None and n_shards != len(devs):
+                raise ValueError(f"n_shards={n_shards} conflicts with "
+                                 f"{len(devs)} explicit devices")
+            n_shards = len(devs)
+        elif n_shards is None:
+            n_shards = 2
+        if n_shards < 1:
+            raise ValueError("need at least one shard")
+        self.n_shards = int(n_shards)
+        devs = devs or [BlockDevice() for _ in range(self.n_shards)]
+        self.shards = [GraphStore(d, h_threshold=h_threshold,
+                                  feature_dim=feature_dim) for d in devs]
+        self.h_threshold = int(h_threshold)
+        self._bulk = BulkTimeline()
+        # composite mutations span shards; one coordinator lock restores
+        # the single-store mutation atomicity (membership check + inserts
+        # as one critical section).  Readers do NOT take it — a hop fetch
+        # racing an add_edge may observe the half-inserted undirected edge,
+        # the inherent visibility model of an array of devices.
+        self._mutate = threading.RLock()
+
+    # ------------------------------------------------------------- topology
+    @property
+    def devs(self) -> list:
+        return [sh.dev for sh in self.shards]
+
+    def owner_of(self, vid: int) -> int:
+        return int(vid) % self.n_shards
+
+    def _owner(self, vid: int) -> GraphStore:
+        return self.shards[int(vid) % self.n_shards]
+
+    def _map(self, fn, items):
+        """Bulk-ingest fan-out: per-shard write bursts (ms-scale simulated
+        sleeps, GIL released) overlap on real threads.  The pool is
+        transient — created per phase, joined before returning — so idle
+        stores hold no threads.  The read fan-out does NOT use threads:
+        its per-shard planning is interpreter-bound, so shard concurrency
+        there is modelled analytically instead (see ``_fetch_shards``)."""
+        items = list(items)
+        if len(items) <= 1:
+            return [fn(x) for x in items]
+        with ThreadPoolExecutor(max_workers=len(items),
+                                thread_name_prefix="shard") as pool:
+            return list(pool.map(fn, items))
+
+    @property
+    def feature_dim(self) -> int:
+        return self.shards[0].feature_dim
+
+    @property
+    def num_vertices(self) -> int:
+        return max(sh.num_vertices for sh in self.shards)
+
+    @property
+    def stats(self) -> GraphStoreStats:
+        out = GraphStoreStats(
+            l_evictions=sum(sh.stats.l_evictions for sh in self.shards),
+            unit_updates=sum(sh.stats.unit_updates for sh in self.shards),
+            pages_h=sum(sh.stats.pages_h for sh in self.shards),
+            pages_l=sum(sh.stats.pages_l for sh in self.shards),
+            bulk=self._bulk)
+        if self.cache is not None:
+            out.cache = self.cache.stats
+        return out
+
+    # ---------------------------------------------------------------- cache
+    @property
+    def cache(self):
+        if self.shards[0].cache is None:
+            return None
+        return _ShardedCacheView(self.shards)
+
+    def attach_cache_pages(self, capacity_pages: int, **kw) -> None:
+        """Split one device-DRAM budget evenly across the shards — each
+        device fronts its own reads and invalidates through its own
+        ``on_write`` hook, so coherence needs no cross-shard traffic."""
+        from .embcache import EmbeddingPageCache
+        per_shard = max(1, int(capacity_pages) // self.n_shards)
+        for sh in self.shards:
+            sh.attach_cache(EmbeddingPageCache(per_shard), **kw)
+
+    # ----------------------------------------------------------- bulk ingest
+    def update_graph(self, edge_array: np.ndarray,
+                     embeddings: np.ndarray | None = None,
+                     *, already_undirected: bool = False) -> BulkTimeline:
+        """Bulk UpdateGraph across the array.
+
+        The global edge preprocessing runs once, overlapped with the
+        (much larger) embedding write exactly as on one device — except the
+        embedding table is striped ``embeddings[s::N]`` and every shard's
+        sequential write burst proceeds in parallel on its own device.
+        """
+        tl = BulkTimeline()
+        t0 = time.perf_counter()
+
+        edge_array = np.asarray(edge_array, dtype=np.int64).reshape(-1, 2).copy()
+        if embeddings is not None:
+            embeddings = np.ascontiguousarray(embeddings, dtype=np.float32)
+        tl.transfer = (0.0, time.perf_counter() - t0)
+
+        box: dict = {}
+
+        def graph_pre():
+            s = time.perf_counter() - t0
+            box["csr"] = preprocess_edges(
+                edge_array, already_undirected=already_undirected)
+            box["span"] = (s, time.perf_counter() - t0)
+
+        def write_feature():
+            s = time.perf_counter() - t0
+            if embeddings is not None:
+                self._map(lambda sh: self.shards[sh]._write_embedding_table(
+                    embeddings[sh:: self.n_shards]), range(self.n_shards))
+            box["wf"] = (s, time.perf_counter() - t0)
+
+        th_g = threading.Thread(target=graph_pre)
+        th_f = threading.Thread(target=write_feature)
+        th_g.start(); th_f.start()
+        th_f.join()
+        user_visible_at = time.perf_counter() - t0
+        th_g.join()
+        tl.graph_pre = box["span"]
+        tl.write_feature = box.get("wf", (0.0, 0.0))
+
+        s0 = time.perf_counter() - t0
+        indptr, indices = box["csr"]
+
+        def write_adj(s):
+            ip, ix = partition_csr(indptr, indices, self.n_shards, s)
+            self.shards[s]._write_adjacency(ip, ix)
+
+        self._map(write_adj, range(self.n_shards))
+        tl.write_graph = (s0, time.perf_counter() - t0)
+        tl.total = time.perf_counter() - t0
+        tl.user_visible = max(user_visible_at, tl.transfer[1])
+        self._bulk = tl
+        return tl
+
+    # ------------------------------------------------------ batched queries
+    def _partition(self, vids: np.ndarray) -> list[tuple[int, np.ndarray]]:
+        """plan phase: query positions grouped by owning shard (no I/O)."""
+        owner = vids % self.n_shards
+        parts = [(s, np.nonzero(owner == s)[0])
+                 for s in range(self.n_shards)]
+        return [(s, pos) for s, pos in parts if len(pos)]
+
+    def _fetch_shards(self, parts, fn) -> list:
+        """fetch phase: one call per shard, device concurrency modelled
+        analytically.
+
+        Each shard's simulated flash + command time is DEFERRED while its
+        scatter-read runs, then the array pays one wait equal to the
+        slowest shard — the devices execute their queued commands
+        concurrently, mirroring how the flash channels inside one device
+        are modelled (divide, don't sum).  Real threads would only
+        serialize the interpreter-bound planning behind the GIL and charge
+        a handoff tax per shard.
+        """
+        outs, worst = [], 0.0
+        for item in parts:
+            with self.shards[item[0]].dev.defer_latency() as acct:
+                outs.append(fn(item))
+            worst = max(worst, acct.us)
+        sleep_us(worst)
+        return outs
+
+    def _fan_fetch(self, vids_arr: np.ndarray):
+        """plan -> per-shard fetch -> build: the shared front half of the
+        batched queries (see module docstring).  Returns a global
+        (block, desc) position-identical to a single device's
+        ``_fetch_plan`` over the same vids.
+        """
+        parts = self._partition(vids_arr)
+
+        # fetch: ONE locked scatter-read per shard, devices concurrent
+        plans = self._fetch_shards(
+            parts, lambda it: self.shards[it[0]].fetch_plan(vids_arr[it[1]]))
+
+        # build: re-base each shard's descriptor rows into the concatenated
+        # block and scatter them back to their global positions
+        desc: list = [None] * len(vids_arr)
+        blocks = []
+        row_off = 0
+        for (s, pos), (blk, dsc) in zip(parts, plans):
+            for p, d in zip(pos.tolist(), dsc):
+                if d is None:
+                    continue
+                if d[0] == "L":
+                    desc[p] = ("L", d[1] + row_off, d[2], d[3])
+                else:
+                    desc[p] = ("H", d[1] + row_off, d[2])
+            if blk is not None:
+                blocks.append(blk)
+                row_off += blk.shape[0]
+        if not blocks:
+            return None, desc
+        # single contributing shard: its block is already global
+        block = blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
+        return block, desc
+
+    def get_neighbors(self, vid: int) -> np.ndarray:
+        return self._owner(vid).get_neighbors(int(vid))
+
+    def get_neighbors_batch(self, vids) -> list[np.ndarray]:
+        vids_arr = np.asarray(vids, dtype=np.int64).reshape(-1)
+        block, desc = self._fan_fetch(vids_arr)
+        return neighbors_from_plan(vids_arr, block, desc)
+
+    def sample_neighbors_batch(self, vids, fanout: int,
+                               rng: np.random.Generator | None = None, *,
+                               segments=None, rngs=None):
+        """Fused fetch+subsample across the array — one scatter-read per
+        shard per hop, then the single-device selection over the recomposed
+        plan (rng consumed in global frontier order: bit-identical)."""
+        vids_arr = np.asarray(vids, dtype=np.int64).reshape(-1)
+        block, desc = self._fan_fetch(vids_arr)
+        return select_from_plan(vids_arr, block, desc, fanout, rng,
+                                segments=segments, rngs=rngs)
+
+    # ----------------------------------------------------------- embeddings
+    def get_embed(self, vid: int) -> np.ndarray:
+        return self._owner(vid).get_embed(int(vid) // self.n_shards)
+
+    def get_embeds(self, vids: np.ndarray) -> np.ndarray:
+        """Coalesced gather across the array: each shard serves its owned
+        rows (local row = vid // N) with ONE scatter-read, concurrently;
+        rows scatter back to their query positions."""
+        d = self.feature_dim
+        if not d:
+            raise KeyError("no embedding table loaded")
+        vids = np.asarray(vids, dtype=np.int64).reshape(-1)
+        out = np.empty((len(vids), d), dtype=np.float32)
+        if not len(vids):
+            return out
+
+        def fetch(item):
+            s, pos = item
+            return pos, self.shards[s].get_embeds(vids[pos] // self.n_shards)
+
+        for pos, rows in self._fetch_shards(self._partition(vids), fetch):
+            out[pos] = rows
+        return out
+
+    def update_embed(self, vid: int, embed: np.ndarray) -> None:
+        self._owner(vid).update_embed(int(vid) // self.n_shards, embed)
+
+    # ------------------------------------------------------------- unit ops
+    def add_vertex(self, vid: int, embed: np.ndarray | None = None) -> None:
+        with self._mutate:
+            vid = int(vid)
+            sh = self._owner(vid)
+            sh.add_vertex(vid)                   # adjacency under global vid
+            if embed is not None:
+                sh.update_embed(vid // self.n_shards, embed)
+
+    def add_edge(self, dst: int, src: int) -> None:
+        """Undirected insert: each endpoint's chunk updates on ITS owning
+        shard (two independent single-page RMWs, possibly on different
+        devices)."""
+        with self._mutate:
+            dst, src = int(dst), int(src)
+            for v in (dst, src):
+                sh = self._owner(v)
+                if v not in sh.gmap:
+                    sh.add_vertex(v)
+            sh_d = self._owner(dst)
+            with sh_d._lock:
+                sh_d.stats.unit_updates += 1
+                sh_d._insert_neighbor(dst, src)
+            if dst != src:
+                sh_s = self._owner(src)
+                with sh_s._lock:
+                    sh_s._insert_neighbor(src, dst)
+
+    def delete_edge(self, dst: int, src: int) -> None:
+        with self._mutate:
+            dst, src = int(dst), int(src)
+            sh_d = self._owner(dst)
+            with sh_d._lock:
+                sh_d.stats.unit_updates += 1
+                sh_d._remove_neighbor(dst, src)
+            if dst != src:
+                sh_s = self._owner(src)
+                with sh_s._lock:
+                    sh_s._remove_neighbor(src, dst)
+
+    def delete_vertex(self, vid: int) -> None:
+        """Remove ``vid`` everywhere: backlinks on each neighbor's owning
+        shard first, then the owner drops the vertex's own pages."""
+        with self._mutate:
+            vid = int(vid)
+            own = self._owner(vid)
+            nbrs = own.get_neighbors(vid)
+            for nbr in nbrs:
+                nbr = int(nbr)
+                if nbr == vid:
+                    continue
+                sh = self._owner(nbr)
+                with sh._lock:
+                    sh._remove_neighbor(nbr, vid)
+            with own._lock:
+                own.stats.unit_updates += 1
+                own._drop_vertex_pages(vid)
+
+    # --------------------------------------------------------------- export
+    def to_adjacency(self) -> dict[int, set[int]]:
+        out: dict[int, set[int]] = {}
+        for sh in self.shards:
+            out.update(sh.to_adjacency())
+        return out

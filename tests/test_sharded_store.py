@@ -1,0 +1,243 @@
+"""ShardedGraphStore: N-shard bit-equality with the single-device store
+(sampling, embeddings, end-to-end inference), cross-shard mutable-op
+routing, per-shard stats telemetry, and the bounded device event ring."""
+import numpy as np
+import pytest
+
+from repro.core.service import HolisticGNNService, make_service_dfg
+from repro.core import gnn
+from repro.serve import ServingRuntime
+from repro.store import (BlockDevice, GraphStore, ShardedGraphStore,
+                         partition_csr, preprocess_edges, sample_batch,
+                         sample_batch_ref)
+from repro.store.blockdev import EVENTS_CAP
+
+
+def _graph(n=400, e=3000, feat=24, seed=0):
+    rng = np.random.default_rng(seed)
+    edges = np.stack([rng.integers(0, n, e), rng.zipf(1.4, e) % n],
+                     axis=1).astype(np.int64)
+    emb = rng.standard_normal((n, feat)).astype(np.float32)
+    return edges, emb
+
+
+def _pair(n_shards, *, h_threshold=16, n=400, e=3000, feat=24):
+    """(single-device store, N-shard store) over the same ingested graph."""
+    edges, emb = _graph(n, e, feat)
+    single = GraphStore(BlockDevice(), h_threshold=h_threshold)
+    single.update_graph(edges, emb)
+    sharded = ShardedGraphStore(n_shards=n_shards, h_threshold=h_threshold)
+    sharded.update_graph(edges, emb)
+    return single, sharded, n
+
+
+def _assert_batches_equal(a, b):
+    np.testing.assert_array_equal(a.node_vids, b.node_vids)
+    assert a.num_targets == b.num_targets
+    for la, lb in zip(a.layers, b.layers):
+        np.testing.assert_array_equal(la.nbr, lb.nbr)
+        np.testing.assert_array_equal(la.mask, lb.mask)
+        assert la.num_dst == lb.num_dst
+    np.testing.assert_array_equal(a.embeddings, b.embeddings)
+
+
+# ------------------------------------------------------------ partitioning
+def test_partition_csr_covers_and_masks():
+    edges, _ = _graph()
+    indptr, indices = preprocess_edges(edges)
+    n = len(indptr) - 1
+    total = 0
+    for s in range(3):
+        ip, ix = partition_csr(indptr, indices, 3, s)
+        assert len(ip) == n + 1
+        deg = np.diff(ip)
+        owned = np.arange(n) % 3 == s
+        assert (deg[~owned] == 0).all()
+        np.testing.assert_array_equal(deg[owned], np.diff(indptr)[owned])
+        total += int(deg.sum())
+    assert total == len(indices)
+
+
+# --------------------------------------------------------- read-side parity
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_neighbors_and_embeds_bit_identical(n_shards):
+    single, sharded, n = _pair(n_shards)
+    rng = np.random.default_rng(3)
+    vids = rng.integers(0, n + 20, 80)           # includes unknown vids
+    for a, b in zip(single.get_neighbors_batch(vids),
+                    sharded.get_neighbors_batch(vids)):
+        np.testing.assert_array_equal(a, b)
+    known = vids[vids < n]
+    np.testing.assert_array_equal(single.get_embeds(known),
+                                  sharded.get_embeds(known))
+    for v in known[:8]:
+        np.testing.assert_array_equal(single.get_embed(int(v)),
+                                      sharded.get_embed(int(v)))
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_sample_batch_bit_identical(n_shards):
+    single, sharded, n = _pair(n_shards)
+    targets = np.random.default_rng(5).integers(0, n, 12)
+    got = sample_batch(sharded, targets, [5, 5],
+                       rng=np.random.default_rng(9))
+    want = sample_batch(single, targets, [5, 5],
+                        rng=np.random.default_rng(9))
+    oracle = sample_batch_ref(single, targets, [5, 5],
+                              rng=np.random.default_rng(9))
+    _assert_batches_equal(want, got)
+    _assert_batches_equal(oracle, got)
+
+
+@pytest.mark.parametrize("n_shards", [2, 3])
+def test_sample_stays_identical_after_cross_shard_mutations(n_shards):
+    single, sharded, n = _pair(n_shards)
+    rng = np.random.default_rng(11)
+    for _ in range(120):                         # mutate BOTH stores
+        op = rng.integers(0, 4)
+        a, b = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if op == 0:
+            single.add_edge(a, b), sharded.add_edge(a, b)
+        elif op == 1:
+            single.delete_edge(a, b), sharded.delete_edge(a, b)
+        elif op == 2:
+            v = n + int(rng.integers(0, 40))
+            single.add_vertex(v), sharded.add_vertex(v)
+        else:
+            single.delete_vertex(a), sharded.delete_vertex(a)
+    assert single.to_adjacency() == sharded.to_adjacency()
+    # mutated pages exercise the L-locate general path on both sides
+    targets = rng.integers(0, n, 10)
+    got = sample_batch(sharded, targets, [4, 4],
+                       rng=np.random.default_rng(1))
+    want = sample_batch(single, targets, [4, 4],
+                        rng=np.random.default_rng(1))
+    _assert_batches_equal(want, got)
+
+
+def test_update_embed_routes_to_owner_shard():
+    _, sharded, n = _pair(3)
+    writes0 = [d.stats.written_pages for d in sharded.devs]
+    vid = 7                                      # owner = 7 % 3 = 1
+    row = np.full(24, 2.5, dtype=np.float32)
+    sharded.update_embed(vid, row)
+    np.testing.assert_array_equal(sharded.get_embed(vid), row)
+    writes = [d.stats.written_pages - w0
+              for d, w0 in zip(sharded.devs, writes0)]
+    assert writes[1] > 0 and writes[0] == 0 and writes[2] == 0
+
+
+# ------------------------------------------------------- end-to-end serving
+def _service_pair(n_shards, cache_pages=None):
+    edges, emb = _graph(n=600, e=5000, feat=32)
+    svcs = []
+    for ns in (1, n_shards):
+        svc = HolisticGNNService(h_threshold=16, pad_to=32,
+                                 n_shards=ns, cache_pages=cache_pages)
+        svc.store.update_graph(edges, emb)
+        svcs.append(svc)
+    return svcs[0], svcs[1]
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_run_and_run_batch_bit_identical(n_shards):
+    ref, sharded = _service_pair(n_shards, cache_pages=512)
+    assert isinstance(sharded.store, ShardedGraphStore)
+    dfg = make_service_dfg("gcn", 2, [5, 5]).save()
+    params = gnn.init_params("gcn", [32, 16, 8], seed=1)
+    weights = {k: v for k, v in
+               gnn.dfg_feeds("gcn", params, None, []).items() if k != "H"}
+    out_a = ref.run(dfg, [3, 7, 11, 200], weights=weights, seed=42)
+    out_b = sharded.run(dfg, [3, 7, 11, 200], weights=weights, seed=42)
+    np.testing.assert_array_equal(out_a["Result"], out_b["Result"])
+    reqs = [{"targets": [3, 7], "seed": 1},
+            {"targets": [9, 20, 31], "seed": 2},
+            {"targets": [100], "seed": 3}]
+    for a, b in zip(ref.run_batch(dfg, reqs, weights=weights),
+                    sharded.run_batch(dfg, reqs, weights=weights)):
+        np.testing.assert_array_equal(a["Result"], b["Result"])
+
+
+def test_stats_rpc_reports_per_shard_telemetry():
+    _, sharded = _service_pair(3, cache_pages=600)
+    vids = np.arange(12)
+    sharded.store.get_embeds(vids)
+    sharded.store.get_embeds(vids)              # second gather hits the cache
+    st = sharded.stats()
+    assert st["store"]["n_shards"] == 3
+    assert len(st["shards"]) == 3
+    agg_reads = sum(s["device"]["read_pages"] for s in st["shards"])
+    assert st["device"]["read_pages"] == agg_reads > 0
+    hit_rates = [s["embcache"]["hit_rate"] for s in st["shards"]]
+    assert all(0.0 <= h <= 1.0 for h in hit_rates)
+    # the aggregate embcache section sums the per-shard counters
+    assert st["embcache"]["hits"] == sum(s["embcache"]["hits"]
+                                         for s in st["shards"]) > 0
+
+
+def test_mutable_ops_under_load_cross_shard():
+    """Stepped runtime over a 3-shard service: scheduled run groups
+    interleaved with mutations whose endpoints live on DIFFERENT shards;
+    every output must stay bit-identical to a serial single-device twin
+    receiving the same operation sequence (per-shard cache coherence)."""
+    edges, emb = _graph(n=600, e=5000, feat=32)
+    svc = HolisticGNNService(h_threshold=16, pad_to=32, n_shards=3,
+                             cache_pages=600)
+    svc.store.update_graph(edges, emb)
+    ref = HolisticGNNService(h_threshold=16, pad_to=32)
+    ref.store.update_graph(edges, emb)
+    dfg = make_service_dfg("gcn", 2, [5, 5]).save()
+    params = gnn.init_params("gcn", [32, 16, 8], seed=1)
+    weights = {k: v for k, v in
+               gnn.dfg_feeds("gcn", params, None, []).items() if k != "H"}
+    rt = ServingRuntime(svc, n_queues=2, max_group=8)
+    cl, mut = rt.client(), rt.client()
+    rng = np.random.default_rng(7)
+    seed_ctr = 0
+    n = 600
+    for round_ in range(5):
+        cmds = []
+        for _ in range(4):
+            t = rng.integers(0, n, 6).tolist()
+            cmds.append((t, seed_ctr,
+                         cl.submit("run", dfg=dfg, batch=t, weights=weights,
+                                   seed=seed_ctr)))
+            seed_ctr += 1
+        rt.pump()
+        for t, s, cid in cmds:
+            got = cl.result(cid)["Result"]
+            want = ref.run(dfg, t, weights=weights, seed=s)["Result"]
+            np.testing.assert_array_equal(want[:6], got[:6],
+                                          err_msg=f"round {round_}")
+        # cross-shard mutations: consecutive vids own to different shards
+        a = int(rng.integers(0, n - 3))
+        row = rng.standard_normal(32).astype(np.float32)
+        mids = [mut.submit("add_edge", dst=a, src=a + 1),
+                mut.submit("update_embed", vid=a + 2, embed=row),
+                mut.submit("delete_vertex", vid=a + 3)]
+        rt.pump()
+        for mid in mids:
+            mut.result(mid)
+        ref.store.add_edge(a, a + 1)
+        ref.store.update_embed(a + 2, row)
+        ref.store.delete_vertex(a + 3)
+    cache = svc.store.cache.stats
+    assert cache.invalidations > 0 and cache.hits > 0
+
+
+# ------------------------------------------------------- device event ring
+def test_io_event_ring_is_bounded():
+    dev = BlockDevice(64)
+    page = np.zeros(1024, dtype=np.int32)
+    for i in range(EVENTS_CAP + 500):
+        dev.write_page(i % 64, page)
+    assert len(dev.stats.events) == EVENTS_CAP
+    assert dev.stats.written_pages == EVENTS_CAP + 500   # counters unbounded
+
+
+def test_io_event_full_trace_opt_in():
+    dev = BlockDevice(64, trace_events=True)
+    page = np.zeros(1024, dtype=np.int32)
+    for i in range(EVENTS_CAP + 500):
+        dev.write_page(i % 64, page)
+    assert len(dev.stats.events) == EVENTS_CAP + 500
