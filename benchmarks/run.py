@@ -18,17 +18,32 @@ import time
 import traceback
 
 
+def _parse_line(line: str, suite: str) -> dict:
+    """``name,us_per_call,derived`` CSV line -> JSON-able record."""
+    name, us, derived = (line.split(",", 2) + ["", ""])[:3]
+    try:
+        us_f = float(us)
+    except ValueError:
+        us_f = None
+    return {"suite": suite, "name": name, "us_per_call": us_f,
+            "derived": derived}
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="CI subset: fig19 + fig21 on the small workload")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as a JSON list (CI uploads "
+                         "benchmarks/*.json as workflow artifacts)")
     args = ap.parse_args(argv)
 
     from . import (fig3_breakdown, fig14_end2end, fig15_energy,
                    fig16_pure_inference, fig17_opbreakdown, fig18_bulk,
                    fig19_batchprep, fig20_mutable, fig21_fastpath,
-                   fig22_serving, fig23_sharded, table5_datasets)
+                   fig22_serving, fig23_sharded, fig24_replicated,
+                   table5_datasets)
     suites = {
         "table5": table5_datasets.run,
         "fig3": fig3_breakdown.run,
@@ -42,6 +57,7 @@ def main(argv=None) -> None:
         "fig21": fig21_fastpath.run,
         "fig22": fig22_serving.run,
         "fig23": fig23_sharded.run,
+        "fig24": fig24_replicated.run,
     }
     if args.smoke:
         suites = {
@@ -49,10 +65,12 @@ def main(argv=None) -> None:
             "fig21": lambda: fig21_fastpath.run(smoke=True),
             "fig22": lambda: fig22_serving.run(smoke=True),
             "fig23": lambda: fig23_sharded.run(smoke=True),
+            "fig24": lambda: fig24_replicated.run(smoke=True),
         }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     failures = 0
+    records: list[dict] = []
     for name, fn in suites.items():
         if only and name not in only:
             continue
@@ -60,11 +78,20 @@ def main(argv=None) -> None:
         try:
             for line in fn():
                 print(line)
-            print(f"{name}.suite_wall,{(time.perf_counter()-t0)*1e6:.0f},ok")
+                records.append(_parse_line(line, name))
+            wall = f"{name}.suite_wall,{(time.perf_counter()-t0)*1e6:.0f},ok"
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failures += 1
-            print(f"{name}.suite_wall,0,FAILED")
+            wall = f"{name}.suite_wall,0,FAILED"
+        print(wall)
+        records.append(_parse_line(wall, name))
+    if args.json:
+        import json
+        with open(args.json, "w") as fh:
+            json.dump(records, fh, indent=1)
+        print(f"# wrote {len(records)} records to {args.json}",
+              file=sys.stderr)
     # roofline summary (if dry-run artifacts exist)
     try:
         from .roofline import load_records, table

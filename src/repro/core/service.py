@@ -27,19 +27,32 @@ class HolisticGNNService:
     def __init__(self, *, h_threshold: int = 128, pad_to: int = 64,
                  dev: BlockDevice | None = None,
                  cache_pages: int | None = None,
-                 n_shards: int = 1, devs: list | None = None):
+                 n_shards: int = 1, devs: list | None = None,
+                 replication: int = 1):
         """``n_shards > 1`` (or an explicit ``devs`` device list) backs the
         service with a hash-partitioned CSSD array (``ShardedGraphStore``)
         instead of one device — every RPC below is shard-transparent, and
-        sampling stays bit-identical to the single-device store."""
-        if devs is not None or n_shards > 1:
+        sampling stays bit-identical to the single-device store.
+
+        ``replication=R >= 2`` upgrades the array to a
+        ``ReplicatedGraphStore``: R-way replica placement with
+        replica-spread reads, write fan-out, and the ``fail_shard`` /
+        ``rebuild_shard`` RPCs for serving through device failures."""
+        if devs is not None or n_shards > 1 or replication > 1:
             if dev is not None:
                 raise ValueError("dev= is single-device only; pass the "
                                  "array as devs=[...] instead")
-            from ..store.sharded import ShardedGraphStore
-            self.store = ShardedGraphStore(
-                n_shards=None if devs is not None else n_shards,
-                devs=devs, h_threshold=h_threshold)
+            if replication > 1:
+                from ..store.sharded import ReplicatedGraphStore
+                self.store = ReplicatedGraphStore(
+                    n_shards=None if devs is not None else n_shards,
+                    devs=devs, replication=replication,
+                    h_threshold=h_threshold)
+            else:
+                from ..store.sharded import ShardedGraphStore
+                self.store = ShardedGraphStore(
+                    n_shards=None if devs is not None else n_shards,
+                    devs=devs, h_threshold=h_threshold)
         else:
             self.store = GraphStore(dev or BlockDevice(),
                                     h_threshold=h_threshold)
@@ -83,6 +96,23 @@ class HolisticGNNService:
 
     def get_neighbors(self, vid):
         return self.store.get_neighbors(int(vid))
+
+    # ---------------------------------------------------------- fault admin
+    def _replicated(self):
+        if not hasattr(self.store, "fail_shard"):
+            raise RuntimeError("shard fault RPCs need a replicated array "
+                               "(construct with replication >= 2)")
+        return self.store
+
+    def fail_shard(self, shard):
+        """Fault-injection / drain RPC: drop one device out of the array.
+        Serving continues from the surviving replicas, bit-identically."""
+        return self._replicated().fail_shard(int(shard))
+
+    def rebuild_shard(self, shard):
+        """Re-materialise a failed shard from its surviving replicas,
+        restoring R-way redundancy."""
+        return self._replicated().rebuild_shard(int(shard))
 
     # ------------------------------------------------------------ GraphRunner
     def _register_batchpre(self):
@@ -208,8 +238,11 @@ class HolisticGNNService:
         under ``qos`` via ``qos_provider``.  Against a sharded store the
         ``device``/``embcache`` sections aggregate the array and ``shards``
         breaks out per-shard cache hit rates and page counters, so
-        operators (and fig23) can read shard balance without poking store
-        internals.
+        operators (and fig23/fig24) can read shard balance without poking
+        store internals.  Against a replicated array the write-side
+        aggregates (``written_pages``, ``unit_updates``) count per-replica
+        applications — a logical mutation really does cost R device
+        writes — so compare them across replication factors accordingly.
         """
         st = self.store.stats
         shards = getattr(self.store, "shards", None)
@@ -220,7 +253,8 @@ class HolisticGNNService:
                       "unit_updates": st.unit_updates,
                       "l_evictions": st.l_evictions,
                       "num_vertices": self.store.num_vertices,
-                      "n_shards": len(devs)},
+                      "n_shards": len(devs),
+                      "io_wait_us": getattr(self.store, "io_wait_us", 0.0)},
             "device": {k: sum(self._device_counters(d.stats)[k]
                               for d in devs)
                        for k in ("read_pages", "written_pages",
@@ -229,9 +263,17 @@ class HolisticGNNService:
         if shards:
             out["shards"] = [
                 {"device": self._device_counters(sh.dev.stats),
+                 "pages_l": sh.stats.pages_l, "pages_h": sh.stats.pages_h,
+                 "failed": sh.dev.failed,
                  "embcache": (sh.cache.stats.snapshot()
                               if sh.cache is not None else None)}
                 for sh in shards]
+        repl = getattr(self.store, "replication", None)
+        if repl is not None:
+            out["replication"] = {
+                "r": repl,
+                "failed_shards": [i for i, f in
+                                  enumerate(self.store.failed_shards) if f]}
         if self.store.cache is not None:
             out["embcache"] = self.store.cache.stats.snapshot()
         if self.qos_provider is not None:

@@ -18,6 +18,14 @@ to the owning shard's device (whose ``on_write`` hook invalidates that
 shard's page cache), and the ``stats`` RPC carries per-shard cache + IO
 telemetry next to the scheduler QoS block.
 
+It is failure-transparent too: against a replicated array
+(``replication >= 2``), ``fail_shard``/``rebuild_shard`` dispatch as
+immediate commands (never queued behind a model execution, like any
+mutation), a fused group whose fetch was already planned onto the dying
+shard re-plans against the survivors inside the store's failover retry,
+and degraded groups keep returning bit-identical results — the
+fault-injection CI gate drives exactly this path mid-serve.
+
 Operating modes:
 
   * **threaded** (``start()``/``stop()``): a dispatcher thread drains the

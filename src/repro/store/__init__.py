@@ -1,10 +1,12 @@
-from .blockdev import BlockDevice, PAGE_BYTES, SLOTS_PER_PAGE
+from .blockdev import (BlockDevice, DeviceFailedError, PAGE_BYTES,
+                       SLOTS_PER_PAGE)
 from .graphstore import GraphStore, preprocess_edges
-from .sharded import ShardedGraphStore, partition_csr
+from .sharded import ReplicatedGraphStore, ShardedGraphStore, partition_csr
 from .sampler import (sample_batch, sample_batch_ref, pad_batch,
                       SampledBatch, LayerBlock)
 
-__all__ = ["BlockDevice", "PAGE_BYTES", "SLOTS_PER_PAGE", "GraphStore",
-           "ShardedGraphStore", "partition_csr",
+__all__ = ["BlockDevice", "DeviceFailedError", "PAGE_BYTES",
+           "SLOTS_PER_PAGE", "GraphStore", "ShardedGraphStore",
+           "ReplicatedGraphStore", "partition_csr",
            "preprocess_edges", "sample_batch", "sample_batch_ref",
            "pad_batch", "SampledBatch", "LayerBlock"]

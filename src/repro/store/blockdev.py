@@ -15,6 +15,19 @@ write-amplification stats.  The event log is a bounded ring by default —
 sustained serving traffic must not grow device memory (same argument as
 the RPC server's rolling per-method stats); benchmarks that reconstruct
 full timelines opt into an unbounded trace with ``trace_events=True``.
+
+Two array-scale behaviours live at this layer:
+
+  * **fault flag** — ``fail()`` marks the device dead; every subsequent
+    command (read/write/alloc) raises ``DeviceFailedError``.  The
+    replicated coordinator's replica selection excludes failed shards and
+    its failover retry re-plans any fetch already in flight against one;
+  * **busy-until command serialization** — simulated latency is arbitrated
+    through a per-device ``busy_until`` deadline, so two commands issued
+    concurrently against ONE device queue behind each other (a device has
+    one command pipeline), while commands on different devices of an array
+    still overlap.  Previously each caller slept independently, silently
+    granting a single device unbounded command concurrency.
 """
 from __future__ import annotations
 
@@ -30,6 +43,10 @@ SLOT_DTYPE = np.int32
 SLOTS_PER_PAGE = PAGE_BYTES // 4  # 1024 int32 slots
 
 EVENTS_CAP = 4096                 # default I/O event ring size
+
+
+class DeviceFailedError(RuntimeError):
+    """A command was issued against a failed device."""
 
 
 @dataclass
@@ -141,8 +158,30 @@ class BlockDevice:
         # write/free (and with the whole device span on _grow relocation) —
         # the device-DRAM page cache hooks its invalidation here.
         self.on_write = None
+        # growth observer: called as on_grow(extra_pages) after ``_grow``
+        # relocates the embedding space to the new device top — holders of
+        # embedding-space base LPNs (GraphStore._emb_base) shift by the
+        # same amount or they silently read the zeroed old location.
+        self.on_grow = None
         # per-thread deferred-latency slot (see defer_latency)
         self._defer = threading.local()
+        # busy-until command arbitration: one command pipeline per device
+        self._busy_lock = threading.Lock()
+        self._busy_until = 0.0
+        self.failed = False
+
+    # ------------------------------------------------------------------ fault
+    def fail(self) -> None:
+        """Fail the device: every later command raises ``DeviceFailedError``.
+
+        The data pages are NOT cleared — a failed device's content is simply
+        unreachable, exactly what a replicated array must survive.
+        """
+        self.failed = True
+
+    def _check_alive(self) -> None:
+        if self.failed:
+            raise DeviceFailedError("command issued against a failed device")
 
     def defer_latency(self):
         """Context manager: accumulate this thread's simulated latency on
@@ -174,11 +213,14 @@ class BlockDevice:
             grown[self._back: old.shape[0]] = 0
         self._back = grown.shape[0] - back_len
         self._pages = grown
+        if self.on_grow is not None:           # embedding LPNs shifted up
+            self.on_grow(extra)
         if self.on_write is not None:          # embedding span relocated:
             self.on_write(0, grown.shape[0])   # every cached LPN is stale
 
     def alloc_front(self) -> int:
         """Allocate one page in the neighbor space (graph pages)."""
+        self._check_alive()
         with self._lock:
             if self._free:
                 return self._free.pop()
@@ -193,6 +235,7 @@ class BlockDevice:
 
         Returns the first LPN of the span (ascending order within the span).
         """
+        self._check_alive()
         with self._lock:
             if self._back - n < self._front:
                 self._grow(n)
@@ -200,6 +243,7 @@ class BlockDevice:
             return self._back
 
     def free_page(self, lpn: int) -> None:
+        self._check_alive()
         with self._lock:
             self._free.append(lpn)
         if self.on_write is not None:
@@ -212,10 +256,20 @@ class BlockDevice:
             if acct is not None:
                 acct.us += us                 # deferred: coordinator pays
                 return
-            sleep_us(us)
+            # busy-until queue model: a device executes ONE command stream.
+            # The command starts when the device frees up (queueing delay)
+            # and holds it for its service time; concurrent callers on this
+            # device serialize, callers on other devices overlap.
+            with self._busy_lock:
+                now = time.perf_counter()
+                start = self._busy_until if self._busy_until > now else now
+                self._busy_until = start + us * 1e-6
+                end = self._busy_until
+            sleep_us((end - now) * 1e6)
 
     def write_page(self, lpn: int, data: np.ndarray, *, tag: str = "graph") -> None:
         assert data.dtype == SLOT_DTYPE and data.shape == (SLOTS_PER_PAGE,)
+        self._check_alive()
         self._maybe_sleep(self.command_latency_us + self.page_write_us)
         self._pages[lpn] = data
         self.stats.record("write", lpn, PAGE_BYTES, tag, self._t0)
@@ -229,6 +283,7 @@ class BlockDevice:
         would dwarf the simulated DMA itself.
         """
         n_pages = -(-flat.size // SLOTS_PER_PAGE)
+        self._check_alive()
         self._maybe_sleep(self.command_latency_us
                           + self.page_write_us * n_pages / self.channels)
         full = flat.size // SLOTS_PER_PAGE
@@ -248,6 +303,7 @@ class BlockDevice:
             self.on_write(lpn0, n_pages)
 
     def read_page(self, lpn: int, *, tag: str = "graph") -> np.ndarray:
+        self._check_alive()
         self._maybe_sleep(self.command_latency_us + self.page_read_us)
         self.stats.record("read", lpn, PAGE_BYTES, tag, self._t0)
         return self._pages[lpn]
@@ -262,6 +318,7 @@ class BlockDevice:
         ``read_page`` round-trip per page.
         """
         lpns = np.asarray(lpns, dtype=np.int64)
+        self._check_alive()
         self._maybe_sleep(self.command_latency_us
                           + self.page_read_us * len(lpns) / self.channels)
         self.stats.read_pages += len(lpns)
@@ -272,6 +329,7 @@ class BlockDevice:
         return self._pages[lpns]
 
     def read_span(self, lpn0: int, n_pages: int, *, tag: str = "embed") -> np.ndarray:
+        self._check_alive()
         self._maybe_sleep(self.command_latency_us
                           + self.page_read_us * n_pages / self.channels)
         self.stats.read_pages += n_pages

@@ -142,6 +142,12 @@ class EmbeddingPageCache:
         self._last_use[slots] = self._tick
         self._lpn_slot[lpns] = slots
 
+    def clone_empty(self) -> "EmbeddingPageCache":
+        """A fresh, cold cache with this cache's capacity — the rebuild
+        path attaches one to a failed shard's replacement device (the old
+        device's DRAM, and thus its cache contents, died with it)."""
+        return EmbeddingPageCache(self.capacity)
+
     def invalidate(self, lpn0: int, n_pages: int = 1) -> None:
         """Drop [lpn0, lpn0 + n_pages) — the device-write hook."""
         with self._lock:

@@ -212,6 +212,15 @@ class GraphStore:
         self._lock = threading.RLock()
         self.cache = None                              # device-DRAM page cache
         self._cache_graph = True
+        # device growth relocates the embedding space to the new top; the
+        # table base must shift with it (without this, a neighbor-space
+        # grow AFTER bulk ingest leaves _emb_base pointing at the zeroed
+        # old span and every later embedding read returns garbage)
+        self.dev.on_grow = self._on_dev_grow
+
+    def _on_dev_grow(self, extra_pages: int) -> None:
+        if self._emb_base is not None:
+            self._emb_base += extra_pages
 
     def attach_cache(self, cache, *, cache_graph_pages: bool = True) -> None:
         """Front batched page reads with a device-DRAM LRU (serving hot set).

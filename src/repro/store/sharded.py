@@ -43,6 +43,11 @@ its rng stream in global frontier order, an N-shard sample is
 **bit-identical** to the 1-device sample under the same seed —
 ``tests/test_sharded_store.py`` asserts this for N in {1, 2, 4} all the
 way through ``run``/``run_batch``.
+
+``ReplicatedGraphStore`` (below) extends the array with R-way replica
+placement: page-granular replica-spread reads against hub skew, write
+fan-out, and a ``fail_shard``/``rebuild_shard`` fault path — same
+plan->fetch->build contract, same bit-identity (see its docstring).
 """
 from __future__ import annotations
 
@@ -52,27 +57,109 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from .blockdev import BlockDevice, sleep_us
+from .blockdev import (BlockDevice, DeviceFailedError, SLOTS_PER_PAGE,
+                       sleep_us)
 from .graphstore import (BulkTimeline, GraphStore, GraphStoreStats,
-                         neighbors_from_plan, preprocess_edges,
-                         select_from_plan)
+                         _H_COUNT, _H_NEXT, neighbors_from_plan,
+                         preprocess_edges, select_from_plan)
+from .sampler import _ramp
 
 
 def partition_csr(indptr: np.ndarray, indices: np.ndarray,
-                  n_shards: int, shard: int):
+                  n_shards: int, shard: int, *, replication: int = 1):
     """Mask a global CSR down to the rows shard ``shard`` owns.
 
     Non-owned rows keep indptr slots with zero degree, so the row index
     space stays global and ``GraphStore._write_adjacency`` (which skips
     degree-0 rows) lays out exactly the owned vertices.
+
+    With ``replication=R`` the shard owns R residue classes — replica ``r``
+    of vertex ``vid`` lives on shard ``(vid + r) % N``, so shard ``s``
+    holds the classes ``{(s - r) % N, r < R}``.  The owned vid subset is
+    still ascending, so the shard-local L-page range search is unchanged.
     """
     n = len(indptr) - 1
     degrees = np.diff(indptr)
-    own = (np.arange(n) % n_shards) == shard
+    classes = [(shard - r) % n_shards for r in range(replication)]
+    own = np.isin(np.arange(n) % n_shards, classes)
     deg_s = np.where(own, degrees, 0)
     indptr_s = np.concatenate([[0], np.cumsum(deg_s)])
     row_of = np.repeat(np.arange(n), degrees)
     return indptr_s, indices[own[row_of]]
+
+
+def _class_flow(supplies: dict, cand_of: dict, caps: np.ndarray):
+    """Max-flow of class supplies into shard capacities (Edmonds-Karp on
+    the tiny classes->candidates->shards graph).  Returns (total_flow,
+    {(class, shard): amount})."""
+    classes = list(supplies)
+    n_cls, n_sh = len(classes), len(caps)
+    v = n_cls + n_sh + 2
+    src, snk = 0, v - 1
+    cap = np.zeros((v, v))
+    for i, c in enumerate(classes):
+        cap[src, 1 + i] = supplies[c]
+        for s in cand_of[c]:
+            cap[1 + i, 1 + n_cls + s] = supplies[c]
+    for s in range(n_sh):
+        cap[1 + n_cls + s, snk] = caps[s]
+    total = 0.0
+    while True:
+        parent = np.full(v, -1)
+        parent[src] = src
+        queue = [src]
+        while queue and parent[snk] < 0:
+            u = queue.pop(0)
+            for w_ in np.nonzero(cap[u] > 1e-9)[0]:
+                if parent[w_] < 0:
+                    parent[w_] = u
+                    queue.append(int(w_))
+        if parent[snk] < 0:
+            break
+        aug, x = np.inf, snk
+        while x != src:
+            aug = min(aug, cap[parent[x], x])
+            x = parent[x]
+        x = snk
+        while x != src:
+            cap[parent[x], x] -= aug
+            cap[x, parent[x]] += aug
+            x = parent[x]
+        total += aug
+    flows = {(c, int(s)): float(cap[1 + n_cls + s, 1 + i])
+             for i, c in enumerate(classes) for s in cand_of[c]
+             if cap[1 + n_cls + s, 1 + i] > 1e-9}
+    return total, flows
+
+
+def _minmax_quotas(supplies: dict, cand_of: dict,
+                   start: np.ndarray) -> dict:
+    """Exact min-max assignment of per-class weights onto their candidate
+    shards above existing ``start`` loads: binary search on the common
+    load level, each probe a max-flow feasibility check.  Returns
+    ``{class: additions aligned with cand_of[class]}``.  Greedy per-class
+    waterfills are myopic on the replica ring (adjacent classes share
+    candidates) and can overshoot an early shard a later class needs; the
+    flow formulation is optimal for any replication factor."""
+    total = float(sum(supplies.values()))
+    if not supplies or total <= 0:
+        return {c: np.zeros(len(cand_of[c])) for c in supplies}
+    lo = float(np.min(start))
+    hi = float(np.max(start)) + total
+    eps = 1e-6 * max(1.0, total)
+    for _ in range(40):
+        mid = 0.5 * (lo + hi)
+        got, _fl = _class_flow(supplies, cand_of,
+                               np.maximum(0.0, mid - start))
+        if got >= total - eps:
+            hi = mid
+        else:
+            lo = mid
+    _, flows = _class_flow(supplies, cand_of,
+                           np.maximum(0.0, hi + eps - start))
+    return {c: np.asarray([flows.get((c, int(s)), 0.0)
+                           for s in cand_of[c]])
+            for c in supplies}
 
 
 class _AggCacheStats:
@@ -150,6 +237,10 @@ class ShardedGraphStore:
         # racing an add_edge may observe the half-inserted undirected edge,
         # the inherent visibility model of an array of devices.
         self._mutate = threading.RLock()
+        # cumulative simulated array wait (each fetch pays max over shards):
+        # the device-model latency, free of host scheduler noise — what the
+        # scale-out benchmarks compare across array configurations.
+        self.io_wait_us = 0.0
 
     # ------------------------------------------------------------- topology
     @property
@@ -213,6 +304,22 @@ class ShardedGraphStore:
             sh.attach_cache(EmbeddingPageCache(per_shard), **kw)
 
     # ----------------------------------------------------------- bulk ingest
+    def _prepare_emb_layout(self, n_rows: int) -> None:
+        """Hook: called once per bulk ingest with the embedding row count,
+        before any shard's table write (the replicated store derives its
+        per-shard stripe offsets here)."""
+
+    def _emb_shard_rows(self, embeddings: np.ndarray, s: int) -> np.ndarray:
+        """Hook: the embedding rows shard ``s`` stores, in local-row order
+        (round-robin stripe ``embeddings[s::N]``; R stripes when
+        replicated)."""
+        return embeddings[s:: self.n_shards]
+
+    def _adj_shard_csr(self, indptr: np.ndarray, indices: np.ndarray,
+                       s: int):
+        """Hook: the global-CSR mask shard ``s`` writes as adjacency."""
+        return partition_csr(indptr, indices, self.n_shards, s)
+
     def update_graph(self, edge_array: np.ndarray,
                      embeddings: np.ndarray | None = None,
                      *, already_undirected: bool = False) -> BulkTimeline:
@@ -229,6 +336,7 @@ class ShardedGraphStore:
         edge_array = np.asarray(edge_array, dtype=np.int64).reshape(-1, 2).copy()
         if embeddings is not None:
             embeddings = np.ascontiguousarray(embeddings, dtype=np.float32)
+            self._prepare_emb_layout(len(embeddings))
         tl.transfer = (0.0, time.perf_counter() - t0)
 
         box: dict = {}
@@ -243,7 +351,8 @@ class ShardedGraphStore:
             s = time.perf_counter() - t0
             if embeddings is not None:
                 self._map(lambda sh: self.shards[sh]._write_embedding_table(
-                    embeddings[sh:: self.n_shards]), range(self.n_shards))
+                    self._emb_shard_rows(embeddings, sh)),
+                    range(self.n_shards))
             box["wf"] = (s, time.perf_counter() - t0)
 
         th_g = threading.Thread(target=graph_pre)
@@ -259,7 +368,7 @@ class ShardedGraphStore:
         indptr, indices = box["csr"]
 
         def write_adj(s):
-            ip, ix = partition_csr(indptr, indices, self.n_shards, s)
+            ip, ix = self._adj_shard_csr(indptr, indices, s)
             self.shards[s]._write_adjacency(ip, ix)
 
         self._map(write_adj, range(self.n_shards))
@@ -294,6 +403,7 @@ class ShardedGraphStore:
             with self.shards[item[0]].dev.defer_latency() as acct:
                 outs.append(fn(item))
             worst = max(worst, acct.us)
+        self.io_wait_us += worst
         sleep_us(worst)
         return outs
 
@@ -441,3 +551,690 @@ class ShardedGraphStore:
         for sh in self.shards:
             out.update(sh.to_adjacency())
         return out
+
+
+class ReplicatedGraphStore(ShardedGraphStore):
+    """R-way replicated CSSD array: the sharded store with redundancy,
+    skewed-read load-spreading, and a failed-shard drain/rebuild path.
+
+    Placement: replica ``r`` of vertex ``vid`` lives on shard
+    ``(vid + r) % N`` — for both its adjacency pages (keyed by global vid,
+    as in the base store) and its embedding row.  Shard ``s`` therefore
+    holds the R residue classes ``{(s - r) % N}``; its embedding table is
+    the concatenation of R round-robin stripes (role ``r`` stripe = class
+    ``(s - r) % N``, local row ``stripe_off[s, r] + vid // N``), so the
+    shard-local page math stays the single-device math per stripe.
+
+    Reads: the plan stage runs a vectorized *replica-selection* pass over
+    every page fetch of the request — H chains at PAGE granularity
+    (replicas keep layout-identical chains, so page i can come from any
+    live owner), L vids weighted by their shared page cost, embedding
+    rows grouped by stripe page — assigned by an exact min-max solver
+    (level binary-search + max-flow over the classes->candidates graph,
+    ``_minmax_quotas``) on top of the shards' MEASURED read-counter
+    imbalance (closed-loop: estimation bias cannot accumulate).  Since
+    every replica holds identical data and the recomposed plan is
+    position-identical to the single-device plan, the spread changes
+    WHICH device pays each page, never the result: an R-replicated sample
+    stays **bit-identical** to the 1-device store under the same seed.
+    The deferred-latency array cost is ``max`` over shards, so flattening
+    the per-shard page distribution is a direct latency win on skewed
+    mixes (fig24: balance 0.36 -> 1.00, batched-read IO ~1.4x at R=2).
+
+    Writes fan out to every live replica under the coordinator mutation
+    lock (each device's ``on_write`` hook invalidates its own page cache);
+    a replica that fails mid-fan-out is skipped — its state died with the
+    device and ``rebuild_shard`` re-materialises it from a survivor.
+
+    Fault path: ``fail_shard(s)`` drops the device (every later command
+    raises ``DeviceFailedError``) after checking each of its classes keeps
+    a live replica; in-flight fetches that already planned onto the dying
+    shard re-plan against survivors (``_with_failover``).  Degraded reads
+    are served — bit-identically — by the surviving replicas.
+    ``rebuild_shard(s)`` re-materialises the lost partition onto a fresh
+    device: batched per-class L export from a survivor re-laid through
+    the bulk packing, H chains cloned page-exactly (preserving the
+    cross-replica chain layout the page spread relies on), embedding
+    stripes gathered from each class's surviving replica — restoring
+    R-way redundancy.
+    """
+
+    def __init__(self, n_shards: int | None = None, devs: list | None = None,
+                 *, replication: int = 2, h_threshold: int = 128,
+                 feature_dim: int = 0):
+        super().__init__(n_shards, devs, h_threshold=h_threshold,
+                         feature_dim=feature_dim)
+        r = int(replication)
+        if not 1 <= r <= self.n_shards:
+            raise ValueError(f"replication={r} needs 1 <= R <= "
+                             f"n_shards={self.n_shards}")
+        self.replication = r
+        self._emb_rows = 0
+        self._stripe_off = np.zeros((self.n_shards, r), dtype=np.int64)
+        # closed-loop selection feedback: every selection starts from the
+        # shards' ACTUAL page-read imbalance since the last topology
+        # change, so estimation bias (split-boundary double fetches,
+        # replica packing drift) cannot accumulate.  Cache hits never
+        # reach the device counter, so cached reads correctly stop
+        # counting as device load.
+        self._read_base = np.array(
+            [float(sh.dev.stats.read_pages) for sh in self.shards])
+
+    # ------------------------------------------------------------- topology
+    @property
+    def failed_shards(self) -> list[bool]:
+        return [sh.dev.failed for sh in self.shards]
+
+    def replica_shards(self, vid: int) -> list[int]:
+        return [(int(vid) + r) % self.n_shards
+                for r in range(self.replication)]
+
+    def _live_stores(self, vid: int):
+        """(shard, role, store) of ``vid``'s live replicas, primary first."""
+        out = []
+        c = int(vid) % self.n_shards
+        for r in range(self.replication):
+            s = (c + r) % self.n_shards
+            if not self.shards[s].dev.failed:
+                out.append((s, r, self.shards[s]))
+        if not out:
+            raise DeviceFailedError(f"no live replica for vertex {vid}")
+        return out
+
+    def _survivor_of_class(self, c: int, exclude: int) -> int:
+        for r in range(self.replication):
+            s = (c + r) % self.n_shards
+            if s != exclude and not self.shards[s].dev.failed:
+                return s
+        raise DeviceFailedError(f"no live replica holds vertex class {c}")
+
+    # ----------------------------------------------------- embedding layout
+    def _rows_of_class(self, c: int) -> int:
+        n = self._emb_rows
+        return (n - c + self.n_shards - 1) // self.n_shards if n > c else 0
+
+    def _check_emb_vid(self, vid: int) -> None:
+        """Reject rows beyond the ingested table: in the striped replica
+        layout the next local row belongs to ANOTHER role's stripe, so an
+        unchecked write would silently corrupt a different vertex's
+        replica (the single-device store merely writes past its table)."""
+        if not 0 <= int(vid) < self._emb_rows:
+            raise KeyError(f"vid {vid} outside the embedding table "
+                           f"({self._emb_rows} rows)")
+
+    def _prepare_emb_layout(self, n_rows: int) -> None:
+        self._emb_rows = int(n_rows)
+        off = np.zeros((self.n_shards, self.replication), dtype=np.int64)
+        for s in range(self.n_shards):
+            acc = 0
+            for r in range(self.replication):
+                off[s, r] = acc
+                acc += self._rows_of_class((s - r) % self.n_shards)
+        self._stripe_off = off
+
+    def _emb_shard_rows(self, embeddings: np.ndarray, s: int) -> np.ndarray:
+        return np.concatenate(
+            [embeddings[(s - r) % self.n_shards:: self.n_shards]
+             for r in range(self.replication)])
+
+    def _adj_shard_csr(self, indptr, indices, s: int):
+        return partition_csr(indptr, indices, self.n_shards, s,
+                             replication=self.replication)
+
+    def update_graph(self, edge_array, embeddings=None, *,
+                     already_undirected: bool = False):
+        if any(self.failed_shards):
+            raise DeviceFailedError(
+                "bulk ingest needs every shard live; rebuild_shard first")
+        return super().update_graph(edge_array, embeddings,
+                                    already_undirected=already_undirected)
+
+    # ----------------------------------------------------- replica selection
+    def _hist_loads(self) -> np.ndarray:
+        """Per-shard page-read imbalance since the last topology change —
+        the closed-loop starting loads of every selection."""
+        cur = np.array([float(sh.dev.stats.read_pages)
+                        for sh in self.shards])
+        h = cur - self._read_base
+        return h - h.min()
+
+    def _reset_feedback(self) -> None:
+        self._read_base = np.array(
+            [float(sh.dev.stats.read_pages) for sh in self.shards])
+
+    def _select_replicas(self, vids: np.ndarray, weights=None,
+                         key=None) -> np.ndarray:
+        """Vectorized plan-stage replica selection.
+
+        Positions group by residue class (every member of a class shares
+        the same R candidate shards); the per-class weights are assigned
+        to live candidate shards by an exact min-max solver
+        (``_minmax_quotas``) on top of the shards' measured read
+        imbalance.  Within a class, positions stay contiguous in ``key``
+        order (ascending vid for adjacency, stripe page for embeddings)
+        so page-sharing neighbours land on the same shard, and the split
+        points fall at the quota boundaries.
+
+        Pure planning — the returned owner per position only decides which
+        device pays the page fetch; replicas hold identical data.
+        """
+        n_shards, rep = self.n_shards, self.replication
+        vids = np.asarray(vids, dtype=np.int64).reshape(-1)
+        cls = vids % n_shards
+        w = (np.ones(len(vids)) if weights is None
+             else np.asarray(weights, dtype=np.float64))
+        live = [not f for f in self.failed_shards]
+        class_w = np.bincount(cls, weights=w, minlength=n_shards)
+
+        order = (np.argsort(cls, kind="stable") if key is None
+                 else np.lexsort((np.asarray(key), cls)))
+        sorted_cls = cls[order]
+        lo = np.searchsorted(sorted_cls, np.arange(n_shards), side="left")
+        hi = np.searchsorted(sorted_cls, np.arange(n_shards), side="right")
+
+        # ---- per-class quotas: exact min-max via level search + max-flow
+        occupied = [int(c) for c in range(n_shards) if hi[c] > lo[c]]
+        cand_of: dict[int, np.ndarray] = {}
+        for c in occupied:
+            cands = np.asarray([(c + r) % n_shards for r in range(rep)
+                                if live[(c + r) % n_shards]])
+            if not len(cands):
+                raise DeviceFailedError(
+                    f"no live replica for vertex class {c}")
+            cand_of[c] = cands
+        quota = _minmax_quotas({c: float(class_w[c]) for c in occupied},
+                               cand_of, self._hist_loads())
+
+        # ---- split each class's positions at its quota boundaries
+        owner = np.empty(len(vids), dtype=np.int64)
+        for c in occupied:
+            run = order[lo[c]: hi[c]]
+            cands = cand_of[c]
+            if len(cands) == 1:
+                owner[run] = cands[0]
+                continue
+            cum_w = np.cumsum(w[run])
+            cuts = np.searchsorted(cum_w, np.cumsum(quota[c])[:-1] + 1e-9)
+            for sdx, seg in zip(cands.tolist(), np.split(run, cuts)):
+                if len(seg):
+                    owner[seg] = sdx
+        return owner
+
+    def _meta_store(self, c: int) -> GraphStore:
+        """A live replica's in-DRAM mapping tables for class ``c`` — the
+        planning metadata every replica agrees on (same op history)."""
+        for r in range(self.replication):
+            s = (c + r) % self.n_shards
+            if not self.shards[s].dev.failed:
+                return self.shards[s]
+        raise DeviceFailedError(f"no live replica for vertex class {c}")
+
+    def _l_share_weights(self, vids: np.ndarray) -> np.ndarray:
+        """Page cost of each L-vid's fetch, in PAGES: vids resolved to the
+        same L page (a live replica's range table — packings differ across
+        replicas only in companion classes) split that page's single fetch
+        between them, so L quotas stay commensurate with per-page H
+        quotas."""
+        n_shards = self.n_shards
+        w = np.ones(len(vids))
+        cls = vids % n_shards
+        for c in np.unique(cls):
+            sh = self._meta_store(int(c))
+            if not sh._l_keys:
+                continue
+            idx = np.nonzero(cls == c)[0]
+            keys = np.asarray(sh._l_keys, dtype=np.int64)
+            _, inv, cnt = np.unique(np.searchsorted(keys, vids[idx]),
+                                    return_inverse=True,
+                                    return_counts=True)
+            w[idx] = 1.0 / cnt[inv]
+        return w
+
+    def _with_failover(self, fn):
+        """Run a read plan, re-planning if a shard fails under it.
+
+        A fetch that already planned onto a shard when ``fail_shard`` hit
+        raises ``DeviceFailedError`` from that device; the retry re-runs
+        the selection, which now excludes it — the drain path of a
+        degraded array.  Reads are idempotent, so the retry is safe.
+        """
+        last = None
+        for _ in range(self.n_shards + 1):
+            try:
+                return fn()
+            except DeviceFailedError as e:
+                last = e
+        raise last
+
+    def _fan_fetch(self, vids_arr: np.ndarray):
+        if self.replication == 1:
+            return self._with_failover(
+                lambda: ShardedGraphStore._fan_fetch(self, vids_arr))
+        return self._with_failover(
+            lambda: self._fan_fetch_spread(vids_arr))
+
+    def _fan_fetch_spread(self, vids_arr: np.ndarray):
+        """plan -> page-granular replica-spread fetch -> build.
+
+        H chains are spread at PAGE granularity: every replica holds a
+        layout-identical copy of the chain (same op history; rebuilds
+        clone pages exactly), so page i can be served by any live owner —
+        an independently assignable unit for the waterfill.  With
+        whole-chain atoms a hub's pages would pin to one shard and the
+        per-shard max (the array's deferred latency) could never drop
+        below the chain length; per-page spread flattens hub-skewed
+        fetches to ~total/N.  L vids stay vid-granular, weighted by their
+        shared page cost.  The recomposed (block, desc) is
+        position-identical to the single-device plan, so selection stays
+        bit-identical.
+        """
+        # plan + fetch under the coordinator mutation lock: one vid's chain
+        # pages are read under SEVERAL shards' locks, so a delete landing
+        # between them could drop h_chain entries mid-plan (the base store
+        # reads each vid inside ONE shard critical section and never had
+        # this gap).  The simulated array wait is paid after release, so
+        # mutations only ever wait out the (fast) planning math.
+        with self._mutate:
+            block, desc, worst = self._plan_and_fetch_spread(vids_arr)
+        self.io_wait_us += worst
+        sleep_us(worst)
+        return block, desc
+
+    def _plan_and_fetch_spread(self, vids_arr: np.ndarray):
+        n_shards = self.n_shards
+        desc: list = [None] * len(vids_arr)
+        # classify against a live replica's tables (replica-invariant)
+        uidx: dict[int, int] = {}
+        u_vids: list[int] = []
+        u_lens: list[int] = []
+        pos_of_u: list[list[int]] = []
+        l_pos: list[int] = []
+        for pos, v in enumerate(vids_arr.tolist()):
+            chain = self._meta_store(v % n_shards).h_chain.get(v)
+            if chain is None:
+                l_pos.append(pos)
+            else:
+                u = uidx.get(v)
+                if u is None:
+                    u = uidx[v] = len(u_vids)
+                    u_vids.append(v)
+                    u_lens.append(len(chain))
+                    pos_of_u.append([])
+                pos_of_u[u].append(pos)
+
+        # ---- ONE joint selection for the whole fetch: L vids (page-share
+        # weighted) and H chain pages (unit weight) compete for the same
+        # per-shard budget — planned separately, the hub pages would land
+        # on top of an already-balanced L assignment and re-skew the fetch
+        l_pos_arr = np.asarray(l_pos, dtype=np.int64)
+        l_vids = vids_arr[l_pos_arr]
+        item_vid = item_pg = item_row = u_lens_a = None
+        sel_vids = [l_vids]
+        sel_w = [self._l_share_weights(l_vids) if len(l_vids)
+                 else np.empty(0)]
+        sel_key = [2 * l_vids]                # even keys: L, by vid
+        if u_vids:
+            u_vids_a = np.asarray(u_vids, dtype=np.int64)
+            u_lens_a = np.asarray(u_lens, dtype=np.int64)
+            item_vid = u_vids_a[np.repeat(np.arange(len(u_vids)), u_lens_a)]
+            item_pg = _ramp(u_lens_a)
+            item_row = np.empty(len(item_vid), dtype=np.int64)
+            sel_vids.append(item_vid)
+            sel_w.append(np.ones(len(item_vid)))
+            # odd keys, chain-contiguous: a vid's pages stay together and
+            # split wherever the quotas land — page-granular spread
+            sel_key.append(
+                2 * (np.max(vids_arr) + 1
+                     + np.repeat(np.arange(len(u_vids)), u_lens_a)
+                     * (int(u_lens_a.max()) + 1) + item_pg) + 1)
+        all_vids = np.concatenate(sel_vids)
+        if not len(all_vids):
+            return None, desc, 0.0
+        owner = self._select_replicas(all_vids,
+                                      weights=np.concatenate(sel_w),
+                                      key=np.concatenate(sel_key))
+        owner_l, owner_h = owner[: len(l_vids)], owner[len(l_vids):]
+        parts: dict[int, dict] = {}
+        for s in np.unique(owner_l).tolist():
+            parts.setdefault(int(s), {})["l"] = np.nonzero(owner_l == s)[0]
+        for s in np.unique(owner_h).tolist():
+            parts.setdefault(int(s), {})["h"] = np.nonzero(owner_h == s)[0]
+
+        blocks: list[np.ndarray] = []
+        row_off = 0
+        worst = 0.0
+        for s in sorted(parts):
+            sh = self.shards[s]
+            work = parts[s]
+            blk = dsc = hblk = None
+            with sh.dev.defer_latency() as acct:
+                if "l" in work:
+                    blk, dsc = sh.fetch_plan(l_vids[work["l"]])
+                if "h" in work:
+                    items = work["h"]
+                    with sh._lock:
+                        lpns = np.fromiter(
+                            (sh.h_chain[int(item_vid[i])][int(item_pg[i])]
+                             for i in items.tolist()),
+                            dtype=np.int64, count=len(items))
+                        hblk = sh._read_pages_cached(lpns, "graph")
+            worst = max(worst, acct.us)
+            if dsc is not None:
+                for pl, d in zip(work["l"].tolist(), dsc):
+                    if d is None:
+                        continue
+                    pos = int(l_pos_arr[pl])
+                    if d[0] == "L":
+                        desc[pos] = ("L", d[1] + row_off, d[2], d[3])
+                    else:                     # defensive: kind skew
+                        desc[pos] = ("H", d[1] + row_off, d[2])
+                if blk is not None:
+                    blocks.append(blk)
+                    row_off += blk.shape[0]
+            if hblk is not None:
+                item_row[work["h"]] = row_off + np.arange(len(hblk))
+                blocks.append(hblk)
+                row_off += hblk.shape[0]
+        if not blocks:
+            return None, desc, worst
+        block = blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
+        if u_vids:
+            starts = np.concatenate([[0], np.cumsum(u_lens_a)[:-1]])
+            for u in range(len(u_vids)):
+                rows = item_row[starts[u]: starts[u] + int(u_lens_a[u])]
+                d = ("H", rows, block[rows, _H_COUNT].astype(np.int64))
+                for pos in pos_of_u[u]:
+                    desc[pos] = d
+        return block, desc, worst
+
+    # ------------------------------------------------------------ unit reads
+    def get_neighbors(self, vid: int) -> np.ndarray:
+        return self._with_failover(
+            lambda: self._live_stores(vid)[0][2].get_neighbors(int(vid)))
+
+    def get_embed(self, vid: int) -> np.ndarray:
+        self._check_emb_vid(vid)
+
+        def read():
+            s, r, sh = self._live_stores(vid)[0]
+            return sh.get_embed(int(self._stripe_off[s, r])
+                                + int(vid) // self.n_shards)
+        return self._with_failover(read)
+
+    def get_embeds(self, vids: np.ndarray) -> np.ndarray:
+        d = self.feature_dim
+        if not d:
+            raise KeyError("no embedding table loaded")
+        vids = np.asarray(vids, dtype=np.int64).reshape(-1)
+        out = np.empty((len(vids), d), dtype=np.float32)
+        if not len(vids):
+            return out
+        if int(vids.min()) < 0 or int(vids.max()) >= self._emb_rows:
+            self._check_emb_vid(int(vids.max()
+                                    if vids.max() >= self._emb_rows
+                                    else vids.min()))
+        local = vids // self.n_shards
+
+        def gather():
+            # group by stripe page so rows sharing a 4 KB page are fetched
+            # together from ONE replica (no duplicate page fetches); weigh
+            # rows in PAGES — page-mates split their page's single fetch —
+            # so embedding quotas stay commensurate with adjacency quotas
+            page_key = (local * d) // SLOTS_PER_PAGE
+            if d >= SLOTS_PER_PAGE:
+                w = np.full(len(vids), d / SLOTS_PER_PAGE)
+            else:
+                # page-mates are same-CLASS rows on one stripe page; rows of
+                # different classes sharing a raw page index live on
+                # different shards' stripes and must not pool their weight
+                ck = (vids % self.n_shards) * (int(page_key.max()) + 1) \
+                    + page_key
+                _, inv, cnt = np.unique(ck, return_inverse=True,
+                                        return_counts=True)
+                w = 1.0 / cnt[inv]
+            owner = self._select_replicas(vids, weights=w, key=page_key)
+            parts = [(s, np.nonzero(owner == s)[0])
+                     for s in range(self.n_shards)]
+            parts = [(s, pos) for s, pos in parts if len(pos)]
+
+            def fetch(item):
+                s, pos = item
+                role = (s - vids[pos] % self.n_shards) % self.n_shards
+                rows = self._stripe_off[s][role] + local[pos]
+                return pos, self.shards[s].get_embeds(rows)
+
+            for pos, rows in self._fetch_shards(parts, fetch):
+                out[pos] = rows
+            return out
+
+        return self._with_failover(gather)
+
+    # ----------------------------------------------------- mutation fan-out
+    def _fanout(self, stores, fn) -> int:
+        """Apply a mutation to every live replica; a replica that fails
+        mid-fan-out is skipped (its state died with the device — rebuild
+        recovers it from a survivor), so the live replicas never diverge."""
+        ok = 0
+        for s, r, sh in stores:
+            try:
+                fn(s, r, sh)
+                ok += 1
+            except DeviceFailedError:
+                continue
+        if not ok:
+            raise DeviceFailedError("every replica failed mid-write")
+        return ok
+
+    def add_vertex(self, vid: int, embed=None) -> None:
+        with self._mutate:
+            vid = int(vid)
+            self._fanout(self._live_stores(vid),
+                         lambda s, r, sh: sh.add_vertex(vid))
+            if embed is not None:
+                self.update_embed(vid, embed)
+
+    def update_embed(self, vid: int, embed: np.ndarray) -> None:
+        with self._mutate:
+            vid = int(vid)
+            self._check_emb_vid(vid)
+
+            def write(s, r, sh):
+                sh.update_embed(int(self._stripe_off[s, r])
+                                + vid // self.n_shards, embed)
+            self._fanout(self._live_stores(vid), write)
+
+    def add_edge(self, dst: int, src: int) -> None:
+        with self._mutate:
+            dst, src = int(dst), int(src)
+            for v in (dst, src):
+                self._fanout(
+                    self._live_stores(v),
+                    lambda s, r, sh, v=v: (sh.add_vertex(v)
+                                           if v not in sh.gmap else None))
+
+            def ins(vid, nbr, count):
+                def body(s, r, sh):
+                    with sh._lock:
+                        if count:
+                            sh.stats.unit_updates += 1
+                        sh._insert_neighbor(vid, nbr)
+                self._fanout(self._live_stores(vid), body)
+            ins(dst, src, True)
+            if dst != src:
+                ins(src, dst, False)
+
+    def delete_edge(self, dst: int, src: int) -> None:
+        with self._mutate:
+            dst, src = int(dst), int(src)
+
+            def rm(vid, nbr, count):
+                def body(s, r, sh):
+                    with sh._lock:
+                        if count:
+                            sh.stats.unit_updates += 1
+                        sh._remove_neighbor(vid, nbr)
+                self._fanout(self._live_stores(vid), body)
+            rm(dst, src, True)
+            if dst != src:
+                rm(src, dst, False)
+
+    def delete_vertex(self, vid: int) -> None:
+        with self._mutate:
+            vid = int(vid)
+            nbrs = self.get_neighbors(vid)
+            for nbr in nbrs:
+                nbr = int(nbr)
+                if nbr == vid:
+                    continue
+
+                def unlink(s, r, sh, nbr=nbr):
+                    with sh._lock:
+                        sh._remove_neighbor(nbr, vid)
+                self._fanout(self._live_stores(nbr), unlink)
+
+            def drop(s, r, sh):
+                with sh._lock:
+                    sh.stats.unit_updates += 1
+                    sh._drop_vertex_pages(vid)
+            self._fanout(self._live_stores(vid), drop)
+
+    # --------------------------------------------------------------- export
+    def to_adjacency(self) -> dict[int, set[int]]:
+        out: dict[int, set[int]] = {}
+        for sh in self.shards:
+            if not sh.dev.failed:
+                out.update(sh.to_adjacency())
+        return out
+
+    # ---------------------------------------------------------- fault path
+    def fail_shard(self, shard: int) -> dict:
+        """Drop one device out of the array (fault injection / drain).
+
+        Refuses when any vertex class owned by the shard would lose its
+        last live replica — that is data loss, not degradation."""
+        with self._mutate:
+            s = int(shard)
+            if not 0 <= s < self.n_shards:
+                raise ValueError(f"shard {s} out of range")
+            sh = self.shards[s]
+            if sh.dev.failed:
+                return {"shard": s, "already_failed": True}
+            n_shards, rep = self.n_shards, self.replication
+            lost = []
+            for r in range(rep):
+                c = (s - r) % n_shards
+                if not any((c + r2) % n_shards != s
+                           and not self.shards[(c + r2) % n_shards].dev.failed
+                           for r2 in range(rep)):
+                    lost.append(c)
+            if lost:
+                raise DeviceFailedError(
+                    f"failing shard {s} would lose vertex class(es) "
+                    f"{sorted(lost)} (replication={rep})")
+            sh.dev.fail()
+            if sh.cache is not None:
+                sh.cache.clear()          # device DRAM died with the device
+            self._reset_feedback()        # load history predates the fault
+            return {"shard": s,
+                    "degraded_classes":
+                        sorted({(s - r) % n_shards for r in range(rep)})}
+
+    @staticmethod
+    def _clone_dev_profile(old: BlockDevice) -> BlockDevice:
+        """A fresh replacement device with the failed one's perf profile."""
+        return BlockDevice(
+            old.num_pages, simulate_latency=old.simulate_latency,
+            page_read_us=old.page_read_us, page_write_us=old.page_write_us,
+            command_latency_us=old.command_latency_us,
+            trace_events=old.stats.events.maxlen is None)
+
+    @staticmethod
+    def _clone_h_chain(src: GraphStore, dst: GraphStore, vid: int) -> None:
+        """Page-exact H-chain clone (slot layout and per-page counts
+        preserved, next pointers re-addressed).  Replicas keep IDENTICAL
+        chain page layouts — bulk writes and unit mutations are
+        deterministic given the same op history, and rebuilds clone — which
+        is what lets the spread fetch serve page i of a chain from any
+        live owner."""
+        with src._lock:
+            chain = list(src.h_chain[vid])
+            pages = src.dev.read_pages(np.asarray(chain, dtype=np.int64),
+                                       tag="graph")
+        new_lpns = [dst.dev.alloc_front() for _ in chain]
+        for i, lpn in enumerate(new_lpns):
+            page = pages[i].copy()
+            page[_H_NEXT] = new_lpns[i + 1] if i + 1 < len(new_lpns) else -1
+            dst.dev.write_page(lpn, page)
+        dst.h_table[vid] = (new_lpns[0], new_lpns[-1])
+        dst.h_chain[vid] = new_lpns
+        dst.gmap[vid] = "H"
+        dst.stats.pages_h += len(new_lpns)
+
+    def rebuild_shard(self, shard: int) -> dict:
+        """Re-materialise a failed shard onto a fresh device from survivors.
+
+        Adjacency: L vids are exported per owned class from that class's
+        surviving replica in one batched read and re-laid through the bulk
+        packing (neighbor order is replica-invariant — every replica
+        applied the same mutation sequence; L degrees never exceed
+        ``h_threshold``, so no vid is reclassified); H chains are cloned
+        page-exactly, preserving the cross-replica chain layout the
+        page-granular spread fetch relies on.  Embeddings: each stripe
+        gathered from its class's survivor at the survivor's stripe
+        offset.  Mutations that landed while degraded are naturally
+        included — the survivors ARE the current state.  The replacement
+        starts with a cold (fresh) page cache.
+        """
+        with self._mutate:
+            s = int(shard)
+            old = self.shards[s]
+            if not old.dev.failed:
+                raise ValueError(f"shard {s} is not failed")
+            t0 = time.perf_counter()
+            n_shards, rep = self.n_shards, self.replication
+            sh = GraphStore(self._clone_dev_profile(old.dev),
+                            h_threshold=self.h_threshold)
+            vids_all: list[int] = []
+            nbrs_all: list[np.ndarray] = []
+            n_cloned = 0
+            for r in range(rep):
+                c = (s - r) % n_shards
+                src = self.shards[self._survivor_of_class(c, exclude=s)]
+                vids_c = sorted(v for v in src.gmap if v % n_shards == c)
+                l_vids = [v for v in vids_c if src.gmap[v] == "L"]
+                if l_vids:
+                    vids_all.extend(l_vids)
+                    nbrs_all.extend(src.get_neighbors_batch(l_vids))
+                for v in vids_c:
+                    if src.gmap[v] == "H":
+                        self._clone_h_chain(src, sh, v)
+                        n_cloned += 1
+            if vids_all:
+                order = np.argsort(np.asarray(vids_all), kind="stable")
+                vids_srt = np.asarray(vids_all, dtype=np.int64)[order]
+                n_glob = max(self.num_vertices, int(vids_srt[-1]) + 1)
+                deg = np.zeros(n_glob, dtype=np.int64)
+                deg[vids_srt] = [len(nbrs_all[i]) for i in order]
+                indptr = np.concatenate([[0], np.cumsum(deg)])
+                indices = np.concatenate(
+                    [nbrs_all[i] for i in order]).astype(np.int32)
+                sh._write_adjacency(indptr, indices)
+            if self._emb_rows and self.feature_dim:
+                stripes = []
+                for r in range(rep):
+                    c = (s - r) % n_shards
+                    s2 = self._survivor_of_class(c, exclude=s)
+                    role2 = (s2 - c) % n_shards
+                    rows = (int(self._stripe_off[s2, role2])
+                            + np.arange(self._rows_of_class(c)))
+                    stripes.append(self.shards[s2].get_embeds(rows))
+                sh._write_embedding_table(np.concatenate(stripes))
+            sh.num_vertices = max(sh.num_vertices, old.num_vertices)
+            if old.cache is not None:
+                sh.attach_cache(old.cache.clone_empty())
+            self.shards[s] = sh
+            self._reset_feedback()        # fresh topology, fresh history
+            return {"shard": s, "seconds": time.perf_counter() - t0,
+                    "vertices": len(vids_all) + n_cloned,
+                    "h_chains_cloned": n_cloned,
+                    "pages_written": sh.dev.stats.written_pages}

@@ -1,0 +1,100 @@
+"""BlockDevice fault flag + busy-until command serialization (the honest
+one-command-pipeline model) + embedding-space growth relocation."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.store import BlockDevice, DeviceFailedError, GraphStore
+
+
+# ------------------------------------------------------------- fault flag
+def test_failed_device_rejects_every_command():
+    dev = BlockDevice(64)
+    page = np.zeros(1024, dtype=np.int32)
+    dev.write_page(0, page)
+    dev.fail()
+    for fn in (lambda: dev.read_page(0),
+               lambda: dev.read_pages([0]),
+               lambda: dev.read_span(0, 1),
+               lambda: dev.write_page(0, page),
+               lambda: dev.write_span(0, page),
+               lambda: dev.alloc_front(),
+               lambda: dev.alloc_back(1),
+               lambda: dev.free_page(0)):
+        with pytest.raises(DeviceFailedError):
+            fn()
+    # data is unreachable, not erased — attribute access still works
+    assert dev.stats.written_pages == 1
+
+
+# ------------------------------------------------------ busy-until queueing
+def test_concurrent_commands_on_one_device_serialize():
+    """Two clients issuing a 15 ms command at the same instant must take
+    ~30 ms wall — the device has ONE command pipeline.  (The old model
+    slept in each calling thread independently, so overlapping commands
+    finished in ~15 ms total: silent infinite command concurrency.)"""
+    dev = BlockDevice(64, simulate_latency=True, command_latency_us=15000)
+
+    t0 = time.perf_counter()
+    dev.read_page(0)
+    single = time.perf_counter() - t0
+
+    start = threading.Barrier(2)
+
+    def client():
+        start.wait()
+        dev.read_page(0)
+
+    ths = [threading.Thread(target=client) for _ in range(2)]
+    t0 = time.perf_counter()
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    concurrent = time.perf_counter() - t0
+    assert concurrent >= 1.7 * single, (single, concurrent)
+
+
+def test_serial_commands_unaffected_by_busy_model():
+    dev = BlockDevice(64, simulate_latency=True, command_latency_us=2000)
+    t0 = time.perf_counter()
+    dev.read_page(0)
+    dev.read_page(1)
+    wall = time.perf_counter() - t0
+    assert 0.004 <= wall < 0.1
+
+
+def test_defer_latency_accumulates_without_sleeping():
+    dev = BlockDevice(64, simulate_latency=True, command_latency_us=50000)
+    t0 = time.perf_counter()
+    with dev.defer_latency() as acct:
+        dev.read_page(0)
+        dev.read_page(1)
+    assert time.perf_counter() - t0 < 0.040        # no inline sleep paid
+    assert acct.us == pytest.approx(100000)
+    assert dev._busy_until <= time.perf_counter()  # pipeline not reserved
+
+
+# ----------------------------------------------------- growth relocation
+def test_grow_relocation_keeps_embedding_reads_valid():
+    """Neighbor-space growth AFTER bulk ingest relocates the embedding
+    span; the store's base pointer must follow or embedding reads return
+    the zeroed old span."""
+    store = GraphStore(BlockDevice(num_pages=64), h_threshold=8)
+    rng = np.random.default_rng(0)
+    n, feat = 40, 64
+    edges = np.stack([rng.integers(0, n, 200), rng.integers(0, n, 200)],
+                     axis=1)
+    emb = rng.standard_normal((n, feat)).astype(np.float32)
+    store.update_graph(edges, emb)
+    np.testing.assert_array_equal(store.get_embeds(np.arange(n)), emb)
+    pages0 = store.dev.num_pages
+    v = n
+    while store.dev.num_pages == pages0:           # force a front-space grow
+        store.add_vertex(v)
+        store.add_edge(v, int(rng.integers(0, n)))
+        v += 1
+    np.testing.assert_array_equal(store.get_embeds(np.arange(n)), emb)
+    np.testing.assert_array_equal(store.get_embed(3), emb[3])
