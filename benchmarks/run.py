@@ -4,8 +4,9 @@
 
 Prints ``name,us_per_call,derived`` CSV (scaffold contract).  ``--smoke``
 runs a CI-sized subset (fig19 batch-prep + fig21 fast-path + fig22 serving
-+ fig23 sharding on the small workloads) so sampler/engine/scale-out perf
-regressions surface at PR time.  The
++ fig23 sharding + fig24 replication + fig25 multi-host on the small
+workloads) so sampler/engine/scale-out perf regressions surface at PR
+time.  The
 roofline table (LM archs) reads the dry-run artifacts; run
 ``python -m repro.launch.dryrun --all --both-meshes`` first for §Roofline.
 """
@@ -43,7 +44,7 @@ def main(argv=None) -> None:
                    fig16_pure_inference, fig17_opbreakdown, fig18_bulk,
                    fig19_batchprep, fig20_mutable, fig21_fastpath,
                    fig22_serving, fig23_sharded, fig24_replicated,
-                   table5_datasets)
+                   fig25_multihost, table5_datasets)
     suites = {
         "table5": table5_datasets.run,
         "fig3": fig3_breakdown.run,
@@ -58,6 +59,7 @@ def main(argv=None) -> None:
         "fig22": fig22_serving.run,
         "fig23": fig23_sharded.run,
         "fig24": fig24_replicated.run,
+        "fig25": fig25_multihost.run,
     }
     if args.smoke:
         suites = {
@@ -66,6 +68,7 @@ def main(argv=None) -> None:
             "fig22": lambda: fig22_serving.run(smoke=True),
             "fig23": lambda: fig23_sharded.run(smoke=True),
             "fig24": lambda: fig24_replicated.run(smoke=True),
+            "fig25": lambda: fig25_multihost.run(smoke=True),
         }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -22,9 +22,18 @@ and the post-rebuild answer is asserted bit-identical to the degraded one
 healthy-vs-degraded bit-identity on a quiesced store is asserted by
 ``tests/test_replicated_store.py`` and ``benchmarks/fig24_replicated``).
 
+With ``--remote-shards N`` the array is multi-host: every shard sits
+behind its own RoP endpoint (``make_rop_endpoints`` — per-shard SQ/CQ
+pairs + PCIeChannel mmap buffers + a shard-host poll thread), the
+coordinator speaks only the ShardEndpoint protocol, and rebuild streams
+survivor pages shard-to-shard over the peer links.  Results stay
+bit-identical to the in-process array.
+
   PYTHONPATH=src python examples/serve_gnn.py [--requests 20] [--clients 8]
   PYTHONPATH=src python examples/serve_gnn.py --shards 3 --replication 2 \
       --kill-shard 1
+  PYTHONPATH=src python examples/serve_gnn.py --remote-shards 3 \
+      --replication 2 --kill-shard 1
 """
 import argparse
 import threading
@@ -35,6 +44,7 @@ from repro.core.service import HolisticGNNService, make_service_dfg
 from repro.core import gnn
 from repro.kernels.ops import program_config
 from repro.serve import ServingRuntime
+from repro.store import make_rop_endpoints
 
 
 def main():
@@ -47,6 +57,10 @@ def main():
     ap.add_argument("--shards", type=int, default=1,
                     help="CSSD array size: the graph is hash-partitioned "
                          "across N simulated devices (1 = single CSSD)")
+    ap.add_argument("--remote-shards", type=int, default=None,
+                    help="multi-host array: N shards each behind its own "
+                         "RoP endpoint (per-shard SQ/CQ pair + host poll "
+                         "thread) instead of in-process")
     ap.add_argument("--replication", type=int, default=1,
                     help="R-way replica placement across the array "
                          "(R >= 2 enables fail/rebuild)")
@@ -56,6 +70,8 @@ def main():
     args = ap.parse_args()
     if args.kill_shard is not None and args.replication < 2:
         ap.error("--kill-shard needs --replication >= 2")
+    if args.remote_shards is not None and args.shards != 1:
+        ap.error("--remote-shards and --shards are mutually exclusive")
 
     rng = np.random.default_rng(0)
     n, e, feat = 5000, 40000, 128
@@ -63,9 +79,13 @@ def main():
                      1).astype(np.int64)
     emb = rng.standard_normal((n, feat)).astype(np.float32)
 
+    endpoints = None
+    if args.remote_shards is not None:
+        endpoints = make_rop_endpoints(args.remote_shards, h_threshold=64)
     svc = HolisticGNNService(h_threshold=64, pad_to=64, cache_pages=4096,
-                             n_shards=args.shards,
-                             replication=args.replication)
+                             n_shards=args.shards, endpoints=endpoints,
+                             replication=args.replication,
+                             stats_staleness_s=(0.01 if endpoints else 0.0))
     runtime = ServingRuntime(svc, n_queues=min(args.clients, 8),
                              max_group=16, max_pending=512)
     boot = runtime.client()
@@ -209,6 +229,11 @@ def main():
         print(f"  shard {i}: {sh['device']['read_pages']} reads, "
               f"{sh['device']['written_pages']} writes, "
               f"cache hit rate {hr:.2f}")
+    for link in qos.get("shard_links") or []:
+        extra = (f", {link['channel_bytes'] / 1e6:.1f} MB over RoP"
+                 if "channel_bytes" in link else " (in-process)")
+        print(f"  link {link['shard']}: {link['calls']} commands{extra}")
+    svc.close()
     if errors:
         print(f"{len(errors)} failed requests; first: {errors[0]}")
         raise SystemExit(1)

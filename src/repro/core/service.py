@@ -28,31 +28,46 @@ class HolisticGNNService:
                  dev: BlockDevice | None = None,
                  cache_pages: int | None = None,
                  n_shards: int = 1, devs: list | None = None,
-                 replication: int = 1):
+                 endpoints: list | None = None,
+                 replication: int = 1,
+                 stats_staleness_s: float = 0.0):
         """``n_shards > 1`` (or an explicit ``devs`` device list) backs the
         service with a hash-partitioned CSSD array (``ShardedGraphStore``)
         instead of one device — every RPC below is shard-transparent, and
         sampling stays bit-identical to the single-device store.
 
+        ``endpoints=[...]`` passes the array as pre-built
+        ``ShardEndpoint`` objects instead — e.g. ``make_rop_endpoints(N)``
+        for a multi-host array whose shards sit behind their own RoP
+        links.  The service (and everything above it) is
+        endpoint-transparent: the same RPCs, the same bit-identical
+        sampling, whichever transport the shards use.
+
         ``replication=R >= 2`` upgrades the array to a
         ``ReplicatedGraphStore``: R-way replica placement with
-        replica-spread reads, write fan-out, and the ``fail_shard`` /
-        ``rebuild_shard`` RPCs for serving through device failures."""
-        if devs is not None or n_shards > 1 or replication > 1:
+        replica-spread reads (fed by a gossiped counter view refreshed at
+        most every ``stats_staleness_s`` seconds), write fan-out, and the
+        ``fail_shard`` / ``rebuild_shard`` RPCs for serving through
+        device failures."""
+        if endpoints is not None or devs is not None or n_shards > 1 \
+                or replication > 1:
             if dev is not None:
                 raise ValueError("dev= is single-device only; pass the "
-                                 "array as devs=[...] instead")
+                                 "array as devs=[...] or endpoints=[...] "
+                                 "instead")
+            arr_n = None if (devs is not None or endpoints is not None) \
+                else n_shards
             if replication > 1:
                 from ..store.sharded import ReplicatedGraphStore
                 self.store = ReplicatedGraphStore(
-                    n_shards=None if devs is not None else n_shards,
-                    devs=devs, replication=replication,
-                    h_threshold=h_threshold)
+                    n_shards=arr_n, devs=devs, endpoints=endpoints,
+                    replication=replication, h_threshold=h_threshold,
+                    stats_staleness_s=stats_staleness_s)
             else:
                 from ..store.sharded import ShardedGraphStore
                 self.store = ShardedGraphStore(
-                    n_shards=None if devs is not None else n_shards,
-                    devs=devs, h_threshold=h_threshold)
+                    n_shards=arr_n, devs=devs, endpoints=endpoints,
+                    h_threshold=h_threshold)
         else:
             self.store = GraphStore(dev or BlockDevice(),
                                     h_threshold=h_threshold)
@@ -235,50 +250,81 @@ class HolisticGNNService:
 
         The RPC dispatcher injects its own rolling per-method stats under
         ``rpc``; the serving runtime contributes scheduler + transport QoS
-        under ``qos`` via ``qos_provider``.  Against a sharded store the
-        ``device``/``embcache`` sections aggregate the array and ``shards``
-        breaks out per-shard cache hit rates and page counters, so
-        operators (and fig23/fig24) can read shard balance without poking
-        store internals.  Against a replicated array the write-side
-        aggregates (``written_pages``, ``unit_updates``) count per-replica
-        applications — a logical mutation really does cost R device
-        writes — so compare them across replication factors accordingly.
+        under ``qos`` via ``qos_provider``.  Against a sharded store every
+        per-shard figure comes from ONE endpoint ``stats`` snapshot per
+        shard — never from poking shard internals — so the report is
+        byte-for-byte the same shape whether the shards are in-process
+        (``LocalShardEndpoint``) or behind their own RoP links
+        (``RopShardEndpoint``); each shard entry also carries the
+        endpoint's device-side per-method RPC stats under ``rpc``.  The
+        ``device``/``embcache`` sections aggregate the array and
+        ``shards`` breaks out per-shard cache hit rates and page
+        counters, so operators (and fig23/fig24/fig25) can read shard
+        balance without reaching into the array.  Against a replicated
+        array the write-side aggregates (``written_pages``,
+        ``unit_updates``) count per-replica applications — a logical
+        mutation really does cost R device writes — so compare them
+        across replication factors accordingly.
         """
-        st = self.store.stats
-        shards = getattr(self.store, "shards", None)
-        devs = [sh.dev for sh in shards] if shards else [self.store.dev]
-        out = {
-            "store": {"pages_h": st.pages_h,
-                      "pages_l": st.pages_l,
-                      "unit_updates": st.unit_updates,
-                      "l_evictions": st.l_evictions,
-                      "num_vertices": self.store.num_vertices,
-                      "n_shards": len(devs),
-                      "io_wait_us": getattr(self.store, "io_wait_us", 0.0)},
-            "device": {k: sum(self._device_counters(d.stats)[k]
-                              for d in devs)
-                       for k in ("read_pages", "written_pages",
-                                 "read_bytes", "written_bytes")},
-        }
-        if shards:
-            out["shards"] = [
-                {"device": self._device_counters(sh.dev.stats),
-                 "pages_l": sh.stats.pages_l, "pages_h": sh.stats.pages_h,
-                 "failed": sh.dev.failed,
-                 "embcache": (sh.cache.stats.snapshot()
-                              if sh.cache is not None else None)}
-                for sh in shards]
+        dev_keys = ("read_pages", "written_pages",
+                    "read_bytes", "written_bytes")
+        if hasattr(self.store, "shard_stats"):
+            snaps = self.store.shard_stats()
+            out = {
+                "store": {
+                    "pages_h": sum(s["store"]["pages_h"] for s in snaps),
+                    "pages_l": sum(s["store"]["pages_l"] for s in snaps),
+                    "unit_updates": sum(s["store"]["unit_updates"]
+                                        for s in snaps),
+                    "l_evictions": sum(s["store"]["l_evictions"]
+                                       for s in snaps),
+                    "num_vertices": self.store.num_vertices,
+                    "n_shards": len(snaps),
+                    "io_wait_us": self.store.io_wait_us},
+                "device": {k: sum(s["device"][k] for s in snaps)
+                           for k in dev_keys},
+                "shards": [
+                    {"device": s["device"],
+                     "pages_l": s["store"]["pages_l"],
+                     "pages_h": s["store"]["pages_h"],
+                     "failed": s["failed"],
+                     "embcache": s["cache"],
+                     "rpc": s.get("rpc")}
+                    for s in snaps],
+            }
+            if any(s["cache"] is not None for s in snaps):
+                from ..store.sharded import aggregate_cache_snapshots
+                out["embcache"] = aggregate_cache_snapshots(
+                    s["cache"] for s in snaps)
+        else:
+            st = self.store.stats
+            out = {
+                "store": {"pages_h": st.pages_h,
+                          "pages_l": st.pages_l,
+                          "unit_updates": st.unit_updates,
+                          "l_evictions": st.l_evictions,
+                          "num_vertices": self.store.num_vertices,
+                          "n_shards": 1,
+                          "io_wait_us": 0.0},
+                "device": self._device_counters(self.store.dev.stats),
+            }
+            if self.store.cache is not None:
+                out["embcache"] = self.store.cache.stats.snapshot()
         repl = getattr(self.store, "replication", None)
         if repl is not None:
             out["replication"] = {
                 "r": repl,
                 "failed_shards": [i for i, f in
                                   enumerate(self.store.failed_shards) if f]}
-        if self.store.cache is not None:
-            out["embcache"] = self.store.cache.stats.snapshot()
         if self.qos_provider is not None:
             out["qos"] = self.qos_provider()
         return out
+
+    def close(self) -> None:
+        """Release array resources (remote shard hosts stop their poll
+        threads); a no-op for single-device services."""
+        if hasattr(self.store, "close"):
+            self.store.close()
 
     def plugin(self, shared_lib: str):
         """Paper Plugin(shared_lib): import a module exposing register(api)."""

@@ -192,19 +192,69 @@ class MultiQueueRoP:
 
 
 class AsyncRPCClient:
-    """Host-side stub bound to one queue pair: submit many, reap any order."""
+    """Host-side stub bound to one queue pair: submit many, reap any order.
 
-    def __init__(self, rop: MultiQueueRoP, qid: int):
+    Shares the synchronous stub's error/stats contract (``check_reply`` +
+    per-method ``MethodStats``), so whichever transport a shard endpoint
+    uses, its host-side accounting looks the same.  An optional
+    ``PCIeChannel`` pair models the RoP mmap-buffer copies per direction
+    (byte/copy counters for the multi-host benchmarks); the channels are
+    guarded by a client-local lock so several coordinator threads may
+    share one stub.
+    """
+
+    def __init__(self, rop: MultiQueueRoP, qid: int, *, tx=None, rx=None):
+        from .client import ClientStats           # shared accounting
         self.rop = rop
         self.qid = int(qid)
+        self.tx = tx                              # host -> device channel
+        self.rx = rx                              # device -> host channel
+        self._stats = ClientStats()
+        self._pending: dict[int, tuple[str, float]] = {}
+        self._lock = threading.Lock()
+
+    @property
+    def method_stats(self) -> dict:
+        return self._stats.method_stats
+
+    def stats_snapshot(self) -> dict:
+        return self._stats.stats_snapshot()
 
     def submit(self, method: str, **kwargs) -> int:
+        t0 = time.perf_counter()
         packet = serialize({"method": method, "kwargs": kwargs})
-        return self.rop.submit(self.qid, packet, method=method)
+        if self.tx is not None:
+            with self._lock:
+                self.tx.stats.serialize_secs += time.perf_counter() - t0
+                self.tx.push(packet)              # memcpy host -> mmap
+                packet = self.tx.pull()           # memcpy mmap -> device
+        cmd_id = self.rop.submit(self.qid, packet, method=method)
+        with self._lock:
+            self._pending[cmd_id] = (method, t0)
+        return cmd_id
 
     def result(self, cmd_id: int, *, timeout: float | None = None):
-        reply = self.rop.wait_completion(self.qid, cmd_id, timeout=timeout)
-        return check_reply(deserialize(reply))
+        try:
+            reply = self.rop.wait_completion(self.qid, cmd_id,
+                                             timeout=timeout)
+        except TimeoutError:
+            # the ring marks the command abandoned (its completion will be
+            # dropped); the host-side pending entry must go too, or
+            # sustained timeouts grow it without bound
+            with self._lock:
+                method, t0 = self._pending.pop(cmd_id,
+                                               ("?", time.perf_counter()))
+            self._stats.record(method, time.perf_counter() - t0, False)
+            raise
+        with self._lock:
+            method, t0 = self._pending.pop(cmd_id, ("?", time.perf_counter()))
+            if self.rx is not None:
+                self.rx.push(reply)               # memcpy device -> mmap
+                reply = self.rx.pull()            # memcpy mmap -> host
+        resp = deserialize(reply)
+        self._stats.record(method, time.perf_counter() - t0,
+                           bool(resp.get("ok")))
+        return check_reply(resp, f"RPC {method}")
 
     def call(self, method: str, *, timeout: float | None = None, **kwargs):
         """Synchronous convenience: submit + wait."""

@@ -30,14 +30,23 @@ _MAGIC = b"RoP1"
 
 def _encode(obj, buffers: list[np.ndarray]):
     if isinstance(obj, np.ndarray):
+        # harden the payload path: force contiguity (sliced / transposed /
+        # negative-stride views) and ship the dtype as an unambiguous
+        # byte-order-explicit string — ``str(dtype)`` of a native array is
+        # a NAME ('float32'), of a byte-swapped one a SPEC ('>f4'), and
+        # only ``dtype.str`` round-trips both through ``np.dtype(...)``.
         buffers.append(np.ascontiguousarray(obj))
         b = buffers[-1]
-        return {"__nd__": len(buffers) - 1, "dtype": str(b.dtype),
-                "shape": list(b.shape)}
+        # shape comes from the ORIGINAL array: ascontiguousarray promotes
+        # 0-d arrays to 1-d, which would silently change the decoded rank
+        return {"__nd__": len(buffers) - 1, "dtype": b.dtype.str,
+                "shape": list(obj.shape)}
     if isinstance(obj, (np.integer,)):
         return int(obj)
     if isinstance(obj, (np.floating,)):
         return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
     if isinstance(obj, dict):
         return {k: _encode(v, buffers) for k, v in obj.items()}
     if isinstance(obj, (list, tuple)):
@@ -63,11 +72,13 @@ def _decode(obj, buffers: list[np.ndarray]):
 def serialize(obj) -> bytes:
     buffers: list[np.ndarray] = []
     meta = json.dumps(_encode(obj, buffers)).encode()
-    parts = [_MAGIC, struct.pack("<II", len(meta), len(buffers)), meta]
+    parts: list = [_MAGIC, struct.pack("<II", len(meta), len(buffers)), meta]
     for b in buffers:
-        raw = b.tobytes()
-        parts.append(struct.pack("<Q", len(raw)))
-        parts.append(raw)
+        parts.append(struct.pack("<Q", b.nbytes))
+        # zero-copy handoff: join() reads straight out of the array
+        # buffer — tobytes() would copy every payload twice.  memoryview
+        # cannot cast zero-length shapes, so empty payloads ship as b"".
+        parts.append(memoryview(b).cast("B") if b.nbytes else b"")
     return b"".join(parts)
 
 
@@ -89,13 +100,19 @@ def deserialize(data: bytes):
 def check_reply(resp: dict, label: str = "RPC"):
     """Decode a reply dict: return the result, or raise with the
     device-side error (and its formatted traceback, when shipped).
-    Shared by every host-side stub so the error contract lives here."""
+    Shared by every host-side stub so the error contract lives here.
+    The raised error carries the raw device error string as
+    ``remote_error`` so callers that must re-raise a typed exception
+    (e.g. ``DeviceFailedError`` for the array failover path) can map it
+    without parsing the formatted message."""
     if resp.get("ok"):
         return resp.get("result")
     msg = f"{label} failed: {resp.get('error')}"
     if resp.get("traceback"):
         msg += "\n--- device traceback ---\n" + resp["traceback"]
-    raise RuntimeError(msg)
+    err = RuntimeError(msg)
+    err.remote_error = str(resp.get("error") or "")
+    raise err
 
 
 @dataclass
@@ -134,7 +151,9 @@ class PCIeChannel:
         """Device parses the PCIe command and copies mmap->internal memory."""
         assert self._doorbell, "doorbell not rung"
         t0 = time.perf_counter()
-        out = bytes(self._buf[: self._len])           # memcpy #2 (mmap->device)
+        # bytes(memoryview) is ONE memcpy; bytes(bytearray[:n]) would cut
+        # an intermediate bytearray first and copy the payload twice
+        out = bytes(memoryview(self._buf)[: self._len])
         self.stats.copy_secs += time.perf_counter() - t0
         self._doorbell = False
         return out

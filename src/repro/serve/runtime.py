@@ -11,12 +11,17 @@ Command routing mirrors the device firmware split:
     dispatches immediately through the ordinary RPC server path, so a
     mutable-graph update is never stuck behind a model execution.
 
-The runtime is shard-transparent: against a ``ShardedGraphStore``-backed
-service, a fused group's per-hop sampling fans one scatter-read out to
-every shard concurrently (the store's fetch pool), mutable commands route
-to the owning shard's device (whose ``on_write`` hook invalidates that
-shard's page cache), and the ``stats`` RPC carries per-shard cache + IO
-telemetry next to the scheduler QoS block.
+The runtime is shard- AND endpoint-transparent: against a
+``ShardedGraphStore``-backed service, a fused group's per-hop sampling
+submits one batched fetch to every shard endpoint and awaits them
+together, mutable commands route to the owning shard's endpoint (whose
+device ``on_write`` hook invalidates that shard's page cache), and the
+``stats`` RPC carries per-shard cache + IO telemetry — plus, for arrays,
+a per-endpoint link snapshot (``shard_links``) — next to the scheduler
+QoS block.  Whether the shards are in-process (``LocalShardEndpoint``)
+or remote behind their own RoP SQ/CQ pairs (``RopShardEndpoint``,
+``examples/serve_gnn.py --remote-shards``), the serving results are
+bit-identical.
 
 It is failure-transparent too: against a replicated array
 (``replication >= 2``), ``fail_shard``/``rebuild_shard`` dispatch as
@@ -168,4 +173,24 @@ class ServingRuntime:
         out = self.scheduler.qos.snapshot(
             queue_depth=self.scheduler.queue_depth)
         out["transport"] = self.rop.stats_snapshot()
+        links = self.shard_link_snapshot()
+        if links is not None:
+            out["shard_links"] = links
         return out
+
+    def shard_link_snapshot(self) -> list[dict] | None:
+        """Host-side view of the coordinator->shard endpoint links: total
+        commands issued and (for RoP endpoints) bytes through the mmap
+        channels — the multi-host observability the ``stats`` RPC's QoS
+        block carries next to the scheduler counters.  None for
+        single-device services (there is no array)."""
+        endpoints = getattr(self.service.store, "endpoints", None)
+        if endpoints is None:
+            return None
+        links = []
+        for s, ep in enumerate(endpoints):
+            entry = {"shard": s, "calls": ep.rpc_calls()}
+            if hasattr(ep, "channel_bytes"):
+                entry["channel_bytes"] = ep.channel_bytes()
+            links.append(entry)
+        return links

@@ -1,6 +1,9 @@
 from .blockdev import (BlockDevice, DeviceFailedError, PAGE_BYTES,
                        SLOTS_PER_PAGE)
 from .graphstore import GraphStore, preprocess_edges
+from .endpoint import (LocalShardEndpoint, RopShardEndpoint, ShardEndpoint,
+                       ShardHost, ShardService, make_local_endpoints,
+                       make_rop_endpoints)
 from .sharded import ReplicatedGraphStore, ShardedGraphStore, partition_csr
 from .sampler import (sample_batch, sample_batch_ref, pad_batch,
                       SampledBatch, LayerBlock)
@@ -8,5 +11,8 @@ from .sampler import (sample_batch, sample_batch_ref, pad_batch,
 __all__ = ["BlockDevice", "DeviceFailedError", "PAGE_BYTES",
            "SLOTS_PER_PAGE", "GraphStore", "ShardedGraphStore",
            "ReplicatedGraphStore", "partition_csr",
+           "ShardEndpoint", "ShardService", "LocalShardEndpoint",
+           "RopShardEndpoint", "ShardHost", "make_local_endpoints",
+           "make_rop_endpoints",
            "preprocess_edges", "sample_batch", "sample_batch_ref",
            "pad_batch", "SampledBatch", "LayerBlock"]

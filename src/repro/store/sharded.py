@@ -3,11 +3,15 @@
 The paper serves a hundred-billion-edge graph from ONE CSSD and argues
 scale-out as an array of such devices (§8; Fig. 18's channel-parallel
 bandwidth argument, one level up).  This coordinator makes that concrete:
-the graph lives partitioned across N BlockDevices, each behind its own
-partition-local ``GraphStore`` (mapping tables + page layout + optional
-device-DRAM page cache), and every batched query fans out so each shard
-pays its command latency *concurrently* — the same amortisation the flash
-channels give inside one device.
+the graph lives partitioned across N shards, each behind its own
+``ShardEndpoint`` (``store/endpoint.py``) — a partition-local
+``GraphStore`` reached either in-process (``LocalShardEndpoint``,
+zero-copy) or over a per-shard RoP link (``RopShardEndpoint``:
+MultiQueueRoP SQ/CQ pair + PCIeChannel, its own host poll thread).  The
+coordinator speaks ONLY the endpoint protocol — no shard attribute
+access — so the array can span hosts, and every batched query fans out
+so each shard pays its command latency *concurrently* — the same
+amortisation the flash channels give inside one device.
 
 Partitioning is by vertex hash (``vid % n_shards``):
 
@@ -20,18 +24,19 @@ Partitioning is by vertex hash (``vid % n_shards``):
     row space dense, so the shard-local address math (row -> page span) is
     exactly the single-device math;
   * **mutable ops** (unit updates, bulk ingest, embed RMWs) route to the
-    owning shard; each device's ``on_write`` hook invalidates that shard's
-    page cache, precisely as on one device.
+    owning shard's endpoint; each device's ``on_write`` hook invalidates
+    that shard's page cache, precisely as on one device.
 
 Read-side batched queries run in three explicit phases:
 
   plan   — partition the query positions by owning shard (pure table math,
            no I/O);
-  fetch  — ONE locked scatter-read per shard (``GraphStore.fetch_plan`` /
-           ``get_embeds``); each shard's simulated flash + command time is
-           deferred and the array pays a single wait equal to the slowest
-           shard, the same analytic concurrency model as the flash
-           channels inside one device (divide, don't sum);
+  fetch  — ONE batched ``fetch`` command per shard, SUBMITTED to every
+           shard and AWAITED together; each shard's simulated flash +
+           command time is deferred device-side and shipped back as
+           ``io_us``, and the array pays a single wait equal to the
+           slowest shard — the same analytic concurrency model as the
+           flash channels inside one device (divide, don't sum);
   build  — per-shard plans are recomposed into one global (block, desc) —
            descriptor rows re-based into the concatenated block — and fed
            to the SAME ``select_from_plan``/``neighbors_from_plan`` code
@@ -40,14 +45,17 @@ Read-side batched queries run in three explicit phases:
 Because the recomposed plan is position-identical to the single-device
 plan (same per-vid neighbor lists, same order) and the selection consumes
 its rng stream in global frontier order, an N-shard sample is
-**bit-identical** to the 1-device sample under the same seed —
-``tests/test_sharded_store.py`` asserts this for N in {1, 2, 4} all the
-way through ``run``/``run_batch``.
+**bit-identical** to the 1-device sample under the same seed — and, since
+both endpoint flavours run the same device-side code, a remote
+(``RopShardEndpoint``) array is bit-identical to a local one
+(``tests/test_sharded_store.py``, ``tests/test_endpoint.py``).
 
 ``ReplicatedGraphStore`` (below) extends the array with R-way replica
-placement: page-granular replica-spread reads against hub skew, write
-fan-out, and a ``fail_shard``/``rebuild_shard`` fault path — same
-plan->fetch->build contract, same bit-identity (see its docstring).
+placement: page-granular replica-spread reads against hub skew (fed by a
+gossiped, staleness-bounded view of the shards' read counters), write
+fan-out, and a ``fail_shard``/``rebuild_shard`` fault path whose rebuild
+streams survivor pages shard-to-shard over the endpoints' peer links —
+same plan->fetch->build contract, same bit-identity (see its docstring).
 """
 from __future__ import annotations
 
@@ -59,9 +67,10 @@ import numpy as np
 
 from .blockdev import (BlockDevice, DeviceFailedError, SLOTS_PER_PAGE,
                        sleep_us)
-from .graphstore import (BulkTimeline, GraphStore, GraphStoreStats,
-                         _H_COUNT, _H_NEXT, neighbors_from_plan,
-                         preprocess_edges, select_from_plan)
+from .endpoint import LocalShardEndpoint, make_local_endpoints
+from .graphstore import (BulkTimeline, GraphStoreStats, _H_COUNT,
+                         neighbors_from_plan, preprocess_edges,
+                         select_from_plan)
 from .sampler import _ramp
 
 
@@ -162,22 +171,35 @@ def _minmax_quotas(supplies: dict, cand_of: dict,
             for c in supplies}
 
 
-class _AggCacheStats:
-    """Aggregated view over the shards' per-device cache counters."""
+_CACHE_KEYS = ("hits", "misses", "evictions", "invalidations",
+               "bytes_from_cache", "bytes_from_dev")
 
-    def __init__(self, shards):
-        self._shards = shards
+
+def aggregate_cache_snapshots(snaps) -> dict:
+    """Sum per-shard cache snapshots into one array-level view (None
+    entries — shards without a cache — are skipped).  Single source of
+    truth for the counter key set, shared with the service ``stats``."""
+    tot = dict.fromkeys(_CACHE_KEYS, 0)
+    for snap in snaps:
+        if snap is None:
+            continue
+        for k in tot:
+            tot[k] += snap[k]
+    n = tot["hits"] + tot["misses"]
+    tot["hit_rate"] = tot["hits"] / n if n else 0.0
+    return tot
+
+
+class _AggCacheStats:
+    """Aggregated view over the shards' per-device cache counters,
+    pulled through the endpoint ``cache_stats`` snapshots."""
+
+    def __init__(self, endpoints):
+        self._endpoints = endpoints
 
     def snapshot(self) -> dict:
-        tot = dict.fromkeys(("hits", "misses", "evictions", "invalidations",
-                             "bytes_from_cache", "bytes_from_dev"), 0)
-        for sh in self._shards:
-            snap = sh.cache.stats.snapshot()
-            for k in tot:
-                tot[k] += snap[k]
-        n = tot["hits"] + tot["misses"]
-        tot["hit_rate"] = tot["hits"] / n if n else 0.0
-        return tot
+        return aggregate_cache_snapshots(
+            ep.call("cache_stats") for ep in self._endpoints)
 
     @property
     def hit_rate(self) -> float:
@@ -200,35 +222,48 @@ class _ShardedCacheView:
     """Duck-type of ``EmbeddingPageCache`` for telemetry/maintenance call
     sites (``.stats`` snapshots, ``.clear()``) spanning every shard."""
 
-    def __init__(self, shards):
-        self._shards = shards
-        self.stats = _AggCacheStats(shards)
+    def __init__(self, endpoints):
+        self._endpoints = endpoints
+        self.stats = _AggCacheStats(endpoints)
 
     def clear(self) -> None:
-        for sh in self._shards:
-            sh.cache.clear()
+        for ep in self._endpoints:
+            ep.call("clear_cache")
 
 
 class ShardedGraphStore:
     """Drop-in for ``GraphStore`` across the query/mutation surface the
-    service layer uses, backed by ``n_shards`` partition-local stores."""
+    service layer uses, backed by ``n_shards`` shard endpoints."""
 
     def __init__(self, n_shards: int | None = None,
-                 devs: list | None = None, *,
+                 devs: list | None = None, *, endpoints: list | None = None,
                  h_threshold: int = 128, feature_dim: int = 0):
-        if devs is not None:
-            if n_shards is not None and n_shards != len(devs):
+        if endpoints is not None:
+            if devs is not None:
+                raise ValueError("pass either endpoints=[...] or "
+                                 "devs=[...], not both")
+            if n_shards is not None and n_shards != len(endpoints):
                 raise ValueError(f"n_shards={n_shards} conflicts with "
-                                 f"{len(devs)} explicit devices")
-            n_shards = len(devs)
-        elif n_shards is None:
-            n_shards = 2
-        if n_shards < 1:
-            raise ValueError("need at least one shard")
-        self.n_shards = int(n_shards)
-        devs = devs or [BlockDevice() for _ in range(self.n_shards)]
-        self.shards = [GraphStore(d, h_threshold=h_threshold,
-                                  feature_dim=feature_dim) for d in devs]
+                                 f"{len(endpoints)} endpoints")
+            if not endpoints:
+                raise ValueError("need at least one shard")
+            self.endpoints = list(endpoints)
+            self.n_shards = len(self.endpoints)
+        else:
+            if devs is not None:
+                if n_shards is not None and n_shards != len(devs):
+                    raise ValueError(f"n_shards={n_shards} conflicts with "
+                                     f"{len(devs)} explicit devices")
+                n_shards = len(devs)
+            elif n_shards is None:
+                n_shards = 2
+            if n_shards < 1:
+                raise ValueError("need at least one shard")
+            self.n_shards = int(n_shards)
+            devs = devs or [BlockDevice() for _ in range(self.n_shards)]
+            self.endpoints = make_local_endpoints(
+                self.n_shards, devs, h_threshold=h_threshold,
+                feature_dim=feature_dim)
         self.h_threshold = int(h_threshold)
         self._bulk = BulkTimeline()
         # composite mutations span shards; one coordinator lock restores
@@ -241,8 +276,42 @@ class ShardedGraphStore:
         # the device-model latency, free of host scheduler noise — what the
         # scale-out benchmarks compare across array configurations.
         self.io_wait_us = 0.0
+        # coordinator-side bookkeeping (no synchronous shard peeks): the
+        # coordinator is the only writer, so it tracks the global vertex
+        # count and feature dim itself and boots them from one stats
+        # snapshot per endpoint.  Caller-supplied endpoints are adopted
+        # as built — the coordinator takes THEIR h_threshold rather than
+        # pushing its own default over a layout the shards may already
+        # have ingested with.
+        own_endpoints = endpoints is None
+        self._feature_dim = int(feature_dim)
+        self._num_vertices = 0
+        self._failed = [False] * self.n_shards
+        for s, ep in enumerate(self.endpoints):
+            if not getattr(ep, "_peers_wired", False):
+                ep.set_peers(self.endpoints)
+                ep._peers_wired = True
+            snap = ep.stats()
+            self._num_vertices = max(self._num_vertices,
+                                     int(snap["store"]["num_vertices"]))
+            self._feature_dim = max(self._feature_dim,
+                                    int(snap["store"]["feature_dim"]))
+            self._failed[s] = bool(snap["failed"])
+            if not own_endpoints:
+                self.h_threshold = int(snap["store"]["h_threshold"])
 
     # ------------------------------------------------------------- topology
+    @property
+    def shards(self) -> list:
+        """The in-process ``GraphStore`` objects (tests/benchmarks only —
+        coordinator code never touches them).  Raises for remote arrays,
+        whose stores live behind the RoP link."""
+        try:
+            return [ep.local_store for ep in self.endpoints]
+        except AttributeError:
+            raise RuntimeError("shards are remote (RopShardEndpoint); "
+                               "use the endpoint stats API") from None
+
     @property
     def devs(self) -> list:
         return [sh.dev for sh in self.shards]
@@ -250,16 +319,16 @@ class ShardedGraphStore:
     def owner_of(self, vid: int) -> int:
         return int(vid) % self.n_shards
 
-    def _owner(self, vid: int) -> GraphStore:
-        return self.shards[int(vid) % self.n_shards]
+    def _owner_ep(self, vid: int):
+        return self.endpoints[int(vid) % self.n_shards]
 
     def _map(self, fn, items):
         """Bulk-ingest fan-out: per-shard write bursts (ms-scale simulated
         sleeps, GIL released) overlap on real threads.  The pool is
         transient — created per phase, joined before returning — so idle
         stores hold no threads.  The read fan-out does NOT use threads:
-        its per-shard planning is interpreter-bound, so shard concurrency
-        there is modelled analytically instead (see ``_fetch_shards``)."""
+        batched reads are submitted to every endpoint and awaited
+        together instead (see ``_endpoint_fetch``)."""
         items = list(items)
         if len(items) <= 1:
             return [fn(x) for x in items]
@@ -269,39 +338,50 @@ class ShardedGraphStore:
 
     @property
     def feature_dim(self) -> int:
-        return self.shards[0].feature_dim
+        return self._feature_dim
 
     @property
     def num_vertices(self) -> int:
-        return max(sh.num_vertices for sh in self.shards)
+        return self._num_vertices
+
+    def shard_stats(self) -> list[dict]:
+        """One ``stats`` snapshot per shard endpoint — the telemetry the
+        service layer aggregates (identical shape local or remote)."""
+        return [ep.stats() for ep in self.endpoints]
 
     @property
     def stats(self) -> GraphStoreStats:
+        snaps = self.shard_stats()
         out = GraphStoreStats(
-            l_evictions=sum(sh.stats.l_evictions for sh in self.shards),
-            unit_updates=sum(sh.stats.unit_updates for sh in self.shards),
-            pages_h=sum(sh.stats.pages_h for sh in self.shards),
-            pages_l=sum(sh.stats.pages_l for sh in self.shards),
+            l_evictions=sum(s["store"]["l_evictions"] for s in snaps),
+            unit_updates=sum(s["store"]["unit_updates"] for s in snaps),
+            pages_h=sum(s["store"]["pages_h"] for s in snaps),
+            pages_l=sum(s["store"]["pages_l"] for s in snaps),
             bulk=self._bulk)
-        if self.cache is not None:
-            out.cache = self.cache.stats
+        if any(s["cache"] is not None for s in snaps):
+            out.cache = _AggCacheStats(self.endpoints)
         return out
+
+    def close(self) -> None:
+        """Release endpoint resources (remote hosts stop their poll
+        threads; local endpoints are no-ops)."""
+        for ep in self.endpoints:
+            ep.close()
 
     # ---------------------------------------------------------------- cache
     @property
     def cache(self):
-        if self.shards[0].cache is None:
+        if self.endpoints[0].call("cache_stats") is None:
             return None
-        return _ShardedCacheView(self.shards)
+        return _ShardedCacheView(self.endpoints)
 
     def attach_cache_pages(self, capacity_pages: int, **kw) -> None:
         """Split one device-DRAM budget evenly across the shards — each
         device fronts its own reads and invalidates through its own
         ``on_write`` hook, so coherence needs no cross-shard traffic."""
-        from .embcache import EmbeddingPageCache
         per_shard = max(1, int(capacity_pages) // self.n_shards)
-        for sh in self.shards:
-            sh.attach_cache(EmbeddingPageCache(per_shard), **kw)
+        for ep in self.endpoints:
+            ep.call("attach_cache", capacity_pages=per_shard, **kw)
 
     # ----------------------------------------------------------- bulk ingest
     def _prepare_emb_layout(self, n_rows: int) -> None:
@@ -336,6 +416,7 @@ class ShardedGraphStore:
         edge_array = np.asarray(edge_array, dtype=np.int64).reshape(-1, 2).copy()
         if embeddings is not None:
             embeddings = np.ascontiguousarray(embeddings, dtype=np.float32)
+            self._feature_dim = int(embeddings.shape[1])
             self._prepare_emb_layout(len(embeddings))
         tl.transfer = (0.0, time.perf_counter() - t0)
 
@@ -350,8 +431,9 @@ class ShardedGraphStore:
         def write_feature():
             s = time.perf_counter() - t0
             if embeddings is not None:
-                self._map(lambda sh: self.shards[sh]._write_embedding_table(
-                    self._emb_shard_rows(embeddings, sh)),
+                self._map(lambda sh: self.endpoints[sh].call(
+                    "write_embedding_table",
+                    rows=self._emb_shard_rows(embeddings, sh)),
                     range(self.n_shards))
             box["wf"] = (s, time.perf_counter() - t0)
 
@@ -366,10 +448,11 @@ class ShardedGraphStore:
 
         s0 = time.perf_counter() - t0
         indptr, indices = box["csr"]
+        self._num_vertices = max(self._num_vertices, len(indptr) - 1)
 
         def write_adj(s):
             ip, ix = self._adj_shard_csr(indptr, indices, s)
-            self.shards[s]._write_adjacency(ip, ix)
+            self.endpoints[s].call("write_adjacency", indptr=ip, indices=ix)
 
         self._map(write_adj, range(self.n_shards))
         tl.write_graph = (s0, time.perf_counter() - t0)
@@ -386,26 +469,46 @@ class ShardedGraphStore:
                  for s in range(self.n_shards)]
         return [(s, pos) for s, pos in parts if len(pos)]
 
-    def _fetch_shards(self, parts, fn) -> list:
-        """fetch phase: one call per shard, device concurrency modelled
-        analytically.
+    def _endpoint_fetch(self, reqs, *, pay: bool = True):
+        """fetch phase: ONE batched ``fetch`` command per shard, submitted
+        to every endpoint, then awaited together.
 
-        Each shard's simulated flash + command time is DEFERRED while its
-        scatter-read runs, then the array pays one wait equal to the
-        slowest shard — the devices execute their queued commands
-        concurrently, mirroring how the flash channels inside one device
-        are modelled (divide, don't sum).  Real threads would only
-        serialize the interpreter-bound planning behind the GIL and charge
-        a handoff tax per shard.
+        Each shard's simulated flash + command time is deferred
+        device-side and ships back as ``io_us``; the array pays one wait
+        equal to the slowest shard — the devices execute their queued
+        commands concurrently, mirroring how the flash channels inside
+        one device are modelled (divide, don't sum).  ``reqs`` is a list
+        of ``(shard, fetch-kwargs)``; returns (payloads, worst_io_us).
         """
+        handles: list = []
         outs, worst = [], 0.0
-        for item in parts:
-            with self.shards[item[0]].dev.defer_latency() as acct:
-                outs.append(fn(item))
-            worst = max(worst, acct.us)
-        self.io_wait_us += worst
-        sleep_us(worst)
-        return outs
+        awaiting = None
+        try:
+            for s, kw in reqs:
+                handles.append((s, self.endpoints[s].fetch_submit(**kw)))
+            for i, (s, h) in enumerate(handles):
+                awaiting = i
+                payload = self.endpoints[s].fetch_result(h)
+                worst = max(worst, float(payload["io_us"]))
+                outs.append(payload)
+        except BaseException:
+            # a submit failed part-way (QueueFullError) or a shard failed
+            # mid-await (drain path): reap every outstanding completion
+            # before re-raising, or their reply payloads sit in the CQs
+            # forever — each failover retry would leak the healthy
+            # shards' full page blocks.  The handle whose await raised is
+            # already consumed; everything after it is not.
+            consumed = len(outs) + (1 if awaiting == len(outs) else 0)
+            for s, h in handles[consumed:]:
+                try:
+                    self.endpoints[s].fetch_result(h)
+                except Exception:  # noqa: BLE001 — best-effort reap
+                    pass
+            raise
+        if pay:
+            self.io_wait_us += worst
+            sleep_us(worst)
+        return outs, worst
 
     def _fan_fetch(self, vids_arr: np.ndarray):
         """plan -> per-shard fetch -> build: the shared front half of the
@@ -415,16 +518,17 @@ class ShardedGraphStore:
         """
         parts = self._partition(vids_arr)
 
-        # fetch: ONE locked scatter-read per shard, devices concurrent
-        plans = self._fetch_shards(
-            parts, lambda it: self.shards[it[0]].fetch_plan(vids_arr[it[1]]))
+        # fetch: ONE batched command per shard, all shards concurrent
+        payloads, _ = self._endpoint_fetch(
+            [(s, {"l_vids": vids_arr[pos]}) for s, pos in parts])
 
         # build: re-base each shard's descriptor rows into the concatenated
         # block and scatter them back to their global positions
         desc: list = [None] * len(vids_arr)
         blocks = []
         row_off = 0
-        for (s, pos), (blk, dsc) in zip(parts, plans):
+        for (s, pos), pl in zip(parts, payloads):
+            blk, dsc = pl["block"], pl["desc"]
             for p, d in zip(pos.tolist(), dsc):
                 if d is None:
                     continue
@@ -442,7 +546,7 @@ class ShardedGraphStore:
         return block, desc
 
     def get_neighbors(self, vid: int) -> np.ndarray:
-        return self._owner(vid).get_neighbors(int(vid))
+        return self._owner_ep(vid).call("get_neighbors", vid=int(vid))
 
     def get_neighbors_batch(self, vids) -> list[np.ndarray]:
         vids_arr = np.asarray(vids, dtype=np.int64).reshape(-1)
@@ -452,7 +556,7 @@ class ShardedGraphStore:
     def sample_neighbors_batch(self, vids, fanout: int,
                                rng: np.random.Generator | None = None, *,
                                segments=None, rngs=None):
-        """Fused fetch+subsample across the array — one scatter-read per
+        """Fused fetch+subsample across the array — one batched command per
         shard per hop, then the single-device selection over the recomposed
         plan (rng consumed in global frontier order: bit-identical)."""
         vids_arr = np.asarray(vids, dtype=np.int64).reshape(-1)
@@ -462,12 +566,13 @@ class ShardedGraphStore:
 
     # ----------------------------------------------------------- embeddings
     def get_embed(self, vid: int) -> np.ndarray:
-        return self._owner(vid).get_embed(int(vid) // self.n_shards)
+        return self._owner_ep(vid).call("get_embed_row",
+                                        row=int(vid) // self.n_shards)
 
     def get_embeds(self, vids: np.ndarray) -> np.ndarray:
         """Coalesced gather across the array: each shard serves its owned
-        rows (local row = vid // N) with ONE scatter-read, concurrently;
-        rows scatter back to their query positions."""
+        rows (local row = vid // N) with ONE batched command,
+        concurrently; rows scatter back to their query positions."""
         d = self.feature_dim
         if not d:
             raise KeyError("no embedding table loaded")
@@ -475,26 +580,28 @@ class ShardedGraphStore:
         out = np.empty((len(vids), d), dtype=np.float32)
         if not len(vids):
             return out
-
-        def fetch(item):
-            s, pos = item
-            return pos, self.shards[s].get_embeds(vids[pos] // self.n_shards)
-
-        for pos, rows in self._fetch_shards(self._partition(vids), fetch):
-            out[pos] = rows
+        parts = self._partition(vids)
+        payloads, _ = self._endpoint_fetch(
+            [(s, {"emb_rows": vids[pos] // self.n_shards})
+             for s, pos in parts])
+        for (s, pos), pl in zip(parts, payloads):
+            out[pos] = pl["emb"]
         return out
 
     def update_embed(self, vid: int, embed: np.ndarray) -> None:
-        self._owner(vid).update_embed(int(vid) // self.n_shards, embed)
+        self._owner_ep(vid).call("update_embed_row",
+                                 row=int(vid) // self.n_shards, embed=embed)
 
     # ------------------------------------------------------------- unit ops
     def add_vertex(self, vid: int, embed: np.ndarray | None = None) -> None:
         with self._mutate:
             vid = int(vid)
-            sh = self._owner(vid)
-            sh.add_vertex(vid)                   # adjacency under global vid
+            ep = self._owner_ep(vid)
+            ep.call("add_vertex", vid=vid)       # adjacency under global vid
+            self._num_vertices = max(self._num_vertices, vid + 1)
             if embed is not None:
-                sh.update_embed(vid // self.n_shards, embed)
+                ep.call("update_embed_row", row=vid // self.n_shards,
+                        embed=embed)
 
     def add_edge(self, dst: int, src: int) -> None:
         """Undirected insert: each endpoint's chunk updates on ITS owning
@@ -503,53 +610,45 @@ class ShardedGraphStore:
         with self._mutate:
             dst, src = int(dst), int(src)
             for v in (dst, src):
-                sh = self._owner(v)
-                if v not in sh.gmap:
-                    sh.add_vertex(v)
-            sh_d = self._owner(dst)
-            with sh_d._lock:
-                sh_d.stats.unit_updates += 1
-                sh_d._insert_neighbor(dst, src)
+                # device-side add_vertex no-ops when the vid exists
+                self._owner_ep(v).call("add_vertex", vid=v)
+                self._num_vertices = max(self._num_vertices, v + 1)
+            self._owner_ep(dst).call("insert_neighbor", vid=dst, nbr=src,
+                                     count=True)
             if dst != src:
-                sh_s = self._owner(src)
-                with sh_s._lock:
-                    sh_s._insert_neighbor(src, dst)
+                self._owner_ep(src).call("insert_neighbor", vid=src,
+                                         nbr=dst, count=False)
 
     def delete_edge(self, dst: int, src: int) -> None:
         with self._mutate:
             dst, src = int(dst), int(src)
-            sh_d = self._owner(dst)
-            with sh_d._lock:
-                sh_d.stats.unit_updates += 1
-                sh_d._remove_neighbor(dst, src)
+            self._owner_ep(dst).call("remove_neighbor", vid=dst, nbr=src,
+                                     count=True)
             if dst != src:
-                sh_s = self._owner(src)
-                with sh_s._lock:
-                    sh_s._remove_neighbor(src, dst)
+                self._owner_ep(src).call("remove_neighbor", vid=src,
+                                         nbr=dst, count=False)
 
     def delete_vertex(self, vid: int) -> None:
         """Remove ``vid`` everywhere: backlinks on each neighbor's owning
         shard first, then the owner drops the vertex's own pages."""
         with self._mutate:
             vid = int(vid)
-            own = self._owner(vid)
-            nbrs = own.get_neighbors(vid)
-            for nbr in nbrs:
+            nbrs = self._owner_ep(vid).call("get_neighbors", vid=vid)
+            for nbr in np.asarray(nbrs).tolist():
                 nbr = int(nbr)
                 if nbr == vid:
                     continue
-                sh = self._owner(nbr)
-                with sh._lock:
-                    sh._remove_neighbor(nbr, vid)
-            with own._lock:
-                own.stats.unit_updates += 1
-                own._drop_vertex_pages(vid)
+                self._owner_ep(nbr).call("remove_neighbor", vid=nbr,
+                                         nbr=vid, count=False)
+            self._owner_ep(vid).call("drop_vertex_pages", vid=vid,
+                                     count=True)
 
     # --------------------------------------------------------------- export
     def to_adjacency(self) -> dict[int, set[int]]:
         out: dict[int, set[int]] = {}
-        for sh in self.shards:
-            out.update(sh.to_adjacency())
+        for ep in self.endpoints:
+            for v, nb in ep.call("export_adjacency"):
+                out[int(v)] = set(np.asarray(nb).tolist())
         return out
 
 
@@ -571,15 +670,20 @@ class ReplicatedGraphStore(ShardedGraphStore):
     live owner), L vids weighted by their shared page cost, embedding
     rows grouped by stripe page — assigned by an exact min-max solver
     (level binary-search + max-flow over the classes->candidates graph,
-    ``_minmax_quotas``) on top of the shards' MEASURED read-counter
-    imbalance (closed-loop: estimation bias cannot accumulate).  Since
-    every replica holds identical data and the recomposed plan is
-    position-identical to the single-device plan, the spread changes
-    WHICH device pays each page, never the result: an R-replicated sample
-    stays **bit-identical** to the 1-device store under the same seed.
-    The deferred-latency array cost is ``max`` over shards, so flattening
-    the per-shard page distribution is a direct latency win on skewed
-    mixes (fig24: balance 0.36 -> 1.00, batched-read IO ~1.4x at R=2).
+    ``_minmax_quotas``) on top of a GOSSIPED view of the shards' read
+    counters: the coordinator pulls each endpoint's page-read counter at
+    most every ``stats_staleness_s`` seconds (0 = every selection) and
+    plans against that snapshot, so the feedback loop never reads shard
+    state synchronously — the multi-host requirement.  The loop stays
+    closed (estimation bias cannot accumulate, just bounded-staleness
+    delayed), and since every replica holds identical data and the
+    recomposed plan is position-identical to the single-device plan, the
+    spread changes WHICH device pays each page, never the result: an
+    R-replicated sample stays **bit-identical** to the 1-device store
+    under the same seed.  The deferred-latency array cost is ``max`` over
+    shards, so flattening the per-shard page distribution is a direct
+    latency win on skewed mixes (fig24: balance 0.36 -> 1.00,
+    batched-read IO ~1.4x at R=2).
 
     Writes fan out to every live replica under the coordinator mutation
     lock (each device's ``on_write`` hook invalidates its own page cache);
@@ -592,18 +696,24 @@ class ReplicatedGraphStore(ShardedGraphStore):
     shard re-plan against survivors (``_with_failover``).  Degraded reads
     are served — bit-identically — by the surviving replicas.
     ``rebuild_shard(s)`` re-materialises the lost partition onto a fresh
-    device: batched per-class L export from a survivor re-laid through
-    the bulk packing, H chains cloned page-exactly (preserving the
-    cross-replica chain layout the page spread relies on), embedding
-    stripes gathered from each class's surviving replica — restoring
-    R-way redundancy.
+    device by **shard-to-shard chunked streaming**: the coordinator sends
+    the destination endpoint a pure-metadata plan, and the destination
+    pulls bounded page chunks from each class's surviving endpoint over
+    the peer links (batched L export re-laid through the bulk packing, H
+    chains cloned page-exactly — preserving the cross-replica chain
+    layout the page spread relies on — embedding stripes gathered from
+    each class's survivor).  Survivor pages never transit the
+    coordinator; restoring R-way redundancy costs the coordinator one
+    RPC.
     """
 
     def __init__(self, n_shards: int | None = None, devs: list | None = None,
-                 *, replication: int = 2, h_threshold: int = 128,
-                 feature_dim: int = 0):
-        super().__init__(n_shards, devs, h_threshold=h_threshold,
-                         feature_dim=feature_dim)
+                 *, endpoints: list | None = None, replication: int = 2,
+                 h_threshold: int = 128, feature_dim: int = 0,
+                 stats_staleness_s: float = 0.0,
+                 rebuild_chunk_pages: int = 512):
+        super().__init__(n_shards, devs, endpoints=endpoints,
+                         h_threshold=h_threshold, feature_dim=feature_dim)
         r = int(replication)
         if not 1 <= r <= self.n_shards:
             raise ValueError(f"replication={r} needs 1 <= R <= "
@@ -611,32 +721,37 @@ class ReplicatedGraphStore(ShardedGraphStore):
         self.replication = r
         self._emb_rows = 0
         self._stripe_off = np.zeros((self.n_shards, r), dtype=np.int64)
-        # closed-loop selection feedback: every selection starts from the
-        # shards' ACTUAL page-read imbalance since the last topology
-        # change, so estimation bias (split-boundary double fetches,
-        # replica packing drift) cannot accumulate.  Cache hits never
+        # gossiped selection feedback: every selection starts from a
+        # staleness-bounded snapshot of the shards' ACTUAL page-read
+        # counters since the last topology change (periodic ``counters``
+        # pulls — never a synchronous shard peek).  Cache hits never
         # reach the device counter, so cached reads correctly stop
         # counting as device load.
-        self._read_base = np.array(
-            [float(sh.dev.stats.read_pages) for sh in self.shards])
+        self.stats_staleness_s = float(stats_staleness_s)
+        self.rebuild_chunk_pages = int(rebuild_chunk_pages)
+        self.gossip_pulls = 0
+        self._gossip_reads = np.zeros(self.n_shards)
+        self._gossip_t = -np.inf
+        self._read_base = self._refresh_gossip(force=True).copy()
 
     # ------------------------------------------------------------- topology
     @property
     def failed_shards(self) -> list[bool]:
-        return [sh.dev.failed for sh in self.shards]
+        return list(self._failed)
 
     def replica_shards(self, vid: int) -> list[int]:
         return [(int(vid) + r) % self.n_shards
                 for r in range(self.replication)]
 
-    def _live_stores(self, vid: int):
-        """(shard, role, store) of ``vid``'s live replicas, primary first."""
+    def _live_eps(self, vid: int):
+        """(shard, role, endpoint) of ``vid``'s live replicas, primary
+        first."""
         out = []
         c = int(vid) % self.n_shards
         for r in range(self.replication):
             s = (c + r) % self.n_shards
-            if not self.shards[s].dev.failed:
-                out.append((s, r, self.shards[s]))
+            if not self._failed[s]:
+                out.append((s, r, self.endpoints[s]))
         if not out:
             raise DeviceFailedError(f"no live replica for vertex {vid}")
         return out
@@ -644,9 +759,18 @@ class ReplicatedGraphStore(ShardedGraphStore):
     def _survivor_of_class(self, c: int, exclude: int) -> int:
         for r in range(self.replication):
             s = (c + r) % self.n_shards
-            if s != exclude and not self.shards[s].dev.failed:
+            if s != exclude and not self._failed[s]:
                 return s
         raise DeviceFailedError(f"no live replica holds vertex class {c}")
+
+    def _meta_shard(self, c: int) -> int:
+        """A live replica holding class ``c``'s mapping tables — the
+        planning metadata every replica agrees on (same op history)."""
+        for r in range(self.replication):
+            s = (c + r) % self.n_shards
+            if not self._failed[s]:
+                return s
+        raise DeviceFailedError(f"no live replica for vertex class {c}")
 
     # ----------------------------------------------------- embedding layout
     def _rows_of_class(self, c: int) -> int:
@@ -683,24 +807,37 @@ class ReplicatedGraphStore(ShardedGraphStore):
 
     def update_graph(self, edge_array, embeddings=None, *,
                      already_undirected: bool = False):
-        if any(self.failed_shards):
+        if any(self._failed):
             raise DeviceFailedError(
                 "bulk ingest needs every shard live; rebuild_shard first")
         return super().update_graph(edge_array, embeddings,
                                     already_undirected=already_undirected)
 
     # ----------------------------------------------------- replica selection
+    def _refresh_gossip(self, force: bool = False) -> np.ndarray:
+        """Pull every endpoint's page-read counter when the cached
+        snapshot is older than ``stats_staleness_s`` (or forced).  The
+        only coupling between replica selection and shard state is this
+        bounded-staleness gossip — fit for shards on other hosts."""
+        now = time.perf_counter()
+        if force or (now - self._gossip_t) > self.stats_staleness_s:
+            # one concurrent round: submit to every shard, await together
+            handles = [ep.call_submit("counters") for ep in self.endpoints]
+            self._gossip_reads = np.array(
+                [float(ep.call_result(h)["read_pages"])
+                 for ep, h in zip(self.endpoints, handles)])
+            self._gossip_t = now
+            self.gossip_pulls += 1
+        return self._gossip_reads
+
     def _hist_loads(self) -> np.ndarray:
         """Per-shard page-read imbalance since the last topology change —
-        the closed-loop starting loads of every selection."""
-        cur = np.array([float(sh.dev.stats.read_pages)
-                        for sh in self.shards])
-        h = cur - self._read_base
+        the gossiped starting loads of every selection."""
+        h = self._refresh_gossip() - self._read_base
         return h - h.min()
 
     def _reset_feedback(self) -> None:
-        self._read_base = np.array(
-            [float(sh.dev.stats.read_pages) for sh in self.shards])
+        self._read_base = self._refresh_gossip(force=True).copy()
 
     def _select_replicas(self, vids: np.ndarray, weights=None,
                          key=None) -> np.ndarray:
@@ -709,7 +846,7 @@ class ReplicatedGraphStore(ShardedGraphStore):
         Positions group by residue class (every member of a class shares
         the same R candidate shards); the per-class weights are assigned
         to live candidate shards by an exact min-max solver
-        (``_minmax_quotas``) on top of the shards' measured read
+        (``_minmax_quotas``) on top of the gossiped read-counter
         imbalance.  Within a class, positions stay contiguous in ``key``
         order (ascending vid for adjacency, stripe page for embeddings)
         so page-sharing neighbours land on the same shard, and the split
@@ -723,7 +860,7 @@ class ReplicatedGraphStore(ShardedGraphStore):
         cls = vids % n_shards
         w = (np.ones(len(vids)) if weights is None
              else np.asarray(weights, dtype=np.float64))
-        live = [not f for f in self.failed_shards]
+        live = [not f for f in self._failed]
         class_w = np.bincount(cls, weights=w, minlength=n_shards)
 
         order = (np.argsort(cls, kind="stable") if key is None
@@ -760,32 +897,22 @@ class ReplicatedGraphStore(ShardedGraphStore):
                     owner[seg] = sdx
         return owner
 
-    def _meta_store(self, c: int) -> GraphStore:
-        """A live replica's in-DRAM mapping tables for class ``c`` — the
-        planning metadata every replica agrees on (same op history)."""
-        for r in range(self.replication):
-            s = (c + r) % self.n_shards
-            if not self.shards[s].dev.failed:
-                return self.shards[s]
-        raise DeviceFailedError(f"no live replica for vertex class {c}")
-
-    def _l_share_weights(self, vids: np.ndarray) -> np.ndarray:
+    def _l_share_weights(self, vids: np.ndarray,
+                         l_page: np.ndarray) -> np.ndarray:
         """Page cost of each L-vid's fetch, in PAGES: vids resolved to the
-        same L page (a live replica's range table — packings differ across
-        replicas only in companion classes) split that page's single fetch
-        between them, so L quotas stay commensurate with per-page H
-        quotas."""
+        same L page (``plan_info``'s range-table index — packings differ
+        across replicas only in companion classes) split that page's
+        single fetch between them, so L quotas stay commensurate with
+        per-page H quotas."""
         n_shards = self.n_shards
         w = np.ones(len(vids))
         cls = vids % n_shards
         for c in np.unique(cls):
-            sh = self._meta_store(int(c))
-            if not sh._l_keys:
-                continue
             idx = np.nonzero(cls == c)[0]
-            keys = np.asarray(sh._l_keys, dtype=np.int64)
-            _, inv, cnt = np.unique(np.searchsorted(keys, vids[idx]),
-                                    return_inverse=True,
+            pg = l_page[idx]
+            if not len(pg) or (pg < 0).all():   # shard holds no L pages
+                continue
+            _, inv, cnt = np.unique(pg, return_inverse=True,
                                     return_counts=True)
             w[idx] = 1.0 / cnt[inv]
         return w
@@ -794,9 +921,10 @@ class ReplicatedGraphStore(ShardedGraphStore):
         """Run a read plan, re-planning if a shard fails under it.
 
         A fetch that already planned onto a shard when ``fail_shard`` hit
-        raises ``DeviceFailedError`` from that device; the retry re-runs
-        the selection, which now excludes it — the drain path of a
-        degraded array.  Reads are idempotent, so the retry is safe.
+        raises ``DeviceFailedError`` from that device (surfaced through
+        the endpoint, whatever the transport); the retry re-runs the
+        selection, which now excludes it — the drain path of a degraded
+        array.  Reads are idempotent, so the retry is safe.
         """
         last = None
         for _ in range(self.n_shards + 1):
@@ -843,22 +971,37 @@ class ReplicatedGraphStore(ShardedGraphStore):
     def _plan_and_fetch_spread(self, vids_arr: np.ndarray):
         n_shards = self.n_shards
         desc: list = [None] * len(vids_arr)
-        # classify against a live replica's tables (replica-invariant)
+        # ---- planning metadata: ONE plan_info call per occupied vertex
+        # class against a live replica (replica-invariant tables) — the
+        # coordinator never reads shard mapping state directly
+        cls_arr = vids_arr % n_shards
+        chain_len = np.zeros(len(vids_arr), dtype=np.int64)
+        l_page = np.full(len(vids_arr), -1, dtype=np.int64)
+        rounds = []
+        for c in np.unique(cls_arr).tolist():
+            idx = np.nonzero(cls_arr == c)[0]
+            ep = self.endpoints[self._meta_shard(int(c))]
+            rounds.append((ep, idx,
+                           ep.call_submit("plan_info", vids=vids_arr[idx])))
+        for ep, idx, h in rounds:               # one concurrent round-trip
+            info = ep.call_result(h)
+            chain_len[idx] = np.asarray(info["chain_len"], dtype=np.int64)
+            l_page[idx] = np.asarray(info["l_page"], dtype=np.int64)
+
         uidx: dict[int, int] = {}
         u_vids: list[int] = []
         u_lens: list[int] = []
         pos_of_u: list[list[int]] = []
         l_pos: list[int] = []
         for pos, v in enumerate(vids_arr.tolist()):
-            chain = self._meta_store(v % n_shards).h_chain.get(v)
-            if chain is None:
+            if chain_len[pos] == 0:
                 l_pos.append(pos)
             else:
                 u = uidx.get(v)
                 if u is None:
                     u = uidx[v] = len(u_vids)
                     u_vids.append(v)
-                    u_lens.append(len(chain))
+                    u_lens.append(int(chain_len[pos]))
                     pos_of_u.append([])
                 pos_of_u[u].append(pos)
 
@@ -870,8 +1013,8 @@ class ReplicatedGraphStore(ShardedGraphStore):
         l_vids = vids_arr[l_pos_arr]
         item_vid = item_pg = item_row = u_lens_a = None
         sel_vids = [l_vids]
-        sel_w = [self._l_share_weights(l_vids) if len(l_vids)
-                 else np.empty(0)]
+        sel_w = [self._l_share_weights(l_vids, l_page[l_pos_arr])
+                 if len(l_vids) else np.empty(0)]
         sel_key = [2 * l_vids]                # even keys: L, by vid
         if u_vids:
             u_vids_a = np.asarray(u_vids, dtype=np.int64)
@@ -900,30 +1043,32 @@ class ReplicatedGraphStore(ShardedGraphStore):
         for s in np.unique(owner_h).tolist():
             parts.setdefault(int(s), {})["h"] = np.nonzero(owner_h == s)[0]
 
+        # ---- fetch: ONE batched command per shard (l plan + its share of
+        # chain pages together), submitted to all shards, awaited together
+        shard_order = sorted(parts)
+        reqs = []
+        for s in shard_order:
+            work = parts[s]
+            kw: dict = {}
+            if "l" in work:
+                kw["l_vids"] = l_vids[work["l"]]
+            if "h" in work:
+                items = work["h"]
+                kw["h_vids"] = item_vid[items]
+                kw["h_pgs"] = item_pg[items]
+            reqs.append((s, kw))
+        payloads, worst = self._endpoint_fetch(reqs, pay=False)
+
         blocks: list[np.ndarray] = []
         row_off = 0
-        worst = 0.0
-        for s in sorted(parts):
-            sh = self.shards[s]
+        for s, pl in zip(shard_order, payloads):
             work = parts[s]
-            blk = dsc = hblk = None
-            with sh.dev.defer_latency() as acct:
-                if "l" in work:
-                    blk, dsc = sh.fetch_plan(l_vids[work["l"]])
-                if "h" in work:
-                    items = work["h"]
-                    with sh._lock:
-                        lpns = np.fromiter(
-                            (sh.h_chain[int(item_vid[i])][int(item_pg[i])]
-                             for i in items.tolist()),
-                            dtype=np.int64, count=len(items))
-                        hblk = sh._read_pages_cached(lpns, "graph")
-            worst = max(worst, acct.us)
+            dsc, blk, hblk = pl["desc"], pl["block"], pl["hblk"]
             if dsc is not None:
-                for pl, d in zip(work["l"].tolist(), dsc):
+                for plx, d in zip(work["l"].tolist(), dsc):
                     if d is None:
                         continue
-                    pos = int(l_pos_arr[pl])
+                    pos = int(l_pos_arr[plx])
                     if d[0] == "L":
                         desc[pos] = ("L", d[1] + row_off, d[2], d[3])
                     else:                     # defensive: kind skew
@@ -950,15 +1095,17 @@ class ReplicatedGraphStore(ShardedGraphStore):
     # ------------------------------------------------------------ unit reads
     def get_neighbors(self, vid: int) -> np.ndarray:
         return self._with_failover(
-            lambda: self._live_stores(vid)[0][2].get_neighbors(int(vid)))
+            lambda: self._live_eps(vid)[0][2].call("get_neighbors",
+                                                   vid=int(vid)))
 
     def get_embed(self, vid: int) -> np.ndarray:
         self._check_emb_vid(vid)
 
         def read():
-            s, r, sh = self._live_stores(vid)[0]
-            return sh.get_embed(int(self._stripe_off[s, r])
-                                + int(vid) // self.n_shards)
+            s, r, ep = self._live_eps(vid)[0]
+            return ep.call("get_embed_row",
+                           row=int(self._stripe_off[s, r])
+                           + int(vid) // self.n_shards)
         return self._with_failover(read)
 
     def get_embeds(self, vids: np.ndarray) -> np.ndarray:
@@ -996,28 +1143,27 @@ class ReplicatedGraphStore(ShardedGraphStore):
             parts = [(s, np.nonzero(owner == s)[0])
                      for s in range(self.n_shards)]
             parts = [(s, pos) for s, pos in parts if len(pos)]
-
-            def fetch(item):
-                s, pos = item
+            reqs = []
+            for s, pos in parts:
                 role = (s - vids[pos] % self.n_shards) % self.n_shards
-                rows = self._stripe_off[s][role] + local[pos]
-                return pos, self.shards[s].get_embeds(rows)
-
-            for pos, rows in self._fetch_shards(parts, fetch):
-                out[pos] = rows
+                reqs.append((s, {"emb_rows":
+                                 self._stripe_off[s][role] + local[pos]}))
+            payloads, _ = self._endpoint_fetch(reqs)
+            for (s, pos), pl in zip(parts, payloads):
+                out[pos] = pl["emb"]
             return out
 
         return self._with_failover(gather)
 
     # ----------------------------------------------------- mutation fan-out
-    def _fanout(self, stores, fn) -> int:
+    def _fanout(self, eps, fn) -> int:
         """Apply a mutation to every live replica; a replica that fails
         mid-fan-out is skipped (its state died with the device — rebuild
         recovers it from a survivor), so the live replicas never diverge."""
         ok = 0
-        for s, r, sh in stores:
+        for s, r, ep in eps:
             try:
-                fn(s, r, sh)
+                fn(s, r, ep)
                 ok += 1
             except DeviceFailedError:
                 continue
@@ -1028,8 +1174,9 @@ class ReplicatedGraphStore(ShardedGraphStore):
     def add_vertex(self, vid: int, embed=None) -> None:
         with self._mutate:
             vid = int(vid)
-            self._fanout(self._live_stores(vid),
-                         lambda s, r, sh: sh.add_vertex(vid))
+            self._fanout(self._live_eps(vid),
+                         lambda s, r, ep: ep.call("add_vertex", vid=vid))
+            self._num_vertices = max(self._num_vertices, vid + 1)
             if embed is not None:
                 self.update_embed(vid, embed)
 
@@ -1038,27 +1185,27 @@ class ReplicatedGraphStore(ShardedGraphStore):
             vid = int(vid)
             self._check_emb_vid(vid)
 
-            def write(s, r, sh):
-                sh.update_embed(int(self._stripe_off[s, r])
-                                + vid // self.n_shards, embed)
-            self._fanout(self._live_stores(vid), write)
+            def write(s, r, ep):
+                ep.call("update_embed_row",
+                        row=int(self._stripe_off[s, r])
+                        + vid // self.n_shards, embed=embed)
+            self._fanout(self._live_eps(vid), write)
 
     def add_edge(self, dst: int, src: int) -> None:
         with self._mutate:
             dst, src = int(dst), int(src)
             for v in (dst, src):
-                self._fanout(
-                    self._live_stores(v),
-                    lambda s, r, sh, v=v: (sh.add_vertex(v)
-                                           if v not in sh.gmap else None))
+                # device-side add_vertex no-ops when the vid exists
+                self._fanout(self._live_eps(v),
+                             lambda s, r, ep, v=v: ep.call("add_vertex",
+                                                           vid=v))
+                self._num_vertices = max(self._num_vertices, v + 1)
 
             def ins(vid, nbr, count):
-                def body(s, r, sh):
-                    with sh._lock:
-                        if count:
-                            sh.stats.unit_updates += 1
-                        sh._insert_neighbor(vid, nbr)
-                self._fanout(self._live_stores(vid), body)
+                self._fanout(self._live_eps(vid),
+                             lambda s, r, ep: ep.call(
+                                 "insert_neighbor", vid=vid, nbr=nbr,
+                                 count=count))
             ins(dst, src, True)
             if dst != src:
                 ins(src, dst, False)
@@ -1068,12 +1215,10 @@ class ReplicatedGraphStore(ShardedGraphStore):
             dst, src = int(dst), int(src)
 
             def rm(vid, nbr, count):
-                def body(s, r, sh):
-                    with sh._lock:
-                        if count:
-                            sh.stats.unit_updates += 1
-                        sh._remove_neighbor(vid, nbr)
-                self._fanout(self._live_stores(vid), body)
+                self._fanout(self._live_eps(vid),
+                             lambda s, r, ep: ep.call(
+                                 "remove_neighbor", vid=vid, nbr=nbr,
+                                 count=count))
             rm(dst, src, True)
             if dst != src:
                 rm(src, dst, False)
@@ -1082,28 +1227,26 @@ class ReplicatedGraphStore(ShardedGraphStore):
         with self._mutate:
             vid = int(vid)
             nbrs = self.get_neighbors(vid)
-            for nbr in nbrs:
+            for nbr in np.asarray(nbrs).tolist():
                 nbr = int(nbr)
                 if nbr == vid:
                     continue
-
-                def unlink(s, r, sh, nbr=nbr):
-                    with sh._lock:
-                        sh._remove_neighbor(nbr, vid)
-                self._fanout(self._live_stores(nbr), unlink)
-
-            def drop(s, r, sh):
-                with sh._lock:
-                    sh.stats.unit_updates += 1
-                    sh._drop_vertex_pages(vid)
-            self._fanout(self._live_stores(vid), drop)
+                self._fanout(self._live_eps(nbr),
+                             lambda s, r, ep, nbr=nbr: ep.call(
+                                 "remove_neighbor", vid=nbr, nbr=vid,
+                                 count=False))
+            self._fanout(self._live_eps(vid),
+                         lambda s, r, ep: ep.call("drop_vertex_pages",
+                                                  vid=vid, count=True))
 
     # --------------------------------------------------------------- export
     def to_adjacency(self) -> dict[int, set[int]]:
         out: dict[int, set[int]] = {}
-        for sh in self.shards:
-            if not sh.dev.failed:
-                out.update(sh.to_adjacency())
+        for s, ep in enumerate(self.endpoints):
+            if self._failed[s]:
+                continue
+            for v, nb in ep.call("export_adjacency"):
+                out[int(v)] = set(np.asarray(nb).tolist())
         return out
 
     # ---------------------------------------------------------- fault path
@@ -1116,125 +1259,72 @@ class ReplicatedGraphStore(ShardedGraphStore):
             s = int(shard)
             if not 0 <= s < self.n_shards:
                 raise ValueError(f"shard {s} out of range")
-            sh = self.shards[s]
-            if sh.dev.failed:
+            if self._failed[s]:
                 return {"shard": s, "already_failed": True}
             n_shards, rep = self.n_shards, self.replication
             lost = []
             for r in range(rep):
                 c = (s - r) % n_shards
                 if not any((c + r2) % n_shards != s
-                           and not self.shards[(c + r2) % n_shards].dev.failed
+                           and not self._failed[(c + r2) % n_shards]
                            for r2 in range(rep)):
                     lost.append(c)
             if lost:
                 raise DeviceFailedError(
                     f"failing shard {s} would lose vertex class(es) "
                     f"{sorted(lost)} (replication={rep})")
-            sh.dev.fail()
-            if sh.cache is not None:
-                sh.cache.clear()          # device DRAM died with the device
+            # device dies; its DRAM page cache died with it (endpoint-side)
+            self.endpoints[s].call("fail")
+            self._failed[s] = True
             self._reset_feedback()        # load history predates the fault
             return {"shard": s,
                     "degraded_classes":
                         sorted({(s - r) % n_shards for r in range(rep)})}
 
-    @staticmethod
-    def _clone_dev_profile(old: BlockDevice) -> BlockDevice:
-        """A fresh replacement device with the failed one's perf profile."""
-        return BlockDevice(
-            old.num_pages, simulate_latency=old.simulate_latency,
-            page_read_us=old.page_read_us, page_write_us=old.page_write_us,
-            command_latency_us=old.command_latency_us,
-            trace_events=old.stats.events.maxlen is None)
-
-    @staticmethod
-    def _clone_h_chain(src: GraphStore, dst: GraphStore, vid: int) -> None:
-        """Page-exact H-chain clone (slot layout and per-page counts
-        preserved, next pointers re-addressed).  Replicas keep IDENTICAL
-        chain page layouts — bulk writes and unit mutations are
-        deterministic given the same op history, and rebuilds clone — which
-        is what lets the spread fetch serve page i of a chain from any
-        live owner."""
-        with src._lock:
-            chain = list(src.h_chain[vid])
-            pages = src.dev.read_pages(np.asarray(chain, dtype=np.int64),
-                                       tag="graph")
-        new_lpns = [dst.dev.alloc_front() for _ in chain]
-        for i, lpn in enumerate(new_lpns):
-            page = pages[i].copy()
-            page[_H_NEXT] = new_lpns[i + 1] if i + 1 < len(new_lpns) else -1
-            dst.dev.write_page(lpn, page)
-        dst.h_table[vid] = (new_lpns[0], new_lpns[-1])
-        dst.h_chain[vid] = new_lpns
-        dst.gmap[vid] = "H"
-        dst.stats.pages_h += len(new_lpns)
-
     def rebuild_shard(self, shard: int) -> dict:
-        """Re-materialise a failed shard onto a fresh device from survivors.
+        """Re-materialise a failed shard from survivors — endpoint to
+        endpoint.
 
-        Adjacency: L vids are exported per owned class from that class's
-        surviving replica in one batched read and re-laid through the bulk
-        packing (neighbor order is replica-invariant — every replica
-        applied the same mutation sequence; L degrees never exceed
-        ``h_threshold``, so no vid is reclassified); H chains are cloned
-        page-exactly, preserving the cross-replica chain layout the
-        page-granular spread fetch relies on.  Embeddings: each stripe
-        gathered from its class's survivor at the survivor's stripe
-        offset.  Mutations that landed while degraded are naturally
-        included — the survivors ARE the current state.  The replacement
-        starts with a cold (fresh) page cache.
+        The coordinator only ships a pure-metadata plan (which survivor
+        holds each owned class, stripe row spans, chunk budget); the
+        destination endpoint pulls bounded page chunks from each
+        survivor over the peer links and re-lays them (batched L export
+        through the bulk packing — neighbor order is replica-invariant,
+        every replica applied the same mutation sequence, and L degrees
+        never exceed ``h_threshold`` so no vid is reclassified; H chains
+        cloned page-exactly, preserving the cross-replica chain layout
+        the page-granular spread fetch relies on; embedding stripes
+        gathered from each class's survivor).  Mutations that landed
+        while degraded are naturally included — the survivors ARE the
+        current state.  The replacement starts with a cold (fresh) page
+        cache.
         """
         with self._mutate:
             s = int(shard)
-            old = self.shards[s]
-            if not old.dev.failed:
+            if not self._failed[s]:
                 raise ValueError(f"shard {s} is not failed")
             t0 = time.perf_counter()
             n_shards, rep = self.n_shards, self.replication
-            sh = GraphStore(self._clone_dev_profile(old.dev),
-                            h_threshold=self.h_threshold)
-            vids_all: list[int] = []
-            nbrs_all: list[np.ndarray] = []
-            n_cloned = 0
+            classes = []
             for r in range(rep):
                 c = (s - r) % n_shards
-                src = self.shards[self._survivor_of_class(c, exclude=s)]
-                vids_c = sorted(v for v in src.gmap if v % n_shards == c)
-                l_vids = [v for v in vids_c if src.gmap[v] == "L"]
-                if l_vids:
-                    vids_all.extend(l_vids)
-                    nbrs_all.extend(src.get_neighbors_batch(l_vids))
-                for v in vids_c:
-                    if src.gmap[v] == "H":
-                        self._clone_h_chain(src, sh, v)
-                        n_cloned += 1
-            if vids_all:
-                order = np.argsort(np.asarray(vids_all), kind="stable")
-                vids_srt = np.asarray(vids_all, dtype=np.int64)[order]
-                n_glob = max(self.num_vertices, int(vids_srt[-1]) + 1)
-                deg = np.zeros(n_glob, dtype=np.int64)
-                deg[vids_srt] = [len(nbrs_all[i]) for i in order]
-                indptr = np.concatenate([[0], np.cumsum(deg)])
-                indices = np.concatenate(
-                    [nbrs_all[i] for i in order]).astype(np.int32)
-                sh._write_adjacency(indptr, indices)
-            if self._emb_rows and self.feature_dim:
-                stripes = []
-                for r in range(rep):
-                    c = (s - r) % n_shards
-                    s2 = self._survivor_of_class(c, exclude=s)
-                    role2 = (s2 - c) % n_shards
-                    rows = (int(self._stripe_off[s2, role2])
-                            + np.arange(self._rows_of_class(c)))
-                    stripes.append(self.shards[s2].get_embeds(rows))
-                sh._write_embedding_table(np.concatenate(stripes))
-            sh.num_vertices = max(sh.num_vertices, old.num_vertices)
-            if old.cache is not None:
-                sh.attach_cache(old.cache.clone_empty())
-            self.shards[s] = sh
+                entry = {"cls": c,
+                         "src": self._survivor_of_class(c, exclude=s)}
+                if self._emb_rows and self._feature_dim:
+                    role2 = (entry["src"] - c) % n_shards
+                    entry["src_row0"] = int(
+                        self._stripe_off[entry["src"], role2])
+                    entry["rows"] = int(self._rows_of_class(c))
+                classes.append(entry)
+            plan = {"n_shards": n_shards,
+                    "num_vertices": int(self._num_vertices),
+                    "chunk_pages": self.rebuild_chunk_pages,
+                    "feature_dim": (self._feature_dim
+                                    if self._emb_rows else 0),
+                    "classes": classes}
+            info = dict(self.endpoints[s].call("rebuild", plan=plan))
+            self._failed[s] = False
             self._reset_feedback()        # fresh topology, fresh history
-            return {"shard": s, "seconds": time.perf_counter() - t0,
-                    "vertices": len(vids_all) + n_cloned,
-                    "h_chains_cloned": n_cloned,
-                    "pages_written": sh.dev.stats.written_pages}
+            info["shard"] = s
+            info["seconds"] = time.perf_counter() - t0
+            return info

@@ -42,6 +42,45 @@ def test_roundtrip_ndarrays():
     assert got["b"][1:] == ["x", 3]
 
 
+_DTYPES = ["<i4", ">i4", "<i8", ">i8", "<f4", ">f4", "<f8", ">f8",
+           "<u2", ">u2", "|b1", "|i1"]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.sampled_from(_DTYPES),
+       st.lists(st.integers(0, 5), min_size=0, max_size=3),
+       st.sampled_from(["contig", "sliced", "reversed", "transposed"]),
+       st.integers(0, 2**31 - 1))
+def test_roundtrip_hardened_ndarrays(dtype, shape, layout, seed):
+    """Any ndarray — non-native byte order, non-contiguous views (slices,
+    negative strides, transposes), zero-size, 0-d — must round-trip the
+    RoP packet format with identical values, dtype, and shape."""
+    rng = np.random.default_rng(seed)
+    arr = (rng.integers(0, 100, size=shape)
+           .astype(np.dtype(dtype))).reshape(shape)
+    if layout == "sliced" and arr.ndim and arr.shape[0] > 1:
+        arr = arr[::2]
+    elif layout == "reversed" and arr.ndim:
+        arr = arr[::-1]
+    elif layout == "transposed" and arr.ndim >= 2:
+        arr = arr.T
+    got = deserialize(serialize({"x": arr}))["x"]
+    assert got.dtype == arr.dtype
+    assert got.shape == arr.shape
+    np.testing.assert_array_equal(got, arr)
+
+
+def test_roundtrip_numpy_scalars_and_empty():
+    got = deserialize(serialize({"b": np.bool_(True), "i": np.int64(-7),
+                                 "f": np.float32(0.5),
+                                 "e": np.empty(0, dtype=np.int32),
+                                 "z": np.array(3.0)}))
+    assert got["b"] is True and got["i"] == -7
+    assert abs(got["f"] - 0.5) < 1e-9
+    assert got["e"].shape == (0,) and got["e"].dtype == np.int32
+    assert got["z"].shape == () and got["z"] == 3.0
+
+
 def test_channel_counts_bytes_and_doorbell():
     ch = PCIeChannel(buf_size=1 << 16)
     pkt = serialize({"x": np.arange(100)})
@@ -105,6 +144,45 @@ def test_stats_rpc_injects_rolling_method_stats():
     out = client.call("stats")
     assert out["custom"] == 1
     assert out["rpc"]["ok"]["calls"] == 1       # injected by the dispatcher
+
+
+def test_sync_and_async_clients_share_error_and_stats_contract():
+    """Both host-side stubs route replies through check_reply and keep the
+    same per-method MethodStats shape, so local and RoP shard endpoints
+    report identically in ``stats``."""
+    server = RPCServer(_Svc())
+    sync = RPCClient(server)
+    rop = MultiQueueRoP(n_queues=1, depth=8)
+    stop = threading.Event()
+
+    def device():
+        while not stop.is_set():
+            got = rop.pop_submission(timeout=0.02)
+            if got is not None:
+                qid, cmd_id, packet = got
+                rop.post_completion(qid, cmd_id, server.handle(packet))
+
+    th = threading.Thread(target=device, daemon=True)
+    th.start()
+    try:
+        async_ = AsyncRPCClient(rop, 0)
+        for cl in (sync, async_):
+            assert cl.call("ok", x=1) == 2
+            with pytest.raises(RuntimeError) as ei:
+                cl.call("boom")
+            # unified error contract: method label + raw error type carried
+            assert "RPC boom failed" in str(ei.value)
+            assert ei.value.remote_error.startswith("ValueError")
+        snaps = [cl.stats_snapshot() for cl in (sync, async_)]
+        assert set(snaps[0]) == set(snaps[1]) == {"ok", "boom"}
+        for snap in snaps:
+            assert snap["ok"]["calls"] == 1 and snap["ok"]["errors"] == 0
+            assert snap["boom"]["errors"] == 1
+            assert set(snap["ok"]) == set(
+                server.stats_snapshot()["ok"])       # same snapshot shape
+    finally:
+        stop.set()
+        th.join(timeout=5)
 
 
 # --------------------------------------------------------------- multi-queue
