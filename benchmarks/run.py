@@ -44,7 +44,7 @@ def main(argv=None) -> None:
                    fig16_pure_inference, fig17_opbreakdown, fig18_bulk,
                    fig19_batchprep, fig20_mutable, fig21_fastpath,
                    fig22_serving, fig23_sharded, fig24_replicated,
-                   fig25_multihost, table5_datasets)
+                   fig25_multihost, fig26_autonomic, table5_datasets)
     suites = {
         "table5": table5_datasets.run,
         "fig3": fig3_breakdown.run,
@@ -60,6 +60,7 @@ def main(argv=None) -> None:
         "fig23": fig23_sharded.run,
         "fig24": fig24_replicated.run,
         "fig25": fig25_multihost.run,
+        "fig26": fig26_autonomic.run,
     }
     if args.smoke:
         suites = {
@@ -69,6 +70,7 @@ def main(argv=None) -> None:
             "fig23": lambda: fig23_sharded.run(smoke=True),
             "fig24": lambda: fig24_replicated.run(smoke=True),
             "fig25": lambda: fig25_multihost.run(smoke=True),
+            "fig26": lambda: fig26_autonomic.run(smoke=True),
         }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

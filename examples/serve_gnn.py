@@ -22,6 +22,15 @@ and the post-rebuild answer is asserted bit-identical to the degraded one
 healthy-vs-degraded bit-identity on a quiesced store is asserted by
 ``tests/test_replicated_store.py`` and ``benchmarks/fig24_replicated``).
 
+With ``--chaos`` the drill goes autonomic: a shard's DEVICE is killed
+directly mid-serve — no ``fail_shard``, no operator RPC of any kind —
+and the attached ``ShardSupervisor`` must detect the fault on its own
+(zero-traffic probe + serving-path error mapping), auto-drain, and
+auto-rebuild back to full redundancy.  After the traffic drains the
+mutator is quiesced and a second device kill asserts bit-identity end to
+end: reference answer == degraded answer (auto-steering, still no
+operator) == post-auto-rebuild answer.
+
 With ``--remote-shards N`` the array is multi-host: every shard sits
 behind its own RoP endpoint (``make_rop_endpoints`` — per-shard SQ/CQ
 pairs + PCIeChannel mmap buffers + a shard-host poll thread), the
@@ -33,7 +42,7 @@ bit-identical to the in-process array.
   PYTHONPATH=src python examples/serve_gnn.py --shards 3 --replication 2 \
       --kill-shard 1
   PYTHONPATH=src python examples/serve_gnn.py --remote-shards 3 \
-      --replication 2 --kill-shard 1
+      --replication 2 --chaos
 """
 import argparse
 import threading
@@ -43,8 +52,29 @@ import numpy as np
 from repro.core.service import HolisticGNNService, make_service_dfg
 from repro.core import gnn
 from repro.kernels.ops import program_config
-from repro.serve import ServingRuntime
+from repro.serve import HealthPolicy, ServingRuntime, ShardSupervisor
 from repro.store import make_rop_endpoints
+
+
+def _kill_device(store, s):
+    """Chaos: kill the shard's device directly — the array is never told."""
+    ep = store.endpoints[s]
+    if hasattr(ep, "local_store"):
+        ep.local_store.dev.fail()
+    else:
+        ep.host.service.store.dev.fail()
+
+
+def _wait_healed(sup, store, deadline_s=120.0):
+    import time
+    t_end = time.perf_counter() + deadline_s
+    while time.perf_counter() < t_end:
+        snap = sup.snapshot()
+        if (snap["incidents"] and not any(store.failed_shards)
+                and all(s == "healthy" for s in snap["states"])):
+            return snap
+        time.sleep(0.02)
+    raise AssertionError(f"array did not heal itself: {sup.snapshot()}")
 
 
 def main():
@@ -67,9 +97,17 @@ def main():
     ap.add_argument("--kill-shard", type=int, default=None,
                     help="fault injection: fail this shard once a third of "
                          "the traffic has completed, rebuild after drain")
+    ap.add_argument("--chaos", action="store_true",
+                    help="autonomic fault drill: kill a shard DEVICE "
+                         "mid-serve with no operator RPC; the supervisor "
+                         "must auto-detect, auto-drain and auto-rebuild")
     args = ap.parse_args()
     if args.kill_shard is not None and args.replication < 2:
         ap.error("--kill-shard needs --replication >= 2")
+    if args.chaos and args.replication < 2:
+        ap.error("--chaos needs --replication >= 2")
+    if args.chaos and args.kill_shard is not None:
+        ap.error("--chaos and --kill-shard are mutually exclusive")
     if args.remote_shards is not None and args.shards != 1:
         ap.error("--remote-shards and --shards are mutually exclusive")
 
@@ -93,6 +131,11 @@ def main():
     boot.call("update_graph", edge_array=edges, embeddings=emb, timeout=600)
     program_config(svc.xbuilder, "hetero")
 
+    supervisor = None
+    if args.chaos:
+        supervisor = ShardSupervisor(svc.store, HealthPolicy(
+            probe_interval_s=0.01, rebuild_retry_s=0.1)).start()
+
     params = gnn.init_params(args.model, [feat, 64, 32], seed=1)
     dfg = make_service_dfg(args.model, 2, [10, 10]).save()
     weights = {k: v for k, v in
@@ -112,6 +155,7 @@ def main():
             return len(lat["interactive"]) + len(lat["bulk"]) + len(errors)
 
     killed = threading.Event()
+    chaos_victim = 1
 
     def chaos_loop():
         """Fail the victim shard once a third of the traffic completed."""
@@ -125,6 +169,19 @@ def main():
         killed.set()
         print(f"chaos: failed shard {args.kill_shard} after {completed()} "
               f"requests (degraded classes {info['degraded_classes']})")
+
+    def autonomic_chaos_loop():
+        """Kill the victim DEVICE once a third of the traffic completed —
+        no RPC: the supervisor has to notice."""
+        import time
+        deadline = time.perf_counter() + 120.0
+        while completed() < total_reqs // 3 \
+                and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        _kill_device(svc.store, chaos_victim)
+        killed.set()
+        print(f"chaos: killed shard {chaos_victim}'s device after "
+              f"{completed()} requests — no operator call issued")
 
     def client_loop(cid):
         import time
@@ -168,6 +225,8 @@ def main():
     mut = threading.Thread(target=mutator_loop)
     if args.kill_shard is not None:
         threads.append(threading.Thread(target=chaos_loop))
+    if args.chaos:
+        threads.append(threading.Thread(target=autonomic_chaos_loop))
     for t in threads:
         t.start()
     mut.start()
@@ -200,7 +259,41 @@ def main():
             and sh["device"]["written_pages"] > 0, sh
         print("fault drill: degraded serve + rebuild verified bit-identical")
 
+    if args.chaos:
+        assert killed.is_set(), "chaos thread never fired"
+        # the supervisor must bring the array back to full redundancy with
+        # ZERO operator involvement
+        snap = _wait_healed(supervisor, svc.store)
+        inc = snap["last_incident"]
+        assert inc["shard"] == chaos_victim and inc["drained"] is True, snap
+        assert inc["cause"] in ("probe", "error_burst", "observed_drained")
+        print(f"chaos drill: auto-detected ({inc['cause']}), auto-drained, "
+              f"auto-rebuilt in {inc.get('restore_s', 0):.2f}s — "
+              f"no operator call")
+        # graph now quiesced (mutator stopped): a second device kill must
+        # leave a seeded answer bit-identical through degraded serving AND
+        # through the auto-rebuild
+        ref_req = dict(dfg=dfg, batch=list(range(8)),
+                       weights_ref="deployed", seed=424242)
+        ref = boot.call("run", **ref_req, timeout=600)["Result"]
+        _kill_device(svc.store, chaos_victim)
+        degraded = boot.call("run", **ref_req, timeout=600)["Result"]
+        assert (np.asarray(ref) == np.asarray(degraded)).all(), \
+            "degraded result diverged from healthy reference"
+        _wait_healed(supervisor, svc.store)
+        healed = boot.call("run", **ref_req, timeout=600)["Result"]
+        assert (np.asarray(ref) == np.asarray(healed)).all(), \
+            "post-auto-rebuild result diverged from healthy reference"
+        st = boot.call("stats", timeout=600)
+        assert st["health"]["incidents"] >= 2, st["health"]
+        assert all(s == "healthy" for s in st["health"]["states"])
+        assert st["replication"]["failed_shards"] == [], st
+        print(f"chaos drill: {st['health']['incidents']} incidents healed, "
+              f"reference answer bit-identical healthy/degraded/rebuilt")
+
     stats = boot.call("stats", timeout=600)
+    if supervisor is not None:
+        supervisor.stop()
     runtime.stop()
 
     qos = stats["qos"]

@@ -30,7 +30,8 @@ class HolisticGNNService:
                  n_shards: int = 1, devs: list | None = None,
                  endpoints: list | None = None,
                  replication: int = 1,
-                 stats_staleness_s: float = 0.0):
+                 stats_staleness_s: float = 0.0,
+                 flow=None):
         """``n_shards > 1`` (or an explicit ``devs`` device list) backs the
         service with a hash-partitioned CSSD array (``ShardedGraphStore``)
         instead of one device — every RPC below is shard-transparent, and
@@ -48,7 +49,11 @@ class HolisticGNNService:
         replica-spread reads (fed by a gossiped counter view refreshed at
         most every ``stats_staleness_s`` seconds), write fan-out, and the
         ``fail_shard`` / ``rebuild_shard`` RPCs for serving through
-        device failures."""
+        device failures.
+
+        ``flow`` (a ``store.sharded.FlowControl``) tunes the array's
+        end-to-end flow control: per-shard in-flight windows, queue-full
+        retry budget/backoff, and the gossip steering penalties."""
         if endpoints is not None or devs is not None or n_shards > 1 \
                 or replication > 1:
             if dev is not None:
@@ -62,12 +67,12 @@ class HolisticGNNService:
                 self.store = ReplicatedGraphStore(
                     n_shards=arr_n, devs=devs, endpoints=endpoints,
                     replication=replication, h_threshold=h_threshold,
-                    stats_staleness_s=stats_staleness_s)
+                    stats_staleness_s=stats_staleness_s, flow=flow)
             else:
                 from ..store.sharded import ShardedGraphStore
                 self.store = ShardedGraphStore(
                     n_shards=arr_n, devs=devs, endpoints=endpoints,
-                    h_threshold=h_threshold)
+                    h_threshold=h_threshold, flow=flow)
         else:
             self.store = GraphStore(dev or BlockDevice(),
                                     h_threshold=h_threshold)
@@ -124,10 +129,21 @@ class HolisticGNNService:
         Serving continues from the surviving replicas, bit-identically."""
         return self._replicated().fail_shard(int(shard))
 
-    def rebuild_shard(self, shard):
+    def rebuild_shard(self, shard, pacing_s=None):
         """Re-materialise a failed shard from its surviving replicas,
-        restoring R-way redundancy."""
-        return self._replicated().rebuild_shard(int(shard))
+        restoring R-way redundancy.  ``pacing_s`` sleeps that long between
+        peer-link chunk pulls so the rebuild yields device bandwidth to
+        concurrent serving reads."""
+        return self._replicated().rebuild_shard(
+            int(shard), pacing_s=pacing_s)
+
+    def probe_shards(self):
+        """Zero-traffic health probe: one ``counters`` round over every
+        shard endpoint (including failed ones — errors are reported, not
+        raised).  The autonomic supervisor polls this."""
+        if not hasattr(self.store, "probe_shards"):
+            raise RuntimeError("probe_shards needs a sharded array")
+        return self.store.probe_shards()
 
     # ------------------------------------------------------------ GraphRunner
     def _register_batchpre(self):
@@ -316,6 +332,16 @@ class HolisticGNNService:
                 "r": repl,
                 "failed_shards": [i for i, f in
                                   enumerate(self.store.failed_shards) if f]}
+        sup = getattr(self.store, "health", None)
+        if sup is not None:
+            out["health"] = sup.snapshot()
+        if hasattr(self.store, "backpressure_events"):
+            out["flow"] = {
+                "backpressure_events": self.store.backpressure_events,
+                "backpressure_retries": self.store.backpressure_retries,
+                "max_inflight_per_shard":
+                    self.store.flow.max_inflight_per_shard,
+                "submit_retries": self.store.flow.submit_retries}
         if self.qos_provider is not None:
             out["qos"] = self.qos_provider()
         return out

@@ -35,7 +35,32 @@ from .transport import serialize, deserialize, check_reply
 
 
 class QueueFullError(RuntimeError):
-    """Submission ring is full — backpressure surfaced to the submitter."""
+    """Submission ring is full — backpressure surfaced to the submitter.
+
+    Carries ``qid``/``depth`` so retry layers can report WHICH ring
+    pushed back instead of a bare string."""
+
+    def __init__(self, msg: str, *, qid: int | None = None,
+                 depth: int | None = None):
+        super().__init__(msg)
+        self.qid = qid
+        self.depth = depth
+
+
+class BackpressureError(RuntimeError):
+    """Typed end-to-end backpressure: a bounded submit window or ring
+    stayed full through the configured retry budget.
+
+    Raised by the array coordinator's flow control (never by the rings
+    themselves — those raise ``QueueFullError`` per attempt) so the
+    serving scheduler can shed load with a REASON (``.reason``: source,
+    shard, attempts, queue depths) instead of letting a transport error
+    crash the request path.  "Overloaded" stays distinguishable from
+    "degraded array"."""
+
+    def __init__(self, msg: str, *, reason: dict | None = None):
+        super().__init__(msg)
+        self.reason = dict(reason or {})
 
 
 @dataclass

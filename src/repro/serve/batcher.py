@@ -36,6 +36,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..core.dfg import DFG
+from ..rpc.queues import BackpressureError
 from ..store.sampler import (LayerBlock, SampledBatch, _gather_neighbors,
                              _reindex, _subsample_batch)
 
@@ -137,8 +138,14 @@ def sample_group(store, targets_list, seeds, fanouts,
             continue
         segs = seg.tolist()
         if hasattr(store, "sample_neighbors_batch"):
-            sel, lens = store.sample_neighbors_batch(
-                concat, fanout, segments=segs, rngs=rngs)
+            try:
+                sel, lens = store.sample_neighbors_batch(
+                    concat, fanout, segments=segs, rngs=rngs)
+            except BackpressureError as e:
+                # a shed fused fetch names the group it refused
+                e.reason.setdefault("stage", "sample")
+                e.reason.setdefault("group_requests", n_req)
+                raise
         else:                              # host-side store: per-request path
             sel_parts, len_parts = [], []
             for r in range(n_req):
@@ -192,7 +199,12 @@ def sample_group(store, targets_list, seeds, fanouts,
         vids[comp_of] = np.concatenate(fronts)
     emb = None
     if fetch_embeddings and getattr(store, "feature_dim", 0):
-        emb = store.get_embeds(vids)           # ONE coalesced (cached) gather
+        try:
+            emb = store.get_embeds(vids)       # ONE coalesced (cached) gather
+        except BackpressureError as e:
+            e.reason.setdefault("stage", "fetch_embeds")
+            e.reason.setdefault("group_requests", n_req)
+            raise
     batch = SampledBatch(layers=list(reversed(comp_rev)), node_vids=vids,
                          embeddings=emb,
                          num_targets=int(off0[-1]))

@@ -45,6 +45,7 @@ from __future__ import annotations
 import itertools
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 from ..rpc import RPCServer, MultiQueueRoP, AsyncRPCClient
 from ..rpc.transport import serialize, deserialize
@@ -54,7 +55,8 @@ from .scheduler import BatchScheduler, AdmissionError
 class ServingRuntime:
     def __init__(self, service, *, n_queues: int = 4, queue_depth: int = 64,
                  max_group: int = 16, max_pending: int = 256,
-                 coalesce: bool = True, batch_window_s: float = 0.02):
+                 coalesce: bool = True, batch_window_s: float = 0.02,
+                 immediate_workers: int = 4):
         self.service = service
         self.rop = MultiQueueRoP(n_queues=n_queues, depth=queue_depth)
         self.server = RPCServer(service)
@@ -64,6 +66,14 @@ class ServingRuntime:
                                         batch_window_s=batch_window_s)
         # the service's `stats` RPC pulls QoS + transport counters from here
         service.qos_provider = self.qos_snapshot
+        # rejected admissions carry the array's health next to queue depth
+        self.scheduler.health_provider = self._health_summary
+        # threaded mode runs non-run commands on this small pool: a
+        # mutation blocked on the store's maintenance gate (a streaming
+        # shard rebuild) must not wedge the dispatcher thread — stats
+        # probes and reads keep flowing while the write waits it out
+        self.immediate_workers = int(immediate_workers)
+        self._immediate: ThreadPoolExecutor | None = None
         self._threads: list[threading.Thread] = []
         self._stop = threading.Event()
         self._next_q = itertools.count()
@@ -76,7 +86,8 @@ class ServingRuntime:
         return AsyncRPCClient(self.rop, qid)
 
     # ----------------------------------------------------------- device side
-    def _dispatch(self, qid: int, cmd_id: int, packet: bytes) -> None:
+    def _dispatch(self, qid: int, cmd_id: int, packet: bytes, *,
+                  inline: bool = True) -> None:
         req = deserialize(packet)
         method, kwargs = req["method"], dict(req.get("kwargs") or {})
         if method == "run" and self.scheduler.accepts(kwargs.get("dfg")):
@@ -97,13 +108,21 @@ class ServingRuntime:
                     priority=priority, deadline_s=deadline_s,
                     weights_key=weights_key, on_done=on_done)
             except AdmissionError as e:
-                on_done({"ok": False, "error": f"AdmissionError: {e}"})
+                on_done({"ok": False, "error": f"AdmissionError: {e}",
+                         "reason": dict(e.reason)})
             return
         kwargs.pop("priority", None)          # QoS hints are runtime-level,
         kwargs.pop("deadline_s", None)        # not service kwargs
         kwargs.pop("weights_key", None)
-        resp = self.server.dispatch(method, kwargs)
-        self.rop.post_completion(qid, cmd_id, serialize(resp))
+
+        def immediate() -> None:
+            resp = self.server.dispatch(method, kwargs)
+            self.rop.post_completion(qid, cmd_id, serialize(resp))
+
+        if inline or self._immediate is None:
+            immediate()              # stepped mode stays deterministic
+        else:
+            self._immediate.submit(immediate)
 
     # ---------------------------------------------------------- stepped mode
     def pump(self) -> int:
@@ -125,12 +144,15 @@ class ServingRuntime:
         if self._threads:
             return
         self._stop.clear()
+        self._immediate = ThreadPoolExecutor(
+            max_workers=self.immediate_workers,
+            thread_name_prefix="rt-immediate")
 
         def dispatcher():
             while not self._stop.is_set():
                 got = self.rop.pop_submission(timeout=0.05)
                 if got is not None:
-                    self._dispatch(*got)
+                    self._dispatch(*got, inline=False)
 
         def worker():
             # the worker drains submissions inline at every group boundary:
@@ -144,7 +166,7 @@ class ServingRuntime:
                     got = self.rop.pop_submission(timeout=0)
                     if got is None:
                         break
-                    self._dispatch(*got)
+                    self._dispatch(*got, inline=False)
                 if self.scheduler.step():
                     continue
                 if self.scheduler.wait_for_work(timeout=0.05):
@@ -160,6 +182,9 @@ class ServingRuntime:
         for th in self._threads:
             th.join(timeout=5.0)
         self._threads = []
+        if self._immediate is not None:
+            self._immediate.shutdown(wait=True)
+            self._immediate = None
 
     def __enter__(self):
         self.start()
@@ -169,6 +194,21 @@ class ServingRuntime:
         self.stop()
 
     # -------------------------------------------------------------- telemetry
+    def _health_summary(self) -> dict | None:
+        """Compact per-shard health for AdmissionError reasons: failed
+        shards from the store, states/suspects from the supervisor when
+        one is attached.  None for single-device services."""
+        store = getattr(self.service, "store", None)
+        failed = getattr(store, "failed_shards", None)
+        out: dict = {}
+        if failed is not None:
+            out["failed_shards"] = [i for i, f in enumerate(failed) if f]
+        sup = getattr(store, "health", None)
+        if sup is not None:
+            out["states"] = sup.states()
+            out["suspects"] = sup.suspect_shards()
+        return out or None
+
     def qos_snapshot(self) -> dict:
         out = self.scheduler.qos.snapshot(
             queue_depth=self.scheduler.queue_depth)
@@ -176,6 +216,16 @@ class ServingRuntime:
         links = self.shard_link_snapshot()
         if links is not None:
             out["shard_links"] = links
+        store = getattr(self.service, "store", None)
+        if hasattr(store, "backpressure_events"):
+            out["backpressure"] = {
+                "events": store.backpressure_events,
+                "retries": store.backpressure_retries,
+                "max_inflight_per_shard":
+                    store.flow.max_inflight_per_shard}
+        sup = getattr(store, "health", None)
+        if sup is not None:
+            out["health"] = sup.snapshot()
         return out
 
     def shard_link_snapshot(self) -> list[dict] | None:

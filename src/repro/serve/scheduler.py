@@ -34,11 +34,20 @@ from typing import Callable
 
 import numpy as np
 
+from ..rpc.queues import BackpressureError
 from .batcher import fingerprint_weights
 
 
 class AdmissionError(RuntimeError):
-    """Pending queue is full — request rejected at admission."""
+    """Pending queue is full — request rejected at admission.
+
+    Carries a ``reason`` dict (source, queue depth, per-shard health when
+    a supervisor is attached) so a client can tell "overloaded" from
+    "degraded array" instead of seeing a generic full queue."""
+
+    def __init__(self, msg: str, *, reason: dict | None = None):
+        super().__init__(msg)
+        self.reason = dict(reason or {})
 
 
 @dataclass
@@ -67,6 +76,8 @@ class QoSTelemetry:
         self.errors = 0
         self.expired = 0
         self.rejected = 0
+        self.backpressured = 0        # groups shed by typed BackpressureError
+        self.last_reject_reason: dict | None = None
         self.groups = 0
         self.grouped_requests = 0
 
@@ -83,6 +94,9 @@ class QoSTelemetry:
             out = {
                 "completed": self.completed, "errors": self.errors,
                 "expired": self.expired, "rejected": self.rejected,
+                "backpressured": self.backpressured,
+                "last_reject_reason": (dict(self.last_reject_reason)
+                                       if self.last_reject_reason else None),
                 "groups": self.groups,
                 "avg_group_size": (self.grouped_requests / self.groups
                                    if self.groups else 0.0),
@@ -117,6 +131,11 @@ class BatchScheduler:
         self._quiet_s = min(0.003, self.batch_window_s / 4
                             if self.batch_window_s else 0.0)
         self.qos = QoSTelemetry(telemetry_window)
+        # optional callable returning a per-shard health summary, set by
+        # the serving runtime — folded into AdmissionError reasons so a
+        # rejected client learns WHY the queue is full (hot array vs
+        # degraded array)
+        self.health_provider = None
         self._pending: list[ServeRequest] = []
         self._cond = threading.Condition()
         self._seq = itertools.count()
@@ -157,8 +176,21 @@ class BatchScheduler:
         with self._cond:
             if len(self._pending) >= self.max_pending:
                 self.qos.rejected += 1
+                reason = {"source": "admission",
+                          "queue_depth": len(self._pending),
+                          "max_pending": self.max_pending}
+                hp = self.health_provider
+                if hp is not None:
+                    try:
+                        health = hp()
+                    except Exception:  # noqa: BLE001 — reason is best-effort
+                        health = None
+                    if health:
+                        reason["shard_health"] = health
+                self.qos.last_reject_reason = reason
                 raise AdmissionError(
-                    f"admission queue full ({self.max_pending} pending)")
+                    f"admission queue full ({self.max_pending} pending)",
+                    reason=reason)
             req = ServeRequest(
                 seq=next(self._seq),
                 dfg=dfg if isinstance(dfg, str) else dfg.save(),
@@ -257,6 +289,18 @@ class BatchScheduler:
                                             weights=head.weights,
                                             seed=head.seed, jit=head.jit,
                                             weights_ref=head.weights_ref)]
+        except BackpressureError as e:
+            # typed shed: the array's flow control (in-flight windows /
+            # queue-full retry budget) refused the fused fetch — report
+            # the reason, don't crash the group as a generic error
+            self.qos.backpressured += 1
+            self.qos.last_reject_reason = dict(e.reason)
+            resp = {"ok": False, "error": f"BackpressureError: {e}",
+                    "backpressure": True, "reason": dict(e.reason)}
+            for r in group:
+                self.qos.errors += 1
+                r.on_done(dict(resp))
+            return
         except Exception as e:  # noqa: BLE001 — fault fans out to the group
             resp = {"ok": False, "error": f"{type(e).__name__}: {e}",
                     "traceback": traceback.format_exc()}

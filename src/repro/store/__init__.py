@@ -4,13 +4,14 @@ from .graphstore import GraphStore, preprocess_edges
 from .endpoint import (LocalShardEndpoint, RopShardEndpoint, ShardEndpoint,
                        ShardHost, ShardService, make_local_endpoints,
                        make_rop_endpoints)
-from .sharded import ReplicatedGraphStore, ShardedGraphStore, partition_csr
+from .sharded import (FlowControl, ReplicatedGraphStore, ShardedGraphStore,
+                      partition_csr)
 from .sampler import (sample_batch, sample_batch_ref, pad_batch,
                       SampledBatch, LayerBlock)
 
 __all__ = ["BlockDevice", "DeviceFailedError", "PAGE_BYTES",
            "SLOTS_PER_PAGE", "GraphStore", "ShardedGraphStore",
-           "ReplicatedGraphStore", "partition_csr",
+           "ReplicatedGraphStore", "FlowControl", "partition_csr",
            "ShardEndpoint", "ShardService", "LocalShardEndpoint",
            "RopShardEndpoint", "ShardHost", "make_local_endpoints",
            "make_rop_endpoints",

@@ -135,6 +135,10 @@ class ShardService:
         # with ``.call(method, **kw)`` (AsyncRPCClient for remote arrays,
         # a direct caller for local ones), index-aligned with the array.
         self.peers: list | None = None
+        # the RoP this service is drained from, when it is remote
+        # (``ShardHost`` sets it) — lets ``counters`` report live SQ/CQ
+        # depth so gossip can steer reads away from hot shards
+        self.rop = None
 
     # ------------------------------------------------------ batched fetch
     def fetch(self, l_vids=None, h_vids=None, h_pgs=None, emb_rows=None,
@@ -237,8 +241,20 @@ class ShardService:
         }
 
     def counters(self) -> dict:
-        """Lightweight load counter for the coordinator's gossip loop."""
-        return {"read_pages": self.store.dev.stats.read_pages}
+        """Lightweight load + health probe for the coordinator's gossip
+        loop and the supervisor's monitor: cumulative read load, the
+        device's failed flag (stats attributes stay readable after
+        ``fail()``, so a dead shard is detectable with zero serving
+        traffic), and current command-queue pressure when this service
+        sits behind a RoP."""
+        out = {"read_pages": self.store.dev.stats.read_pages,
+               "failed": self.store.dev.failed,
+               "inflight": 0, "sq_depth": 0}
+        if self.rop is not None:
+            snap = self.rop.stats_snapshot()
+            out["inflight"] = snap["in_flight"]
+            out["sq_depth"] = sum(q["sq_depth"] for q in snap["queues"])
+        return out
 
     # --------------------------------------------------------------- cache
     def attach_cache(self, capacity_pages, cache_graph_pages: bool = True):
@@ -336,11 +352,14 @@ class ShardService:
 
         ``plan`` (built by the coordinator — pure metadata, no page data):
         ``n_shards``, ``num_vertices``, ``chunk_pages``, ``feature_dim``,
-        and per owned class ``{cls, src, src_row0, rows}`` in stripe-role
-        order.  The destination pulls bounded chunks from each class's
-        survivor endpoint over the PEER links — survivor pages never
-        transit the coordinator — cloning H chains page-exactly and
-        re-laying L vids + embedding stripes through the bulk packing.
+        optional ``pace_s``, and per owned class ``{cls, src, src_row0,
+        rows}`` in stripe-role order.  The destination pulls bounded
+        chunks from each class's survivor endpoint over the PEER links —
+        survivor pages never transit the coordinator — cloning H chains
+        page-exactly and re-laying L vids + embedding stripes through the
+        bulk packing.  ``pace_s`` sleeps between chunk pulls: the rebuild
+        throttle point, so recovery reads trickle onto survivor devices
+        instead of monopolising them while serving reads queue behind.
         """
         if self.peers is None:
             raise RuntimeError("rebuild needs peer links (set_peers)")
@@ -348,6 +367,8 @@ class ShardService:
         t0 = time.perf_counter()
         n_shards = int(plan["n_shards"])
         chunk_pages = int(plan.get("chunk_pages") or _REBUILD_CHUNK_PAGES)
+        pace_s = float(plan.get("pace_s") or 0.0)
+        n_chunks = 0
         new = GraphStore(clone_dev_profile(old.dev),
                          h_threshold=old.h_threshold)
         vids_all: list[int] = []
@@ -360,6 +381,9 @@ class ShardService:
             src = self.peers[int(entry["src"])]
             cursor, done = 0, False
             while not done:
+                if pace_s and n_chunks:
+                    time.sleep(pace_s)
+                n_chunks += 1
                 chunk = src.call("export_adj_chunk", cls=int(entry["cls"]),
                                  n_shards=n_shards, start_vid=cursor,
                                  max_pages=chunk_pages)
@@ -386,6 +410,9 @@ class ShardService:
                 max_rows = max(1, chunk_pages * SLOTS_PER_PAGE // max(d, 1))
                 parts = []
                 while rows_left > 0:
+                    if pace_s and n_chunks:
+                        time.sleep(pace_s)
+                    n_chunks += 1
                     take = min(rows_left, max_rows)
                     parts.append(np.asarray(
                         src.call("export_emb_chunk", row0=row0,
@@ -419,6 +446,7 @@ class ShardService:
         return {"vertices": len(vids_all) + n_cloned,
                 "h_chains_cloned": n_cloned,
                 "pages_written": new.dev.stats.written_pages,
+                "chunks": n_chunks, "pace_s": pace_s,
                 "seconds": time.perf_counter() - t0}
 
 
@@ -549,6 +577,7 @@ class ShardHost:
                                                feature_dim=feature_dim))
         self.server = RPCServer(self.service)
         self.rop = MultiQueueRoP(n_queues=n_queues, depth=queue_depth)
+        self.service.rop = self.rop       # queue pressure visible in counters
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
 

@@ -59,12 +59,16 @@ same plan->fetch->build contract, same bit-identity (see its docstring).
 """
 from __future__ import annotations
 
+import random
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
+from contextlib import contextmanager
+from dataclasses import dataclass
 
 import numpy as np
 
+from ..rpc.queues import BackpressureError, QueueFullError
 from .blockdev import (BlockDevice, DeviceFailedError, SLOTS_PER_PAGE,
                        sleep_us)
 from .endpoint import LocalShardEndpoint, make_local_endpoints
@@ -72,6 +76,36 @@ from .graphstore import (BulkTimeline, GraphStoreStats, _H_COUNT,
                          neighbors_from_plan, preprocess_edges,
                          select_from_plan)
 from .sampler import _ramp
+
+
+@dataclass
+class FlowControl:
+    """End-to-end flow-control policy of the array coordinator.
+
+    ``max_inflight_per_shard`` bounds how many batched-read rounds may
+    have a command outstanding against one shard host at once (the
+    in-flight window; 0 disables); a round that cannot take a window
+    slot within ``window_timeout_s`` sheds as ``BackpressureError``
+    instead of piling onto the shard's SQ rings.  A ``QueueFullError``
+    from a ring is retried with exponential backoff
+    (``backoff_base_s * 2^attempt``, capped at ``backoff_max_s``, plus
+    up to ``jitter`` fraction of random extra so colliding submitters
+    decorrelate) at most ``submit_retries`` times, then surfaces as
+    typed ``BackpressureError`` too.  The penalty knobs feed replica
+    selection: each gossiped queued command counts as
+    ``queue_depth_penalty_pages`` of pre-existing load, and a
+    supervisor-suspect shard starts ``suspect_penalty_pages`` deep — so
+    reads steer away from hot or suspect shards *before* rings fill,
+    unless a vertex class has no other live candidate."""
+
+    max_inflight_per_shard: int = 8
+    window_timeout_s: float = 5.0
+    submit_retries: int = 4
+    backoff_base_s: float = 0.002
+    backoff_max_s: float = 0.1
+    jitter: float = 0.5
+    queue_depth_penalty_pages: float = 8.0
+    suspect_penalty_pages: float = 1e5
 
 
 def partition_csr(indptr: np.ndarray, indices: np.ndarray,
@@ -237,7 +271,8 @@ class ShardedGraphStore:
 
     def __init__(self, n_shards: int | None = None,
                  devs: list | None = None, *, endpoints: list | None = None,
-                 h_threshold: int = 128, feature_dim: int = 0):
+                 h_threshold: int = 128, feature_dim: int = 0,
+                 flow: FlowControl | None = None):
         if endpoints is not None:
             if devs is not None:
                 raise ValueError("pass either endpoints=[...] or "
@@ -272,6 +307,28 @@ class ShardedGraphStore:
         # racing an add_edge may observe the half-inserted undirected edge,
         # the inherent visibility model of an array of devices.
         self._mutate = threading.RLock()
+        # maintenance gate: a streaming shard rebuild holds it for the
+        # whole stream, mutations take it FIRST (always _maintenance ->
+        # _mutate, never the reverse) and therefore block until the
+        # replacement is re-admitted — the survivors stay the exact
+        # current state, no replay log — while reads, which take only
+        # _mutate, keep flowing throughout the rebuild.
+        self._maintenance = threading.RLock()
+        # end-to-end flow control: per-shard in-flight windows + typed
+        # backpressure (see FlowControl).  ``health`` is the optional
+        # supervisor (serve/supervisor.py attaches itself here); the
+        # store reports shard errors to it and reads its suspect set —
+        # duck-typed, so the store layer never imports the serve layer.
+        self.flow = flow or FlowControl()
+        self.health = None
+        self.backpressure_events = 0
+        self.backpressure_retries = 0
+        self._bp_lock = threading.Lock()     # misc small-state guard
+        self._rebuilding: set[int] = set()
+        self._windows = [
+            threading.BoundedSemaphore(self.flow.max_inflight_per_shard)
+            if self.flow.max_inflight_per_shard > 0 else None
+            for _ in range(self.n_shards)]
         # cumulative simulated array wait (each fetch pays max over shards):
         # the device-model latency, free of host scheduler noise — what the
         # scale-out benchmarks compare across array configurations.
@@ -469,6 +526,142 @@ class ShardedGraphStore:
                  for s in range(self.n_shards)]
         return [(s, pos) for s, pos in parts if len(pos)]
 
+    # ------------------------------------------------------- flow control
+    @contextmanager
+    def _write_gate(self):
+        """Mutation critical section: maintenance gate first, then the
+        mutation lock (the one legal order — see ``_maintenance``)."""
+        with self._maintenance:
+            with self._mutate:
+                yield
+
+    def _notify_shard_error(self, shard: int, exc: Exception) -> None:
+        """Report a shard-attributed ``DeviceFailedError`` to the attached
+        supervisor (if any) — the error-mapping half of failure detection.
+        Never raises: health reporting must not break the serving path."""
+        sup = self.health
+        if sup is not None:
+            try:
+                sup.record_error(int(shard), exc)
+            except Exception:  # noqa: BLE001 — telemetry is best-effort
+                pass
+
+    def _shed(self, msg: str, reason: dict) -> BackpressureError:
+        with self._bp_lock:
+            self.backpressure_events += 1
+        return BackpressureError(msg, reason=reason)
+
+    def _bp_backoff(self, attempt: int) -> None:
+        """Exponential backoff + jitter between submit retries."""
+        fl = self.flow
+        with self._bp_lock:
+            self.backpressure_retries += 1
+        delay = min(fl.backoff_max_s, fl.backoff_base_s * (2 ** attempt))
+        time.sleep(delay * (1.0 + fl.jitter * random.random()))
+
+    def _acquire_windows(self, shards) -> list[int]:
+        """Take one in-flight window slot per distinct target shard;
+        on timeout release what was taken and shed typed backpressure."""
+        taken: list[int] = []
+        for s in shards:
+            win = self._windows[s]
+            if win is None:
+                continue
+            if not win.acquire(timeout=self.flow.window_timeout_s):
+                for t in taken:
+                    self._windows[t].release()
+                raise self._shed(
+                    f"shard {s} in-flight window full "
+                    f"(limit {self.flow.max_inflight_per_shard}, waited "
+                    f"{self.flow.window_timeout_s}s)",
+                    {"source": "inflight_window", "shard": int(s),
+                     "limit": self.flow.max_inflight_per_shard})
+            taken.append(s)
+        return taken
+
+    def _release_windows(self, taken) -> None:
+        for s in taken:
+            self._windows[s].release()
+
+    def _submit_round(self, items: list) -> list:
+        """One concurrent metadata round: submit ``(shard, method,
+        kwargs)`` to every listed endpoint, then await all completions.
+
+        A ``QueueFullError`` part-way through the submits must not abort
+        the round half-issued: the handles already written are reaped
+        (their completions consumed), then the FULL shard set is retried
+        after exponential backoff — bounded by ``flow.submit_retries``,
+        after which it sheds as typed ``BackpressureError``.  A shard
+        that fails mid-round is reported to the supervisor and the
+        remaining completions are reaped before the error propagates."""
+        for attempt in range(self.flow.submit_retries + 1):
+            handles: list = []
+            try:
+                for s, method, kw in items:
+                    handles.append(
+                        (s, self.endpoints[s].call_submit(method, **kw)))
+            except QueueFullError as e:
+                self._reap_call_handles(handles)
+                if attempt >= self.flow.submit_retries:
+                    raise self._shed(
+                        f"submit round over {len(items)} shards still "
+                        f"queue-full after {attempt + 1} attempts: {e}",
+                        {"source": "queue_full", "shard": int(items[len(handles)][0]),
+                         "attempts": attempt + 1, "qid": e.qid}) from e
+                self._bp_backoff(attempt)
+                continue
+            except Exception as e:
+                self._reap_call_handles(handles)
+                if isinstance(e, DeviceFailedError):
+                    self._notify_shard_error(items[len(handles)][0], e)
+                raise
+            outs: list = []
+            try:
+                for s, h in handles:
+                    outs.append(self.endpoints[s].call_result(h))
+            except Exception as e:
+                self._reap_call_handles(handles[len(outs) + 1:])
+                if isinstance(e, DeviceFailedError):
+                    self._notify_shard_error(handles[len(outs)][0], e)
+                raise
+            return outs
+        raise AssertionError("unreachable")
+
+    def _reap_call_handles(self, handles) -> None:
+        """Consume outstanding ``call_submit`` completions (best-effort)
+        so abandoned replies never sit in the CQs forever."""
+        for s, h in handles:
+            try:
+                self.endpoints[s].call_result(h)
+            except Exception:  # noqa: BLE001 — best-effort reap
+                pass
+
+    def probe_shards(self) -> list[dict]:
+        """Supervisor heartbeat: one concurrent ``counters`` round over
+        EVERY endpoint (failed devices answer too — stats attributes stay
+        readable after ``fail()``), independent of the gossip cache.
+        Per-shard dicts carry ``failed`` + queue pressure; an endpoint
+        whose probe itself errors reports ``{"error": ...}`` instead of
+        taking the array down."""
+        handles: list = []
+        for s, ep in enumerate(self.endpoints):
+            try:
+                handles.append((s, ep.call_submit("counters"), None))
+            except Exception as e:  # noqa: BLE001 — probe must not throw
+                handles.append((s, None, e))
+        out: list[dict] = []
+        for s, h, err in handles:
+            if err is None:
+                try:
+                    c = dict(self.endpoints[s].call_result(h))
+                    c["shard"] = s
+                    out.append(c)
+                    continue
+                except Exception as e:  # noqa: BLE001
+                    err = e
+            out.append({"shard": s, "error": f"{type(err).__name__}: {err}"})
+        return out
+
     def _endpoint_fetch(self, reqs, *, pay: bool = True):
         """fetch phase: ONE batched ``fetch`` command per shard, submitted
         to every endpoint, then awaited together.
@@ -479,36 +672,75 @@ class ShardedGraphStore:
         commands concurrently, mirroring how the flash channels inside
         one device are modelled (divide, don't sum).  ``reqs`` is a list
         of ``(shard, fetch-kwargs)``; returns (payloads, worst_io_us).
+
+        Flow control wraps the round end to end: one in-flight window
+        slot per target shard bounds how many rounds can stack onto one
+        shard host, and a ``QueueFullError`` part-way through the
+        submits reaps what was issued and retries the round with
+        backoff before shedding as typed ``BackpressureError``.
         """
-        handles: list = []
-        outs, worst = [], 0.0
-        awaiting = None
+        slots = self._acquire_windows([s for s, _ in reqs])
         try:
-            for s, kw in reqs:
-                handles.append((s, self.endpoints[s].fetch_submit(**kw)))
-            for i, (s, h) in enumerate(handles):
-                awaiting = i
-                payload = self.endpoints[s].fetch_result(h)
-                worst = max(worst, float(payload["io_us"]))
-                outs.append(payload)
-        except BaseException:
-            # a submit failed part-way (QueueFullError) or a shard failed
-            # mid-await (drain path): reap every outstanding completion
-            # before re-raising, or their reply payloads sit in the CQs
-            # forever — each failover retry would leak the healthy
-            # shards' full page blocks.  The handle whose await raised is
-            # already consumed; everything after it is not.
-            consumed = len(outs) + (1 if awaiting == len(outs) else 0)
-            for s, h in handles[consumed:]:
-                try:
-                    self.endpoints[s].fetch_result(h)
-                except Exception:  # noqa: BLE001 — best-effort reap
-                    pass
-            raise
+            handles = self._submit_fetches(reqs)
+            outs, worst = self._await_fetches(handles)
+        finally:
+            self._release_windows(slots)
         if pay:
             self.io_wait_us += worst
             sleep_us(worst)
         return outs, worst
+
+    def _submit_fetches(self, reqs) -> list:
+        for attempt in range(self.flow.submit_retries + 1):
+            handles: list = []
+            try:
+                for s, kw in reqs:
+                    handles.append((s, self.endpoints[s].fetch_submit(**kw)))
+                return handles
+            except QueueFullError as e:
+                self._reap_fetch_handles(handles)
+                if attempt >= self.flow.submit_retries:
+                    raise self._shed(
+                        f"batched fetch still queue-full after "
+                        f"{attempt + 1} attempts: {e}",
+                        {"source": "queue_full",
+                         "shard": int(reqs[len(handles)][0]),
+                         "attempts": attempt + 1, "qid": e.qid}) from e
+                self._bp_backoff(attempt)
+            except Exception as e:
+                # a local endpoint computes at submit time, so a drained
+                # device surfaces HERE rather than at await
+                self._reap_fetch_handles(handles)
+                if isinstance(e, DeviceFailedError):
+                    self._notify_shard_error(reqs[len(handles)][0], e)
+                raise
+        raise AssertionError("unreachable")
+
+    def _await_fetches(self, handles):
+        outs, worst = [], 0.0
+        try:
+            for s, h in handles:
+                payload = self.endpoints[s].fetch_result(h)
+                worst = max(worst, float(payload["io_us"]))
+                outs.append(payload)
+        except BaseException as e:
+            # a shard failed mid-await (drain path): reap every
+            # outstanding completion before re-raising, or their reply
+            # payloads sit in the CQs forever — each failover retry would
+            # leak the healthy shards' full page blocks.  The handle
+            # whose await raised is already consumed.
+            self._reap_fetch_handles(handles[len(outs) + 1:])
+            if isinstance(e, DeviceFailedError):
+                self._notify_shard_error(handles[len(outs)][0], e)
+            raise
+        return outs, worst
+
+    def _reap_fetch_handles(self, handles) -> None:
+        for s, h in handles:
+            try:
+                self.endpoints[s].fetch_result(h)
+            except Exception:  # noqa: BLE001 — best-effort reap
+                pass
 
     def _fan_fetch(self, vids_arr: np.ndarray):
         """plan -> per-shard fetch -> build: the shared front half of the
@@ -594,7 +826,7 @@ class ShardedGraphStore:
 
     # ------------------------------------------------------------- unit ops
     def add_vertex(self, vid: int, embed: np.ndarray | None = None) -> None:
-        with self._mutate:
+        with self._write_gate():
             vid = int(vid)
             ep = self._owner_ep(vid)
             ep.call("add_vertex", vid=vid)       # adjacency under global vid
@@ -607,7 +839,7 @@ class ShardedGraphStore:
         """Undirected insert: each endpoint's chunk updates on ITS owning
         shard (two independent single-page RMWs, possibly on different
         devices)."""
-        with self._mutate:
+        with self._write_gate():
             dst, src = int(dst), int(src)
             for v in (dst, src):
                 # device-side add_vertex no-ops when the vid exists
@@ -620,7 +852,7 @@ class ShardedGraphStore:
                                          nbr=dst, count=False)
 
     def delete_edge(self, dst: int, src: int) -> None:
-        with self._mutate:
+        with self._write_gate():
             dst, src = int(dst), int(src)
             self._owner_ep(dst).call("remove_neighbor", vid=dst, nbr=src,
                                      count=True)
@@ -631,7 +863,7 @@ class ShardedGraphStore:
     def delete_vertex(self, vid: int) -> None:
         """Remove ``vid`` everywhere: backlinks on each neighbor's owning
         shard first, then the owner drops the vertex's own pages."""
-        with self._mutate:
+        with self._write_gate():
             vid = int(vid)
             nbrs = self._owner_ep(vid).call("get_neighbors", vid=vid)
             for nbr in np.asarray(nbrs).tolist():
@@ -711,9 +943,11 @@ class ReplicatedGraphStore(ShardedGraphStore):
                  *, endpoints: list | None = None, replication: int = 2,
                  h_threshold: int = 128, feature_dim: int = 0,
                  stats_staleness_s: float = 0.0,
-                 rebuild_chunk_pages: int = 512):
+                 rebuild_chunk_pages: int = 512,
+                 flow: FlowControl | None = None):
         super().__init__(n_shards, devs, endpoints=endpoints,
-                         h_threshold=h_threshold, feature_dim=feature_dim)
+                         h_threshold=h_threshold, feature_dim=feature_dim,
+                         flow=flow)
         r = int(replication)
         if not 1 <= r <= self.n_shards:
             raise ValueError(f"replication={r} needs 1 <= R <= "
@@ -730,7 +964,9 @@ class ReplicatedGraphStore(ShardedGraphStore):
         self.stats_staleness_s = float(stats_staleness_s)
         self.rebuild_chunk_pages = int(rebuild_chunk_pages)
         self.gossip_pulls = 0
+        self._gossip_lock = threading.Lock()
         self._gossip_reads = np.zeros(self.n_shards)
+        self._gossip_depth = np.zeros(self.n_shards)
         self._gossip_t = -np.inf
         self._read_base = self._refresh_gossip(force=True).copy()
 
@@ -807,37 +1043,66 @@ class ReplicatedGraphStore(ShardedGraphStore):
 
     def update_graph(self, edge_array, embeddings=None, *,
                      already_undirected: bool = False):
-        if any(self._failed):
-            raise DeviceFailedError(
-                "bulk ingest needs every shard live; rebuild_shard first")
-        return super().update_graph(edge_array, embeddings,
-                                    already_undirected=already_undirected)
+        # behind the maintenance gate: a bulk ingest must not interleave
+        # with a streaming rebuild (and a rebuild in progress means a
+        # failed flag is still set, which the check below rejects)
+        with self._maintenance:
+            if any(self._failed):
+                raise DeviceFailedError(
+                    "bulk ingest needs every shard live; rebuild_shard first")
+            return super().update_graph(edge_array, embeddings,
+                                        already_undirected=already_undirected)
 
     # ----------------------------------------------------- replica selection
     def _refresh_gossip(self, force: bool = False) -> np.ndarray:
-        """Pull every endpoint's page-read counter when the cached
-        snapshot is older than ``stats_staleness_s`` (or forced).  The
-        only coupling between replica selection and shard state is this
-        bounded-staleness gossip — fit for shards on other hosts."""
+        """Pull every endpoint's gossip counters when the cached snapshot
+        is older than ``stats_staleness_s`` (or forced).  The only
+        coupling between replica selection and shard state is this
+        bounded-staleness gossip — fit for shards on other hosts.  One
+        concurrent ``counters`` round (``_submit_round``: queue-full
+        safe) refreshes both the page-read loads and the per-shard
+        command-queue depth the selection penalises."""
         now = time.perf_counter()
-        if force or (now - self._gossip_t) > self.stats_staleness_s:
-            # one concurrent round: submit to every shard, await together
-            handles = [ep.call_submit("counters") for ep in self.endpoints]
+        with self._gossip_lock:
+            if not (force or (now - self._gossip_t) > self.stats_staleness_s):
+                return self._gossip_reads
+            outs = self._submit_round(
+                [(s, "counters", {}) for s in range(self.n_shards)])
             self._gossip_reads = np.array(
-                [float(ep.call_result(h)["read_pages"])
-                 for ep, h in zip(self.endpoints, handles)])
+                [float(c["read_pages"]) for c in outs])
+            self._gossip_depth = np.array(
+                [float(c.get("sq_depth", 0)) + float(c.get("inflight", 0))
+                 for c in outs])
             self._gossip_t = now
             self.gossip_pulls += 1
-        return self._gossip_reads
+            return self._gossip_reads
 
     def _hist_loads(self) -> np.ndarray:
-        """Per-shard page-read imbalance since the last topology change —
-        the gossiped starting loads of every selection."""
-        h = self._refresh_gossip() - self._read_base
-        return h - h.min()
+        """Per-shard starting loads of every selection, in pages: the
+        gossiped page-read imbalance since the last topology change, plus
+        the flow-control steering penalties — gossiped queue depth (hot
+        shard hosts look pre-loaded) and supervisor-suspect status (a
+        suspect shard is avoided unless its class has no other live
+        candidate; the min-max solver does exactly that)."""
+        reads = self._refresh_gossip()
+        with self._gossip_lock:
+            h = reads - self._read_base
+            depth = self._gossip_depth.copy()
+        h = h - h.min()
+        fl = self.flow
+        if fl.queue_depth_penalty_pages:
+            h = h + depth * fl.queue_depth_penalty_pages
+        sup = self.health
+        if sup is not None and fl.suspect_penalty_pages:
+            for s in sup.suspect_shards():
+                if 0 <= s < self.n_shards:
+                    h[s] += fl.suspect_penalty_pages
+        return h
 
     def _reset_feedback(self) -> None:
-        self._read_base = self._refresh_gossip(force=True).copy()
+        reads = self._refresh_gossip(force=True)
+        with self._gossip_lock:
+            self._read_base = reads.copy()
 
     def _select_replicas(self, vids: np.ndarray, weights=None,
                          key=None) -> np.ndarray:
@@ -977,14 +1242,15 @@ class ReplicatedGraphStore(ShardedGraphStore):
         cls_arr = vids_arr % n_shards
         chain_len = np.zeros(len(vids_arr), dtype=np.int64)
         l_page = np.full(len(vids_arr), -1, dtype=np.int64)
-        rounds = []
+        idxs, items = [], []
         for c in np.unique(cls_arr).tolist():
             idx = np.nonzero(cls_arr == c)[0]
-            ep = self.endpoints[self._meta_shard(int(c))]
-            rounds.append((ep, idx,
-                           ep.call_submit("plan_info", vids=vids_arr[idx])))
-        for ep, idx, h in rounds:               # one concurrent round-trip
-            info = ep.call_result(h)
+            idxs.append(idx)
+            items.append((self._meta_shard(int(c)), "plan_info",
+                          {"vids": vids_arr[idx]}))
+        # one concurrent round-trip (queue-full safe: a QueueFullError
+        # part-way reaps the submitted handles and retries the full set)
+        for idx, info in zip(idxs, self._submit_round(items)):
             chain_len[idx] = np.asarray(info["chain_len"], dtype=np.int64)
             l_page[idx] = np.asarray(info["l_page"], dtype=np.int64)
 
@@ -1093,19 +1359,29 @@ class ReplicatedGraphStore(ShardedGraphStore):
         return block, desc, worst
 
     # ------------------------------------------------------------ unit reads
+    def _unit_call(self, s: int, ep, method: str, **kw):
+        """Unit read against one replica, with the shard-attributed error
+        reported to the supervisor before failover re-plans it."""
+        try:
+            return ep.call(method, **kw)
+        except DeviceFailedError as e:
+            self._notify_shard_error(s, e)
+            raise
+
     def get_neighbors(self, vid: int) -> np.ndarray:
-        return self._with_failover(
-            lambda: self._live_eps(vid)[0][2].call("get_neighbors",
-                                                   vid=int(vid)))
+        def read():
+            s, _r, ep = self._live_eps(vid)[0]
+            return self._unit_call(s, ep, "get_neighbors", vid=int(vid))
+        return self._with_failover(read)
 
     def get_embed(self, vid: int) -> np.ndarray:
         self._check_emb_vid(vid)
 
         def read():
             s, r, ep = self._live_eps(vid)[0]
-            return ep.call("get_embed_row",
-                           row=int(self._stripe_off[s, r])
-                           + int(vid) // self.n_shards)
+            return self._unit_call(s, ep, "get_embed_row",
+                                   row=int(self._stripe_off[s, r])
+                                   + int(vid) // self.n_shards)
         return self._with_failover(read)
 
     def get_embeds(self, vids: np.ndarray) -> np.ndarray:
@@ -1165,14 +1441,15 @@ class ReplicatedGraphStore(ShardedGraphStore):
             try:
                 fn(s, r, ep)
                 ok += 1
-            except DeviceFailedError:
+            except DeviceFailedError as e:
+                self._notify_shard_error(s, e)
                 continue
         if not ok:
             raise DeviceFailedError("every replica failed mid-write")
         return ok
 
     def add_vertex(self, vid: int, embed=None) -> None:
-        with self._mutate:
+        with self._write_gate():
             vid = int(vid)
             self._fanout(self._live_eps(vid),
                          lambda s, r, ep: ep.call("add_vertex", vid=vid))
@@ -1181,7 +1458,7 @@ class ReplicatedGraphStore(ShardedGraphStore):
                 self.update_embed(vid, embed)
 
     def update_embed(self, vid: int, embed: np.ndarray) -> None:
-        with self._mutate:
+        with self._write_gate():
             vid = int(vid)
             self._check_emb_vid(vid)
 
@@ -1192,7 +1469,7 @@ class ReplicatedGraphStore(ShardedGraphStore):
             self._fanout(self._live_eps(vid), write)
 
     def add_edge(self, dst: int, src: int) -> None:
-        with self._mutate:
+        with self._write_gate():
             dst, src = int(dst), int(src)
             for v in (dst, src):
                 # device-side add_vertex no-ops when the vid exists
@@ -1211,7 +1488,7 @@ class ReplicatedGraphStore(ShardedGraphStore):
                 ins(src, dst, False)
 
     def delete_edge(self, dst: int, src: int) -> None:
-        with self._mutate:
+        with self._write_gate():
             dst, src = int(dst), int(src)
 
             def rm(vid, nbr, count):
@@ -1224,7 +1501,7 @@ class ReplicatedGraphStore(ShardedGraphStore):
                 rm(src, dst, False)
 
     def delete_vertex(self, vid: int) -> None:
-        with self._mutate:
+        with self._write_gate():
             vid = int(vid)
             nbrs = self.get_neighbors(vid)
             for nbr in np.asarray(nbrs).tolist():
@@ -1281,50 +1558,79 @@ class ReplicatedGraphStore(ShardedGraphStore):
                     "degraded_classes":
                         sorted({(s - r) % n_shards for r in range(rep)})}
 
-    def rebuild_shard(self, shard: int) -> dict:
+    def rebuild_shard(self, shard: int, *,
+                      pacing_s: float | None = None) -> dict:
         """Re-materialise a failed shard from survivors — endpoint to
         endpoint.
 
         The coordinator only ships a pure-metadata plan (which survivor
-        holds each owned class, stripe row spans, chunk budget); the
-        destination endpoint pulls bounded page chunks from each
+        holds each owned class, stripe row spans, chunk budget, pacing);
+        the destination endpoint pulls bounded page chunks from each
         survivor over the peer links and re-lays them (batched L export
         through the bulk packing — neighbor order is replica-invariant,
         every replica applied the same mutation sequence, and L degrees
         never exceed ``h_threshold`` so no vid is reclassified; H chains
         cloned page-exactly, preserving the cross-replica chain layout
         the page-granular spread fetch relies on; embedding stripes
-        gathered from each class's survivor).  Mutations that landed
-        while degraded are naturally included — the survivors ARE the
-        current state.  The replacement starts with a cold (fresh) page
-        cache.
+        gathered from each class's survivor).  The replacement starts
+        with a cold (fresh) page cache.
+
+        Serving reads flow THROUGHOUT the stream: the rebuild holds the
+        maintenance gate, not the mutation lock, so only mutations (and
+        other maintenance) block until re-admission — which is also why
+        no replay log is needed: the survivors stay the exact current
+        state for the whole stream.  ``pacing_s`` sleeps between chunk
+        pulls device-side so recovery traffic trickles onto the
+        survivor devices instead of starving serving reads queued
+        behind it.
+
+        Idempotent under supervision races: a live shard returns
+        ``{"already_live": True}`` and a shard already mid-stream
+        returns ``{"rebuild_in_progress": True}`` — the auto-rebuild
+        loop and an operator RPC may both fire, and neither must throw.
         """
-        with self._mutate:
-            s = int(shard)
-            if not self._failed[s]:
-                raise ValueError(f"shard {s} is not failed")
-            t0 = time.perf_counter()
-            n_shards, rep = self.n_shards, self.replication
-            classes = []
-            for r in range(rep):
-                c = (s - r) % n_shards
-                entry = {"cls": c,
-                         "src": self._survivor_of_class(c, exclude=s)}
-                if self._emb_rows and self._feature_dim:
-                    role2 = (entry["src"] - c) % n_shards
-                    entry["src_row0"] = int(
-                        self._stripe_off[entry["src"], role2])
-                    entry["rows"] = int(self._rows_of_class(c))
-                classes.append(entry)
-            plan = {"n_shards": n_shards,
-                    "num_vertices": int(self._num_vertices),
-                    "chunk_pages": self.rebuild_chunk_pages,
-                    "feature_dim": (self._feature_dim
-                                    if self._emb_rows else 0),
-                    "classes": classes}
-            info = dict(self.endpoints[s].call("rebuild", plan=plan))
-            self._failed[s] = False
-            self._reset_feedback()        # fresh topology, fresh history
+        s = int(shard)
+        if not 0 <= s < self.n_shards:
+            raise ValueError(f"shard {s} out of range")
+        with self._bp_lock:
+            if s in self._rebuilding:
+                return {"shard": s, "rebuild_in_progress": True}
+        t0 = time.perf_counter()
+        with self._maintenance:
+            with self._mutate:
+                if not self._failed[s]:
+                    return {"shard": s, "already_live": True}
+                n_shards, rep = self.n_shards, self.replication
+                classes = []
+                for r in range(rep):
+                    c = (s - r) % n_shards
+                    entry = {"cls": c,
+                             "src": self._survivor_of_class(c, exclude=s)}
+                    if self._emb_rows and self._feature_dim:
+                        role2 = (entry["src"] - c) % n_shards
+                        entry["src_row0"] = int(
+                            self._stripe_off[entry["src"], role2])
+                        entry["rows"] = int(self._rows_of_class(c))
+                    classes.append(entry)
+                plan = {"n_shards": n_shards,
+                        "num_vertices": int(self._num_vertices),
+                        "chunk_pages": self.rebuild_chunk_pages,
+                        "pace_s": float(pacing_s or 0.0),
+                        "feature_dim": (self._feature_dim
+                                        if self._emb_rows else 0),
+                        "classes": classes}
+            with self._bp_lock:
+                self._rebuilding.add(s)
+            try:
+                # the stream: reads keep serving off the survivors while
+                # the destination pulls chunks over the peer links
+                info = dict(self.endpoints[s].call("rebuild", plan=plan))
+            finally:
+                with self._bp_lock:
+                    self._rebuilding.discard(s)
+            with self._mutate:
+                self._failed[s] = False
+                self._reset_feedback()    # fresh topology, fresh history
             info["shard"] = s
             info["seconds"] = time.perf_counter() - t0
             return info
