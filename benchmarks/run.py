@@ -4,9 +4,9 @@
 
 Prints ``name,us_per_call,derived`` CSV (scaffold contract).  ``--smoke``
 runs a CI-sized subset (fig19 batch-prep + fig21 fast-path + fig22 serving
-+ fig23 sharding + fig24 replication + fig25 multi-host on the small
-workloads) so sampler/engine/scale-out perf regressions surface at PR
-time.  The
++ fig23 sharding + fig24 replication + fig25 multi-host + fig27 ingest on
+the small workloads) so sampler/engine/scale-out perf regressions surface
+at PR time.  The
 roofline table (LM archs) reads the dry-run artifacts; run
 ``python -m repro.launch.dryrun --all --both-meshes`` first for §Roofline.
 """
@@ -44,7 +44,8 @@ def main(argv=None) -> None:
                    fig16_pure_inference, fig17_opbreakdown, fig18_bulk,
                    fig19_batchprep, fig20_mutable, fig21_fastpath,
                    fig22_serving, fig23_sharded, fig24_replicated,
-                   fig25_multihost, fig26_autonomic, table5_datasets)
+                   fig25_multihost, fig26_autonomic, fig27_ingest,
+                   table5_datasets)
     suites = {
         "table5": table5_datasets.run,
         "fig3": fig3_breakdown.run,
@@ -61,6 +62,7 @@ def main(argv=None) -> None:
         "fig24": fig24_replicated.run,
         "fig25": fig25_multihost.run,
         "fig26": fig26_autonomic.run,
+        "fig27": fig27_ingest.run,
     }
     if args.smoke:
         suites = {
@@ -71,6 +73,7 @@ def main(argv=None) -> None:
             "fig24": lambda: fig24_replicated.run(smoke=True),
             "fig25": lambda: fig25_multihost.run(smoke=True),
             "fig26": lambda: fig26_autonomic.run(smoke=True),
+            "fig27": lambda: fig27_ingest.run(smoke=True),
         }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

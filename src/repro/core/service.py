@@ -88,28 +88,87 @@ class HolisticGNNService:
         self._programs: dict[str, object] = {}   # markup -> ServiceProgram
         self._weight_store: dict[str, dict] = {} # weights_ref -> feed dict
         self.qos_provider = None                 # set by ServingRuntime
+        self.firehose = None                     # set by open_firehose
 
     # ------------------------------------------------------------- GraphStore
-    def update_graph(self, edge_array, embeddings=None):
-        tl = self.store.update_graph(np.asarray(edge_array),
-                                     None if embeddings is None
-                                     else np.asarray(embeddings))
+    def update_graph(self, edge_array, embeddings=None,
+                     already_undirected=False, chunked=False,
+                     chunk_edges=None, emb_chunk_rows=None):
+        """Bulk UpdateGraph RPC.
+
+        ``already_undirected=True`` skips the [G-2] mirror pass for
+        pre-symmetrized datasets.  ``chunked=True`` routes a sharded
+        array through the distributed device-side ingest
+        (``update_graph_chunked``: raw chunk streaming + shard-local
+        bucket/sort/pack, bit-identical result); single-device stores
+        fall back to the monolithic path — there is no array to spread
+        the preprocessing over."""
+        edges = np.asarray(edge_array)
+        emb = None if embeddings is None else np.asarray(embeddings)
+        und = bool(already_undirected)
+        if chunked and hasattr(self.store, "update_graph_chunked"):
+            kw = {}
+            if chunk_edges is not None:
+                kw["chunk_edges"] = int(chunk_edges)
+            if emb_chunk_rows is not None:
+                kw["emb_chunk_rows"] = int(emb_chunk_rows)
+            tl = self.store.update_graph_chunked(
+                edges, emb, already_undirected=und, **kw)
+        else:
+            tl = self.store.update_graph(edges, emb, already_undirected=und)
         return {"total_s": tl.total, "user_visible_s": tl.user_visible}
 
+    # Unit mutations route through the firehose while one is open (writes
+    # become windowed device-side batches; a full log sheds typed
+    # BackpressureError — the write-side admission control).
+    def _mutator(self):
+        return self.firehose if self.firehose is not None else self.store
+
     def add_vertex(self, vid, embed=None):
-        self.store.add_vertex(int(vid), embed)
+        self._mutator().add_vertex(int(vid), embed)
 
     def delete_vertex(self, vid):
-        self.store.delete_vertex(int(vid))
+        self._mutator().delete_vertex(int(vid))
 
     def add_edge(self, dst, src):
-        self.store.add_edge(int(dst), int(src))
+        self._mutator().add_edge(int(dst), int(src))
 
     def delete_edge(self, dst, src):
-        self.store.delete_edge(int(dst), int(src))
+        self._mutator().delete_edge(int(dst), int(src))
 
     def update_embed(self, vid, embed):
-        self.store.update_embed(int(vid), np.asarray(embed))
+        self._mutator().update_embed(int(vid), np.asarray(embed))
+
+    # -------------------------------------------------------------- firehose
+    def open_firehose(self, window_s=0.05, max_window_ops=4096,
+                      max_log_ops=65536):
+        """Open a mutation firehose: from now on the unit-mutation RPCs
+        accumulate in a windowed log and each window applies as ONE
+        device-side command per shard (store/ingest.py).  Reads keep
+        flowing between windows, bit-identical to serial application."""
+        from ..store.ingest import MutationFirehose
+        if self.firehose is not None:
+            raise RuntimeError("firehose already open")
+        self.firehose = MutationFirehose(
+            self.store, window_s=float(window_s),
+            max_window_ops=int(max_window_ops),
+            max_log_ops=int(max_log_ops)).start()
+        return self.firehose.snapshot()
+
+    def flush_firehose(self):
+        """Explicitly apply everything logged (window boundary on demand)."""
+        if self.firehose is None:
+            raise RuntimeError("no firehose open")
+        applied = self.firehose.flush()
+        return {"applied_now": applied, **self.firehose.snapshot()}
+
+    def close_firehose(self):
+        """Drain the log, stop the window timer, return final counters;
+        unit mutations apply immediately again afterwards."""
+        if self.firehose is None:
+            raise RuntimeError("no firehose open")
+        fh, self.firehose = self.firehose, None
+        return fh.close()
 
     def get_embed(self, vid):
         return self.store.get_embed(int(vid))
@@ -342,6 +401,8 @@ class HolisticGNNService:
                 "max_inflight_per_shard":
                     self.store.flow.max_inflight_per_shard,
                 "submit_retries": self.store.flow.submit_retries}
+        if self.firehose is not None:
+            out["firehose"] = self.firehose.snapshot()
         if self.qos_provider is not None:
             out["qos"] = self.qos_provider()
         return out

@@ -71,6 +71,12 @@ class RPCServer:
             except Exception as e:  # noqa: BLE001 — fault surfaced to client
                 resp = {"ok": False, "error": f"{type(e).__name__}: {e}",
                         "traceback": traceback.format_exc()}
+                # typed shedding (BackpressureError / AdmissionError)
+                # carries its reason dict to the client, so callers can
+                # tell overload from fault without parsing the message
+                reason = getattr(e, "reason", None)
+                if isinstance(reason, dict):
+                    resp["reason"] = dict(reason)
         self.method_stats.setdefault(method, MethodStats()) \
             .record(time.perf_counter() - t0, resp["ok"])
         if method == "stats" and resp["ok"] and isinstance(resp["result"], dict):

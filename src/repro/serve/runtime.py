@@ -51,6 +51,11 @@ from ..rpc import RPCServer, MultiQueueRoP, AsyncRPCClient
 from ..rpc.transport import serialize, deserialize
 from .scheduler import BatchScheduler, AdmissionError
 
+# commands counted by the write-side admission telemetry
+_MUTATION_METHODS = frozenset({
+    "add_vertex", "delete_vertex", "add_edge", "delete_edge",
+    "update_embed", "update_graph", "flush_firehose"})
+
 
 class ServingRuntime:
     def __init__(self, service, *, n_queues: int = 4, queue_depth: int = 64,
@@ -77,6 +82,12 @@ class ServingRuntime:
         self._threads: list[threading.Thread] = []
         self._stop = threading.Event()
         self._next_q = itertools.count()
+        # write-side admission telemetry: mutation commands dispatched and
+        # shed (typed BackpressureError — e.g. a full firehose log or an
+        # exhausted submit-retry budget rejects the write at admission)
+        self._write_lock = threading.Lock()
+        self.write_ops = 0
+        self.write_shed = 0
 
     # ---------------------------------------------------------------- clients
     def client(self, qid: int | None = None) -> AsyncRPCClient:
@@ -117,6 +128,12 @@ class ServingRuntime:
 
         def immediate() -> None:
             resp = self.server.dispatch(method, kwargs)
+            if method in _MUTATION_METHODS:
+                with self._write_lock:
+                    self.write_ops += 1
+                    if not resp["ok"] and \
+                            resp["error"].startswith("BackpressureError"):
+                        self.write_shed += 1
             self.rop.post_completion(qid, cmd_id, serialize(resp))
 
         if inline or self._immediate is None:
@@ -223,6 +240,12 @@ class ServingRuntime:
                 "retries": store.backpressure_retries,
                 "max_inflight_per_shard":
                     store.flow.max_inflight_per_shard}
+        with self._write_lock:
+            out["write_admission"] = {"ops": self.write_ops,
+                                      "shed": self.write_shed}
+        fh = getattr(self.service, "firehose", None)
+        if fh is not None:
+            out["firehose"] = fh.snapshot()
         sup = getattr(store, "health", None)
         if sup is not None:
             out["health"] = sup.snapshot()

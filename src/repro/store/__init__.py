@@ -1,9 +1,11 @@
 from .blockdev import (BlockDevice, DeviceFailedError, PAGE_BYTES,
                        SLOTS_PER_PAGE)
-from .graphstore import GraphStore, preprocess_edges
+from .graphstore import (GraphStore, bucket_pairs, csr_from_pairs,
+                         mirror_edges, preprocess_edges)
 from .endpoint import (LocalShardEndpoint, RopShardEndpoint, ShardEndpoint,
                        ShardHost, ShardService, make_local_endpoints,
                        make_rop_endpoints)
+from .ingest import MutationFirehose, distributed_update_graph
 from .sharded import (FlowControl, ReplicatedGraphStore, ShardedGraphStore,
                       partition_csr)
 from .sampler import (sample_batch, sample_batch_ref, pad_batch,
@@ -15,5 +17,7 @@ __all__ = ["BlockDevice", "DeviceFailedError", "PAGE_BYTES",
            "ShardEndpoint", "ShardService", "LocalShardEndpoint",
            "RopShardEndpoint", "ShardHost", "make_local_endpoints",
            "make_rop_endpoints",
-           "preprocess_edges", "sample_batch", "sample_batch_ref",
+           "preprocess_edges", "mirror_edges", "bucket_pairs",
+           "csr_from_pairs", "MutationFirehose", "distributed_update_graph",
+           "sample_batch", "sample_batch_ref",
            "pad_batch", "SampledBatch", "LayerBlock"]

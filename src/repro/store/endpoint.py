@@ -48,9 +48,50 @@ import numpy as np
 
 from .blockdev import (BlockDevice, DeviceFailedError, SLOTS_PER_PAGE,
                        SLOT_DTYPE)
-from .graphstore import GraphStore
+from .graphstore import GraphStore, bucket_pairs, csr_from_pairs, mirror_edges
 
 _REBUILD_CHUNK_PAGES = 512        # default pages per rebuild stream chunk
+_EXCHANGE_CHUNK_EDGES = 1 << 18   # default pairs per peer-exchange pull
+
+
+class _IngestSession:
+    """Device-side state of ONE distributed bulk load on one shard.
+
+    Holds the shard's own directed-pair bucket (``local``), the pending
+    buckets destined for each peer (``outbound``), and the preallocated
+    per-role embedding stripes — everything the commit needs to run the
+    [G-3]/[G-4] sort + CSR build and the bulk page packing entirely
+    device-side.
+    """
+
+    def __init__(self, shard: int, n_shards: int, replication: int,
+                 already_undirected: bool, emb_rows: int, feature_dim: int):
+        self.shard = int(shard)
+        self.n_shards = int(n_shards)
+        self.replication = int(replication)
+        self.already_undirected = bool(already_undirected)
+        self.edges_in = 0                       # raw edges streamed in
+        self.exchanged_in = 0                   # pairs pulled from peers
+        self.local: list[np.ndarray] = []       # pair chunks this shard owns
+        self.outbound: list[list[np.ndarray]] = \
+            [[] for _ in range(self.n_shards)]
+        self.out_ready: list[np.ndarray | None] = [None] * self.n_shards
+        # per-role embedding stripe staging: role r holds the rows of
+        # residue class (shard - r) % N, local row = vid // N — the exact
+        # layout _emb_shard_rows ships on the monolithic path
+        self.feature_dim = int(feature_dim)
+        self.emb_rows = int(emb_rows)
+        self.stripes: list[np.ndarray] = []
+        for r in range(self.replication):
+            c = (self.shard - r) % self.n_shards
+            rows = ((self.emb_rows - c + self.n_shards - 1) // self.n_shards
+                    if self.emb_rows > c else 0)
+            self.stripes.append(
+                np.zeros((rows, self.feature_dim), dtype=np.float32))
+
+    def owned_classes(self) -> set[int]:
+        return {(self.shard - r) % self.n_shards
+                for r in range(self.replication)}
 
 
 # ------------------------------------------------------------ plan packing
@@ -139,6 +180,8 @@ class ShardService:
         # (``ShardHost`` sets it) — lets ``counters`` report live SQ/CQ
         # depth so gossip can steer reads away from hot shards
         self.rop = None
+        # active distributed bulk-load session (ingest_begin..ingest_commit)
+        self._ingest: _IngestSession | None = None
 
     # ------------------------------------------------------ batched fetch
     def fetch(self, l_vids=None, h_vids=None, h_pgs=None, emb_rows=None,
@@ -219,6 +262,222 @@ class ShardService:
     def write_embedding_table(self, rows) -> None:
         self.store._write_embedding_table(
             np.ascontiguousarray(rows, dtype=np.float32))
+
+    # ------------------------------------------------ distributed bulk load
+    # The G-1..G-4 pipeline run WHERE THE DATA IS: the coordinator streams
+    # bounded RAW edge chunks (ingest_edges) and embedding stripe slices
+    # (ingest_emb_rows); each shard mirrors + buckets device-side, peers
+    # exchange cross-shard buckets over the peer links (ingest_take /
+    # ingest_exchange — the chunked-rebuild pull discipline), and
+    # ingest_commit sorts, builds the partition-local CSR and bulk-packs
+    # the pages locally.  The coordinator never touches an edge beyond
+    # slicing chunks, so its shipped bytes are the raw arrays — no
+    # preprocessed CSR ever crosses the coordinator link.
+
+    def _require_ingest(self) -> _IngestSession:
+        if self._ingest is None:
+            raise RuntimeError("no ingest session open (ingest_begin first)")
+        return self._ingest
+
+    def ingest_begin(self, shard, n_shards, replication: int = 1,
+                     already_undirected: bool = False, emb_rows: int = 0,
+                     feature_dim: int = 0) -> dict:
+        """Open a bulk-load session on this shard."""
+        if self._ingest is not None:
+            raise RuntimeError("ingest session already open on this shard")
+        if self.store.dev.failed:
+            raise DeviceFailedError("shard device failed; cannot ingest")
+        self._ingest = _IngestSession(shard, n_shards, replication,
+                                      already_undirected, emb_rows,
+                                      feature_dim)
+        return {"shard": int(shard)}
+
+    def ingest_edges(self, chunk) -> dict:
+        """One bounded raw edge chunk: [G-2] mirrored and [G-3] bucketed
+        device-side.  Pairs whose row this shard owns stay local; the rest
+        accumulate in per-peer outbound buckets for the exchange."""
+        ss = self._require_ingest()
+        raw = np.asarray(chunk, dtype=np.int64).reshape(-1, 2)
+        ss.edges_in += len(raw)
+        pairs = mirror_edges(raw, already_undirected=ss.already_undirected)
+        max_vid = int(raw.max()) if raw.size else -1
+        for t, b in enumerate(bucket_pairs(pairs, ss.n_shards,
+                                           replication=ss.replication)):
+            if not len(b):
+                continue
+            if t == ss.shard:
+                ss.local.append(b)
+            else:
+                ss.outbound[t].append(b)
+        return {"edges": int(len(raw)), "max_vid": max_vid}
+
+    def ingest_emb_rows(self, role, row0, rows) -> dict:
+        """Stage a slice of one replica role's embedding stripe (rows of
+        class ``(shard - role) % N`` in local-row order)."""
+        ss = self._require_ingest()
+        rows = np.ascontiguousarray(rows, dtype=np.float32)
+        r0 = int(row0)
+        ss.stripes[int(role)][r0: r0 + len(rows)] = rows
+        return {"rows": int(len(rows))}
+
+    def ingest_take(self, for_shard, cursor, max_edges) -> dict:
+        """Peer-pull export: one bounded slice of the pairs this shard
+        bucketed for ``for_shard`` (the exchange counterpart of
+        ``export_adj_chunk``)."""
+        ss = self._require_ingest()
+        t = int(for_shard)
+        if ss.out_ready[t] is None:
+            parts = ss.outbound[t]
+            ss.out_ready[t] = (np.concatenate(parts) if parts
+                               else np.empty((0, 2), dtype=np.int64))
+            ss.outbound[t] = []
+        buf = ss.out_ready[t]
+        c = max(0, int(cursor))
+        out = buf[c: c + max(1, int(max_edges))]
+        done = c + len(out) >= len(buf)
+        if done:                         # free the shipped bucket
+            ss.out_ready[t] = np.empty((0, 2), dtype=np.int64)
+        return {"pairs": out, "next": c + len(out), "done": bool(done)}
+
+    def ingest_exchange(self, max_edges: int = _EXCHANGE_CHUNK_EDGES) -> dict:
+        """Pull every peer's bucket for THIS shard over the peer links,
+        in bounded chunks.
+
+        The coordinator calls this one shard at a time: the puller's poll
+        thread drives its (otherwise idle) peers' queues — the same
+        single-puller discipline as the chunked rebuild, which is what
+        keeps N single-threaded shard hosts free of circular waits."""
+        ss = self._require_ingest()
+        if self.peers is None:
+            raise RuntimeError("ingest_exchange needs peer links "
+                               "(set_peers)")
+        pulled = 0
+        for p, peer in enumerate(self.peers):
+            if p == ss.shard:
+                continue
+            cursor, done = 0, False
+            while not done:
+                chunk = peer.call("ingest_take", for_shard=ss.shard,
+                                  cursor=cursor, max_edges=int(max_edges))
+                pairs = np.asarray(chunk["pairs"],
+                                   dtype=np.int64).reshape(-1, 2)
+                if len(pairs):
+                    ss.local.append(pairs)
+                    pulled += len(pairs)
+                cursor = int(chunk["next"])
+                done = bool(chunk["done"])
+        ss.exchanged_in += pulled
+        return {"pulled": int(pulled)}
+
+    def ingest_commit(self, num_vertices) -> dict:
+        """[G-3]/[G-4] + bulk pack, all device-local: sort + dedup the
+        owned pairs into the partition CSR (global row space, owned-class
+        self-loops) and write the pages through the SAME packing code the
+        monolithic path uses — overlapping the embedding-table burst with
+        the sort exactly as ``GraphStore.update_graph`` does.  Identical
+        inputs to identical code: the resulting pages are bit-identical
+        to the monolithic ``write_adjacency``/``write_embedding_table``.
+        """
+        ss = self._require_ingest()
+        st = self.store
+        n = int(num_vertices)
+        t0 = time.perf_counter()
+        box: dict = {"wf_s": 0.0, "wf_us": 0.0}
+
+        def write_feature():
+            s0 = time.perf_counter()
+            # simulated flash time is DEFERRED (thread-local accumulator):
+            # the array's devices burn their write bursts concurrently, so
+            # the coordinator pays one max(per-shard flash_us) after the
+            # commit round — the same analytic model the batched read
+            # fan-out uses — instead of N inline sleeps serializing here
+            with st.dev.defer_latency() as acct:
+                if ss.feature_dim and ss.emb_rows:
+                    st._write_embedding_table(
+                        np.concatenate(ss.stripes) if len(ss.stripes) > 1
+                        else ss.stripes[0])
+            box["wf_s"] = time.perf_counter() - s0
+            box["wf_us"] = acct.us
+
+        th = threading.Thread(target=write_feature)
+        th.start()
+        s0 = time.perf_counter()
+        pairs = (np.concatenate(ss.local) if ss.local
+                 else np.empty((0, 2), dtype=np.int64))
+        indptr, indices = csr_from_pairs(
+            pairs, n, n_shards=ss.n_shards, classes=ss.owned_classes())
+        box["sort_s"] = time.perf_counter() - s0
+        th.join()
+        s0 = time.perf_counter()
+        with st.dev.defer_latency() as acct:
+            st._write_adjacency(indptr, indices)
+        st.num_vertices = max(st.num_vertices, n)
+        self._ingest = None
+        # one command stream per device: feature + graph bursts serialize
+        # on THIS device, so its total flash time is their sum
+        flash_us = box["wf_us"] + acct.us
+        return {"edges": int(indptr[-1]), "edges_in": ss.edges_in,
+                "exchanged_in": ss.exchanged_in,
+                "sort_s": box["sort_s"],
+                "write_feature_s": box["wf_s"] + box["wf_us"] * 1e-6,
+                "write_graph_s": time.perf_counter() - s0 + acct.us * 1e-6,
+                "flash_us": flash_us,
+                "total_s": time.perf_counter() - t0 + flash_us * 1e-6}
+
+    def ingest_abort(self) -> dict:
+        """Drop the session (coordinator cleanup after a failed load)."""
+        open_ = self._ingest is not None
+        self._ingest = None
+        return {"aborted": bool(open_)}
+
+    # --------------------------------------------------- mutation firehose
+    def apply_mutations(self, kinds, arg0, arg1, flags, emb=None) -> dict:
+        """ONE device-side command applying a firehose WINDOW of unit
+        mutations in submission order (store/ingest.py batches them
+        per shard per time window).
+
+        Packed parallel arrays; per op ``kinds[i]``:
+          0  add_vertex(arg0)           (no-op when the vid exists)
+          1  insert_neighbor(arg0, arg1)
+          2  remove_neighbor(arg0, arg1)
+          3  drop_vertex_pages(arg0)
+          4  update_embed_row(arg0, <next row of emb>)
+        ``flags`` bit 0 marks the logical-owner application that counts
+        toward ``unit_updates`` (same accounting as the unit RPCs).  The
+        whole window runs under the store lock, so a concurrent read sees
+        window boundaries, never a half-applied op; page writes invalidate
+        the shard's cache through the ordinary ``on_write`` hook."""
+        st = self.store
+        kinds = np.asarray(kinds, dtype=np.int64)
+        arg0 = np.asarray(arg0, dtype=np.int64)
+        arg1 = np.asarray(arg1, dtype=np.int64)
+        flags = np.asarray(flags, dtype=np.int64)
+        erows = None if emb is None else np.asarray(emb, dtype=np.float32)
+        applied, j = 0, 0
+        with st._lock:
+            for k, a, b, f in zip(kinds.tolist(), arg0.tolist(),
+                                  arg1.tolist(), flags.tolist()):
+                if k == 0:
+                    st.add_vertex(a)
+                elif k == 1:
+                    if f & 1:
+                        st.stats.unit_updates += 1
+                    st._insert_neighbor(a, b)
+                elif k == 2:
+                    if f & 1:
+                        st.stats.unit_updates += 1
+                    st._remove_neighbor(a, b)
+                elif k == 3:
+                    if f & 1:
+                        st.stats.unit_updates += 1
+                    st._drop_vertex_pages(a)
+                elif k == 4:
+                    st.update_embed(a, erows[j])
+                    j += 1
+                else:
+                    raise ValueError(f"unknown mutation kind {k}")
+                applied += 1
+        return {"applied": applied}
 
     # ----------------------------------------------------------- telemetry
     def stats(self) -> dict:

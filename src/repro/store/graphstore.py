@@ -306,7 +306,10 @@ class GraphStore:
         t0 = time.perf_counter()
 
         # --- "transfer": the edge array + embedding list arriving over RoP.
-        edge_array = np.asarray(edge_array, dtype=np.int64).reshape(-1, 2).copy()
+        # No defensive copy: preprocess_edges never mutates its input, so
+        # the only allocation is the dtype conversion asarray may need —
+        # peak host memory stays one edge array, not two.
+        edge_array = np.asarray(edge_array, dtype=np.int64).reshape(-1, 2)
         if embeddings is not None:
             embeddings = np.ascontiguousarray(embeddings, dtype=np.float32)
         tl.transfer = (0.0, time.perf_counter() - t0)
@@ -1075,27 +1078,96 @@ class GraphStore:
 
 
 # ---------------------------------------------------------------- preprocessing
-def preprocess_edges(edge_array: np.ndarray, *, already_undirected: bool = False,
-                     add_self_loops: bool = True) -> tuple[np.ndarray, np.ndarray]:
-    """Paper Fig. 2 graph preprocessing: edge array -> sorted undirected CSR.
+# The paper's G-1..G-4 UpdateGraph pipeline, exposed as SHARD-LOCAL pieces
+# so the distributed ingest path (store/ingest.py) can run each stage where
+# the data is: the coordinator ships raw edge chunks, every shard mirrors
+# and buckets its chunks device-side ([G-2]/[G-3] routing), peers exchange
+# buckets, and each shard sorts + builds its partition-local CSR
+# ([G-3]/[G-4]) with the exact arithmetic the monolithic path uses — which
+# is what makes the chunked load bit-identical to ``preprocess_edges`` +
+# ``partition_csr``.
 
-    [G-1] load edge array  [G-2] mirror {dst,src}->{src,dst}
-    [G-3] merge + sort -> VID-indexed structure  [G-4] inject self-loops.
-    Returns (indptr, indices) CSR over max(VID)+1 vertices.
-    """
+def mirror_edges(edge_array: np.ndarray, *,
+                 already_undirected: bool = False) -> np.ndarray:
+    """[G-2] mirror {dst,src}->{src,dst}: directed pair list of the
+    undirected edge set (no-op when the input is already symmetric)."""
     e = np.asarray(edge_array, dtype=np.int64).reshape(-1, 2)
-    if e.size == 0:
-        return np.zeros(1, dtype=np.int64), np.empty(0, dtype=SLOT_DTYPE)
-    n = int(e.max()) + 1
-    if not already_undirected:
-        e = np.concatenate([e, e[:, ::-1]], axis=0)
-    if add_self_loops:
-        loops = np.arange(n, dtype=np.int64)
-        e = np.concatenate([e, np.stack([loops, loops], axis=1)], axis=0)
-    key = e[:, 0] * n + e[:, 1]
+    if already_undirected or e.size == 0:
+        return e
+    return np.concatenate([e, e[:, ::-1]], axis=0)
+
+
+def bucket_pairs(pairs: np.ndarray, n_shards: int, *,
+                 replication: int = 1) -> list[np.ndarray]:
+    """[G-3] routing: directed pairs grouped by destination shard.
+
+    Replica ``r`` of row ``vid`` lives on shard ``(vid + r) % N`` (the
+    array's placement rule), so each pair is routed to the R shards that
+    own its row — shard ``s`` receives the residue classes
+    ``{(s - r) % N, r < R}``, exactly the classes ``partition_csr`` keeps.
+    """
+    pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+    cls = pairs[:, 0] % n_shards
+    out: list[np.ndarray] = []
+    for s in range(n_shards):
+        parts = [pairs[cls == (s - r) % n_shards]
+                 for r in range(int(replication))]
+        parts = [p for p in parts if len(p)]
+        out.append(np.concatenate(parts) if parts
+                   else np.empty((0, 2), dtype=np.int64))
+    return out
+
+
+def csr_from_pairs(pairs: np.ndarray, num_vertices: int, *,
+                   n_shards: int = 1, classes=None,
+                   add_self_loops: bool = True) -> tuple[np.ndarray, np.ndarray]:
+    """[G-3]+[G-4] sort stage: directed pairs -> sorted, deduped CSR in
+    the GLOBAL row space (non-owned rows keep zero-degree indptr slots,
+    as ``partition_csr`` leaves them).
+
+    ``classes`` restricts the [G-4] self-loop injection to the residue
+    classes this shard owns; ``None`` injects loops for every vertex (the
+    single-device/global case).  The key arithmetic (``row * n + nbr`` +
+    ``np.unique``) is shared with the monolithic path, so a shard sorting
+    only its own bucket produces exactly the owned-row restriction of the
+    globally sorted CSR.
+    """
+    n = int(num_vertices)
+    pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+    if add_self_loops and n:
+        if classes is None:
+            loops = np.arange(n, dtype=np.int64)
+        else:
+            own = [np.arange(c, n, n_shards, dtype=np.int64)
+                   for c in sorted(int(c) for c in classes)]
+            loops = (np.concatenate(own) if own
+                     else np.empty(0, dtype=np.int64))
+        pairs = np.concatenate(
+            [pairs, np.stack([loops, loops], axis=1)], axis=0)
+    if pairs.size == 0:
+        return np.zeros(n + 1, dtype=np.int64), np.empty(0, dtype=SLOT_DTYPE)
+    key = pairs[:, 0] * n + pairs[:, 1]
     key = np.unique(key)                      # sort + dedup (the "radix sort")
     src = key // n
     dst = (key % n).astype(SLOT_DTYPE)
     counts = np.bincount(src, minlength=n)
     indptr = np.concatenate([[0], np.cumsum(counts)])
     return indptr, dst
+
+
+def preprocess_edges(edge_array: np.ndarray, *, already_undirected: bool = False,
+                     add_self_loops: bool = True) -> tuple[np.ndarray, np.ndarray]:
+    """Paper Fig. 2 graph preprocessing: edge array -> sorted undirected CSR.
+
+    [G-1] load edge array  [G-2] mirror {dst,src}->{src,dst}
+    [G-3] merge + sort -> VID-indexed structure  [G-4] inject self-loops.
+    Returns (indptr, indices) CSR over max(VID)+1 vertices.  Never mutates
+    its input (every stage concatenates into fresh arrays).
+    """
+    e = np.asarray(edge_array, dtype=np.int64).reshape(-1, 2)
+    if e.size == 0:
+        return np.zeros(1, dtype=np.int64), np.empty(0, dtype=SLOT_DTYPE)
+    n = int(e.max()) + 1
+    return csr_from_pairs(
+        mirror_edges(e, already_undirected=already_undirected), n,
+        add_self_loops=add_self_loops)

@@ -470,7 +470,10 @@ class ShardedGraphStore:
         tl = BulkTimeline()
         t0 = time.perf_counter()
 
-        edge_array = np.asarray(edge_array, dtype=np.int64).reshape(-1, 2).copy()
+        # No defensive copy: preprocess_edges never mutates its input, so
+        # the coordinator holds ONE edge array during bulk load (the copy
+        # here used to double peak host memory for nothing).
+        edge_array = np.asarray(edge_array, dtype=np.int64).reshape(-1, 2)
         if embeddings is not None:
             embeddings = np.ascontiguousarray(embeddings, dtype=np.float32)
             self._feature_dim = int(embeddings.shape[1])
@@ -517,6 +520,42 @@ class ShardedGraphStore:
         tl.user_visible = max(user_visible_at, tl.transfer[1])
         self._bulk = tl
         return tl
+
+    def update_graph_chunked(self, edge_array: np.ndarray,
+                             embeddings: np.ndarray | None = None,
+                             *, already_undirected: bool = False,
+                             chunk_edges: int | None = None,
+                             emb_chunk_rows: int | None = None
+                             ) -> BulkTimeline:
+        """Distributed device-side bulk load: the coordinator streams RAW
+        edge chunks and embedding stripe slices; every shard buckets,
+        sorts and packs its partition locally, exchanging cross-shard
+        pairs with its peers (store/ingest.py).  Bit-identical pages and
+        reads vs ``update_graph``, with coordinator bytes O(E) raw chunks
+        (zero preprocessed CSR) and the graph-pre sort scaling with N.
+
+        Held behind the maintenance gate like any bulk ingest; reads
+        (which take only the mutation lock) keep flowing throughout."""
+        from .ingest import distributed_update_graph
+        kw: dict = {}
+        if chunk_edges is not None:
+            kw["chunk_edges"] = int(chunk_edges)
+        if emb_chunk_rows is not None:
+            kw["emb_chunk_rows"] = int(emb_chunk_rows)
+        with self._maintenance:
+            if any(self._failed):
+                raise DeviceFailedError(
+                    "bulk ingest needs every shard live; rebuild_shard "
+                    "first")
+            return distributed_update_graph(
+                self, edge_array, embeddings,
+                already_undirected=already_undirected, **kw)
+
+    def firehose(self, **kw) -> "object":
+        """A ``MutationFirehose`` over this array: windowed write batching
+        with per-shard device-side application (store/ingest.py)."""
+        from .ingest import MutationFirehose
+        return MutationFirehose(self, **kw)
 
     # ------------------------------------------------------ batched queries
     def _partition(self, vids: np.ndarray) -> list[tuple[int, np.ndarray]]:
