@@ -1,0 +1,261 @@
+"""Fig. 28 (repo extension) — SPMD model-parallel engine execution.
+
+PR 8 shards the engine's fused compute plane across a (data, model)
+device mesh (``core/spmd.py``): hidden/embedding dims striped over the
+``model`` axis (Megatron-style row-parallel GEMM with a psum at the
+combine boundary), super-batch rows over ``data``.  This figure checks
+the two claims that matter:
+
+  * **A: numerics** — the sharded program is allclose (fp32) to the
+    single-device program for GCN/GIN/NGCF at mesh shapes 1x1 / 1x2 /
+    2x2 / 1x4 over real forced-host devices, odd (padded) hidden dims
+    included — always asserted, in smoke mode too;
+  * **B: compute-phase scaling** — this container has ONE physical core,
+    so forced-host "devices" time-slice it and a wall-clock mesh speedup
+    is unmeasurable here.  Following the repo convention (the array pays
+    max over shard costs; host compute priced apart), the compute phase
+    is priced from *measured* per-slice kernel wall times plus an
+    alpha-beta model of the psum at the combine boundary: a slice of the
+    wide-hidden layer body is really executed at slice shapes and timed.
+    Acceptance (full mode): >= 1.5x priced compute-phase speedup at
+    4-way model parallelism in the wide-hidden regime;
+  * **sampling unchanged** — BatchPre runs eagerly ahead of the sharded
+    suffix, so near-storage sampling is bit-identical whatever the mesh
+    (asserted on the composed super-batch).
+
+  PYTHONPATH=src:. python -m benchmarks.fig28_spmd [--smoke]
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+# standalone runs: force the 8-device host pool before jax initializes
+# (benchmarks.run does the same thing for harness runs)
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from repro.core.dfg import Engine
+from repro.core.registry import KernelRegistry
+from repro.core.xbuilder import XBuilder, SHELL_DEVICE
+from repro.core import gnn
+from repro.launch.mesh import make_host_mesh
+
+MESH_SHAPES = ((1, 1), (1, 2), (2, 2), (1, 4))
+
+# alpha-beta interconnect model for the combine-boundary psum: a modest
+# accelerator-interconnect ring (per-hop launch latency + link bandwidth).
+ALPHA_US = 5.0
+BETA_GBPS = 50.0
+
+
+def _ring_allreduce_s(bytes_: int, m: int) -> float:
+    """Ring all-reduce cost of a ``bytes_`` payload over ``m`` slices."""
+    if m <= 1:
+        return 0.0
+    return 2.0 * (m - 1) / m * bytes_ / (BETA_GBPS * 1e9) \
+        + 2.0 * (m - 1) * ALPHA_US * 1e-6
+
+
+def _engine(mesh=None):
+    reg = KernelRegistry()
+    XBuilder(reg)
+    for name, fn in gnn.extra_shell_kernels().items():
+        reg.register_op(name, SHELL_DEVICE, fn)
+    return Engine(reg, mesh=mesh)
+
+
+# ------------------------------------------------------------- A: numerics
+def _equivalence(lines, *, models, shapes, dims_odd):
+    rng = np.random.default_rng(0)
+    n, k, rows = 120, 5, [48, 24]
+
+    def blocks():
+        out, prev = [], n
+        for d in rows:
+            nbr = jnp.asarray(rng.integers(0, prev, (d, k)), jnp.int32)
+            mask = jnp.asarray((rng.random((d, k)) < 0.8).astype(np.float32))
+            out.append((nbr, mask))
+            prev = d
+        return out
+
+    avail = len(jax.devices())
+    for model, dims in models:
+        params = gnn.init_params(model, dims, seed=1)
+        emb = jnp.asarray(rng.standard_normal((n, dims[0])).astype(np.float32))
+        dfg = gnn.BUILD_DFG[model](len(dims) - 1)
+        feeds = gnn.dfg_feeds(model, params, emb, blocks())
+        ref = _engine().run(dfg, dict(feeds), jit=True)
+        for shape in shapes:
+            need = shape[0] * shape[1]
+            if need > avail:
+                lines.append(C.csv_line(
+                    f"fig28.equiv.{model}.{shape[0]}x{shape[1]}", 0.0,
+                    f"SKIPPED=need_{need}_devices_have_{avail}"))
+                continue
+            mesh = make_host_mesh(need, shape=shape)
+            t0 = time.perf_counter()
+            out = _engine(mesh).run(dfg, dict(feeds), jit=True)
+            t = time.perf_counter() - t0
+            diffs = [float(np.abs(np.asarray(ref[key]) -
+                                  np.asarray(out[key])).max())
+                     for key in ref]
+            for key in ref:
+                np.testing.assert_allclose(ref[key], out[key],
+                                           rtol=2e-5, atol=2e-5)
+            lines.append(C.csv_line(
+                f"fig28.equiv.{model}.{shape[0]}x{shape[1]}", t,
+                f"allclose=true;maxdiff={max(diffs):.2e};"
+                f"dims={'x'.join(map(str, dims))}"))
+    # odd hidden dims: padding to mesh divisibility must be invisible
+    if dims_odd and avail >= 8:
+        params = gnn.init_params("gcn", dims_odd, seed=2)
+        emb = jnp.asarray(rng.standard_normal(
+            (n, dims_odd[0])).astype(np.float32))
+        dfg = gnn.BUILD_DFG["gcn"](len(dims_odd) - 1)
+        feeds = gnn.dfg_feeds("gcn", params, emb, blocks())
+        ref = _engine().run(dfg, dict(feeds), jit=True)
+        out = _engine(make_host_mesh(8, shape=(2, 4))).run(
+            dfg, dict(feeds), jit=True)
+        np.testing.assert_allclose(ref["Result"], out["Result"],
+                                   rtol=2e-5, atol=2e-5)
+        lines.append(C.csv_line(
+            "fig28.equiv.gcn_odd_dims.2x4", 0.0,
+            f"allclose=true;dims={'x'.join(map(str, dims_odd))};padded=true"))
+    return lines
+
+
+# ------------------------------------------------- sampling is mesh-blind
+def _sampling_unchanged(lines):
+    """The composed super-batch is bit-identical whatever the mesh: the
+    sampler never sees the mesh (BatchPre runs in the eager prefix)."""
+    from repro.core.service import HolisticGNNService
+    from repro.serve.batcher import sample_group
+    rng = np.random.default_rng(7)
+    n, e = 2000, 12000
+    edges = np.stack([rng.integers(0, n, e), rng.zipf(1.4, e) % n],
+                     axis=1).astype(np.int64)
+    emb = rng.standard_normal((n, 32)).astype(np.float32)
+    batches = []
+    for mp in (None, 4):
+        svc = HolisticGNNService(h_threshold=16, pad_to=32,
+                                 model_parallel=mp)
+        svc.store.update_graph(edges, emb)
+        b, _ = sample_group(svc.store, [list(range(16)), [3, 5, 8]],
+                            [11, 12], [5, 5])
+        batches.append(b)
+        svc.close()
+    ref, meshed = batches
+    np.testing.assert_array_equal(ref.node_vids, meshed.node_vids)
+    np.testing.assert_array_equal(ref.embeddings, meshed.embeddings)
+    for a, b in zip(ref.layers, meshed.layers):
+        np.testing.assert_array_equal(a.nbr, b.nbr)
+        np.testing.assert_array_equal(a.mask, b.mask)
+    lines.append(C.csv_line("fig28.sampling", 0.0,
+                            "bit_identical_across_meshes=true"))
+    return lines
+
+
+# ---------------------------------------- B: priced compute-phase scaling
+def _layer_body(h, nbr, mask, w, b):
+    """One wide GCN layer: mean-aggregate + combine + bias + relu."""
+    g = jnp.take(h, nbr, axis=0) * mask[..., None]
+    s = g.sum(axis=1) / jnp.maximum(mask.sum(axis=1), 1.0)[:, None]
+    z = jnp.dot(s, w, preferred_element_type=jnp.float32) + b
+    return jnp.maximum(z, 0.0)
+
+
+def _slice_body(h_s, nbr, mask, w_s):
+    """The same layer at model-slice shapes: feature-sliced aggregate +
+    row-sharded GEMM partial product (the psum is priced, not run)."""
+    g = jnp.take(h_s, nbr, axis=0) * mask[..., None]
+    s = g.sum(axis=1) / jnp.maximum(mask.sum(axis=1), 1.0)[:, None]
+    return jnp.dot(s, w_s, preferred_element_type=jnp.float32)
+
+
+def _measure(fn, *args, repeat=5):
+    jfn = jax.jit(fn)
+    jax.block_until_ready(jfn(*args))          # compile outside the clock
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _compute_scaling(lines, *, n, d, k, f, o, assert_speedup):
+    """Priced compute-phase speedup of m-way model parallelism in the
+    wide-hidden regime.  Per-slice work is MEASURED at slice shapes on
+    the real kernel body; the combine-boundary psum is priced alpha-beta.
+    The mesh pays max over slices == the (homogeneous) slice wall."""
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.standard_normal((n, f)).astype(np.float32))
+    nbr = jnp.asarray(rng.integers(0, n, (d, k)), jnp.int32)
+    mask = jnp.asarray((rng.random((d, k)) < 0.9).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((f, o)).astype(np.float32) * 0.05)
+    b = jnp.zeros((o,), jnp.float32)
+
+    t_full = _measure(_layer_body, h, nbr, mask, w, b)
+    lines.append(C.csv_line(
+        "fig28.compute.m1", t_full,
+        f"D={d};F={f};O={o};measured=single_device_layer"))
+    speedups = {}
+    for m in (2, 4):
+        t_slice = _measure(_slice_body, h[:, : f // m], nbr, mask,
+                           w[: f // m])
+        t_psum = _ring_allreduce_s(d * o * 4, m)
+        t_par = t_slice + t_psum
+        speedups[m] = t_full / t_par
+        lines.append(C.csv_line(
+            f"fig28.compute.m{m}", t_par,
+            f"slice_wall_s={t_slice:.5f};psum_s={t_psum:.6f};"
+            f"speedup={speedups[m]:.2f}x;"
+            f"alpha_us={ALPHA_US};beta_gbps={BETA_GBPS}"))
+    if assert_speedup:
+        assert speedups[4] >= 1.5, \
+            (f"4-way model-parallel priced compute speedup "
+             f"{speedups[4]:.2f}x < 1.5x in wide-hidden regime")
+    return lines
+
+
+def run(smoke: bool = False):
+    lines: list[str] = []
+    if smoke:
+        _equivalence(lines,
+                     models=[("gcn", [13, 17, 7])],
+                     shapes=((1, 1), (1, 2), (2, 2), (1, 4)),
+                     dims_odd=[5, 9, 3])
+        _sampling_unchanged(lines)
+        # scaling assertion is full-mode only (smoke-exempt): timing on a
+        # shared CI core is too noisy to gate merges on
+        _compute_scaling(lines, n=2048, d=512, k=8, f=512, o=512,
+                         assert_speedup=False)
+    else:
+        _equivalence(lines,
+                     models=[("gcn", [13, 17, 7]), ("gin", [13, 17, 7]),
+                             ("ngcf", [13, 13, 13])],
+                     shapes=MESH_SHAPES,
+                     dims_odd=[5, 9, 3])
+        _sampling_unchanged(lines)
+        _compute_scaling(lines, n=8192, d=2048, k=10, f=2048, o=2048,
+                         assert_speedup=True)
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for ln in run(smoke=args.smoke):
+        print(ln)

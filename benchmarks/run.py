@@ -38,14 +38,27 @@ def main(argv=None) -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as a JSON list (CI uploads "
                          "benchmarks/*.json as workflow artifacts)")
+    ap.add_argument("--history", action="store_true",
+                    help="append this run's records (timestamped) to "
+                         "benchmarks/BENCH_history.json so perf drift is "
+                         "trackable across CI runs")
     args = ap.parse_args(argv)
+
+    # fig28's mesh equivalence needs a multi-device host pool; the flag
+    # only takes effect if set before jax initializes, i.e. before the
+    # fig-module imports below pull in jax via benchmarks.common
+    if "jax" not in sys.modules:
+        _flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in _flags:
+            os.environ["XLA_FLAGS"] = (
+                _flags + " --xla_force_host_platform_device_count=8").strip()
 
     from . import (fig3_breakdown, fig14_end2end, fig15_energy,
                    fig16_pure_inference, fig17_opbreakdown, fig18_bulk,
                    fig19_batchprep, fig20_mutable, fig21_fastpath,
                    fig22_serving, fig23_sharded, fig24_replicated,
                    fig25_multihost, fig26_autonomic, fig27_ingest,
-                   table5_datasets)
+                   fig28_spmd, table5_datasets)
     suites = {
         "table5": table5_datasets.run,
         "fig3": fig3_breakdown.run,
@@ -63,6 +76,7 @@ def main(argv=None) -> None:
         "fig25": fig25_multihost.run,
         "fig26": fig26_autonomic.run,
         "fig27": fig27_ingest.run,
+        "fig28": fig28_spmd.run,
     }
     if args.smoke:
         suites = {
@@ -74,6 +88,7 @@ def main(argv=None) -> None:
             "fig25": lambda: fig25_multihost.run(smoke=True),
             "fig26": lambda: fig26_autonomic.run(smoke=True),
             "fig27": lambda: fig27_ingest.run(smoke=True),
+            "fig28": lambda: fig28_spmd.run(smoke=True),
         }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
@@ -100,6 +115,26 @@ def main(argv=None) -> None:
             json.dump(records, fh, indent=1)
         print(f"# wrote {len(records)} records to {args.json}",
               file=sys.stderr)
+    if args.history:
+        import json
+        path = os.path.join(os.path.dirname(__file__), "BENCH_history.json")
+        try:
+            with open(path) as fh:
+                history = json.load(fh)
+            assert isinstance(history, list)
+        except (FileNotFoundError, ValueError, AssertionError):
+            history = []
+        history.append({
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "smoke": bool(args.smoke),
+            "only": args.only,
+            "failures": failures,
+            "records": records,
+        })
+        with open(path, "w") as fh:
+            json.dump(history, fh, indent=1)
+        print(f"# appended run ({len(records)} records) to {path} "
+              f"({len(history)} runs)", file=sys.stderr)
     # roofline summary (if dry-run artifacts exist)
     try:
         from .roofline import load_records, table

@@ -11,6 +11,7 @@ executes node by node — no cross-compilation, reprogrammable at run time.
 from __future__ import annotations
 
 import json
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -173,13 +174,44 @@ class Engine:
 
     Both paths first apply the aggregate-combine fusion pass whenever a
     fused ``AggCombine`` C-kernel is resolvable (``fuse=None`` -> auto).
+
+    **SPMD** (``mesh=``): with a (data, model) device mesh the jit path
+    lowers the traced suffix through ``shard_map`` instead of plain jit —
+    hidden/embedding dims striped across the ``model`` axis, super-batch
+    rows across ``data``, psum/all_gather at combine boundaries (see
+    ``core/spmd.py``).  The eager prefix (BatchPre) is unchanged; the mesh
+    descriptor joins the jit cache key so the same engine can serve meshed
+    and un-meshed programs side by side.
+
+    The trace cache is a bounded LRU (``jit_cache_size`` entries, default
+    32): long-lived serving processes see unbounded distinct shape
+    signatures from pad-group drift, and every cached entry pins a compiled
+    XLA executable.  Hits/misses/evictions are exposed via
+    ``cache_stats()`` and surfaced in service stats / QoS snapshots.
     """
 
-    def __init__(self, registry: KernelRegistry):
+    def __init__(self, registry: KernelRegistry, *, mesh=None,
+                 jit_cache_size: int = 32):
         self.registry = registry
+        self.mesh = mesh
         self.trace: list[tuple[str, str]] = []     # (op, device) per executed node
         self.timings: list[tuple[str, str, float]] = []
-        self._jit_cache: dict = {}
+        if jit_cache_size < 1:
+            raise ValueError(f"jit_cache_size must be >= 1, got "
+                             f"{jit_cache_size}")
+        self._jit_cache: OrderedDict = OrderedDict()
+        self._jit_cache_size = jit_cache_size
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._cache_evictions = 0
+
+    def cache_stats(self) -> dict:
+        """LRU jit-cache counters (entries pin compiled XLA executables)."""
+        return {"size": len(self._jit_cache),
+                "capacity": self._jit_cache_size,
+                "hits": self._cache_hits,
+                "misses": self._cache_misses,
+                "evictions": self._cache_evictions}
 
     def run(self, dfg: DFG, feeds: dict[str, Any], *, jit: bool = False,
             fuse: bool | None = None) -> dict[str, Any]:
@@ -247,29 +279,47 @@ class Engine:
             else:                       # non-array feeds are trace constants
                 static_env[r] = v
                 sig.append((r, "static", repr(v)))
+        mesh_key = None
+        if self.mesh is not None:
+            from .spmd import mesh_descriptor
+            mesh_key = mesh_descriptor(self.mesh)
         key = (dfg.save(), self.registry.version, fuse, tuple(sig),
-               tuple(suffix_outs))
+               tuple(suffix_outs), mesh_key)
         hit = self._jit_cache.get(key)
-        if hit is None:
+        if hit is not None:
+            self._jit_cache.move_to_end(key)
+            self._cache_hits += 1
+        else:
+            self._cache_misses += 1
             resolved = [self.registry.resolve(n.op) for n in suffix]
             trace = [(n.op, d) for n, (d, _) in zip(suffix, resolved)]
 
-            def _program(*vals):
-                e = dict(static_env)
-                e.update(zip(arr_refs, vals))
-                for node, (_, fn) in zip(suffix, resolved):
-                    args = [e[i] for i in node.inputs]
-                    out = fn(*args, **node.attrs) if node.attrs else fn(*args)
-                    if len(node.outputs) == 1:
-                        e[node.outputs[0]] = out
-                    else:
-                        for ref, val in zip(node.outputs, out):
-                            e[ref] = val
-                return tuple(e[r] for r in suffix_outs)
-
             import jax
+            if self.mesh is not None:
+                from .spmd import build_sharded_program
+                _program = build_sharded_program(
+                    suffix, resolved, arr_refs, static_env, suffix_outs,
+                    env, self.mesh, self.registry)
+            else:
+                def _program(*vals):
+                    e = dict(static_env)
+                    e.update(zip(arr_refs, vals))
+                    for node, (_, fn) in zip(suffix, resolved):
+                        args = [e[i] for i in node.inputs]
+                        out = (fn(*args, **node.attrs) if node.attrs
+                               else fn(*args))
+                        if len(node.outputs) == 1:
+                            e[node.outputs[0]] = out
+                        else:
+                            for ref, val in zip(node.outputs, out):
+                                e[ref] = val
+                    return tuple(e[r] for r in suffix_outs)
+
             hit = (jax.jit(_program), trace)
             self._jit_cache[key] = hit
+            while len(self._jit_cache) > self._jit_cache_size:
+                self._jit_cache.popitem(last=False)
+                self._cache_evictions += 1
         fn, trace = hit
         self.trace.extend(trace)
         t0 = _time.perf_counter()

@@ -31,7 +31,9 @@ class HolisticGNNService:
                  endpoints: list | None = None,
                  replication: int = 1,
                  stats_staleness_s: float = 0.0,
-                 flow=None):
+                 flow=None,
+                 mesh=None, model_parallel: int | None = None,
+                 jit_cache_size: int = 32):
         """``n_shards > 1`` (or an explicit ``devs`` device list) backs the
         service with a hash-partitioned CSSD array (``ShardedGraphStore``)
         instead of one device — every RPC below is shard-transparent, and
@@ -53,7 +55,15 @@ class HolisticGNNService:
 
         ``flow`` (a ``store.sharded.FlowControl``) tunes the array's
         end-to-end flow control: per-shard in-flight windows, queue-full
-        retry budget/backoff, and the gossip steering penalties."""
+        retry budget/backoff, and the gossip steering penalties.
+
+        ``mesh`` (a jax (data, model) device mesh) switches the engine's
+        cached-jit path to SPMD execution: hidden/embedding dims striped
+        across the mesh's ``model`` axis, super-batch rows across
+        ``data`` (``core/spmd.py``).  ``model_parallel=M`` is the
+        convenience knob: it builds a host mesh over all visible devices
+        with the model axis pinned to M (``launch.mesh.make_host_mesh``).
+        ``jit_cache_size`` bounds the engine's LRU trace cache."""
         if endpoints is not None or devs is not None or n_shards > 1 \
                 or replication > 1:
             if dev is not None:
@@ -83,7 +93,11 @@ class HolisticGNNService:
         for name, fn in gnn.extra_shell_kernels().items():
             self.registry.register_op(name, SHELL_DEVICE, fn)
         self._register_batchpre()
-        self.engine = Engine(self.registry)
+        if mesh is None and model_parallel is not None:
+            from ..launch.mesh import make_host_mesh
+            mesh = make_host_mesh(model=int(model_parallel))
+        self.engine = Engine(self.registry, mesh=mesh,
+                             jit_cache_size=jit_cache_size)
         self.pad_to = pad_to
         self._programs: dict[str, object] = {}   # markup -> ServiceProgram
         self._weight_store: dict[str, dict] = {} # weights_ref -> feed dict
@@ -403,9 +417,20 @@ class HolisticGNNService:
                 "submit_retries": self.store.flow.submit_retries}
         if self.firehose is not None:
             out["firehose"] = self.firehose.snapshot()
+        out["engine"] = self.engine_stats()
         if self.qos_provider is not None:
             out["qos"] = self.qos_provider()
         return out
+
+    def engine_stats(self) -> dict:
+        """Engine execution-plane counters: mesh placement (None when the
+        compute plane is unsharded) + the bounded jit trace cache."""
+        mesh = self.engine.mesh
+        desc = None
+        if mesh is not None:
+            from .spmd import mesh_descriptor
+            desc = dict(mesh_descriptor(mesh))
+        return {"mesh": desc, "jit_cache": self.engine.cache_stats()}
 
     def close(self) -> None:
         """Release array resources (remote shard hosts stop their poll

@@ -23,7 +23,7 @@ from .config import CompilerParams, resolve_interpret
 
 
 def _agg_combine_kernel(h_ref, nbr_ref, mask_ref, w_ref, b_ref, o_ref,
-                        agg_ref, *, mode: str):
+                        agg_ref, *, mode: str, epilogue: bool):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -42,8 +42,10 @@ def _agg_combine_kernel(h_ref, nbr_ref, mask_ref, w_ref, b_ref, o_ref,
 
     z = jnp.dot(agg_ref[...], w_ref[...].astype(jnp.float32),
                 preferred_element_type=jnp.float32)
-    z = z + b_ref[...].astype(jnp.float32)
-    o_ref[...] = jnp.maximum(z, 0.0).astype(o_ref.dtype)
+    if epilogue:
+        z = z + b_ref[...].astype(jnp.float32)
+        z = jnp.maximum(z, 0.0)
+    o_ref[...] = z.astype(o_ref.dtype)
 
 
 def agg_combine(h: jax.Array, nbr: jax.Array, mask: jax.Array,
@@ -52,12 +54,30 @@ def agg_combine(h: jax.Array, nbr: jax.Array, mask: jax.Array,
                 interpret: bool | None = None) -> jax.Array:
     """h (N,F); nbr,mask (D,K); w (F,O); b (O,) -> relu(agg@w+b) (D,O)."""
     return _agg_combine(h, nbr, mask, w, b, mode=mode, bd=bd, bo=bo,
-                        interpret=resolve_interpret(interpret))
+                        epilogue=True, interpret=resolve_interpret(interpret))
+
+
+def agg_combine_partial(h: jax.Array, nbr: jax.Array, mask: jax.Array,
+                        w: jax.Array, *, mode: str = "mean",
+                        bd: int = 128, bo: int = 128,
+                        interpret: bool | None = None) -> jax.Array:
+    """Slice-shaped SPMD entry point: ``agg @ w`` with NO bias/relu epilogue.
+
+    The SPMD engine calls this per mesh slice with feature-sharded ``h``
+    and row-sharded ``w``; the partial products are then ``psum``-reduced
+    across the ``model`` axis and the bias+relu epilogue applied to the
+    full sum (a nonlinearity cannot be applied to a partial sum).  Same
+    fused Pallas kernel, epilogue compiled out.
+    """
+    b = jnp.zeros((w.shape[1],), jnp.float32)      # unused when epilogue=False
+    return _agg_combine(h, nbr, mask, w, b, mode=mode, bd=bd, bo=bo,
+                        epilogue=False, interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("mode", "bd", "bo", "interpret"))
-def _agg_combine(h, nbr, mask, w, b, *, mode, bd, bo, interpret):
+                   static_argnames=("mode", "bd", "bo", "epilogue",
+                                    "interpret"))
+def _agg_combine(h, nbr, mask, w, b, *, mode, bd, bo, epilogue, interpret):
     n, f = h.shape
     d, k = nbr.shape
     o = w.shape[1]
@@ -73,7 +93,7 @@ def _agg_combine(h, nbr, mask, w, b, *, mode, bd, bo, interpret):
     wp = jnp.pad(w, ((0, fp - f), (0, op - o)))
     bp = jnp.pad(b.reshape(1, -1), ((0, 0), (0, op - o)))
     out = pl.pallas_call(
-        functools.partial(_agg_combine_kernel, mode=mode),
+        functools.partial(_agg_combine_kernel, mode=mode, epilogue=epilogue),
         grid=(dp // bd, op // bo),
         in_specs=[
             pl.BlockSpec((npad, fp), lambda i, j: (0, 0)),   # VMEM h slab

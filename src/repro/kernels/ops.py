@@ -29,7 +29,7 @@ from .gemm import gemm
 from .spmm import spmm
 from .sddmm import sddmm
 from .rmsnorm import rmsnorm
-from .agg_combine import agg_combine
+from .agg_combine import agg_combine, agg_combine_partial
 from .flash_attention import flash_attention
 from .decode_attention import decode_attention
 
@@ -86,6 +86,11 @@ def hetero_bitstream() -> Bitstream:
         # the engine's fusion pass targets this C-operation when present.
         "AggCombine": lambda h, n, m, w, b: agg_combine(h, n, m, w, b,
                                                         mode="mean"),
+        # slice-shaped SPMD entry: agg@w partial product, no epilogue —
+        # the sharded engine psums this across the model axis before
+        # applying bias+relu to the full sum.
+        "AggCombinePartial": lambda h, n, m, w: agg_combine_partial(
+            h, n, m, w, mode="mean"),
     })
     return bs
 
@@ -115,6 +120,7 @@ def program_config(xbuilder, name: str) -> float:
 
 
 __all__ = ["gemm", "spmm", "sddmm", "rmsnorm", "agg_combine",
+           "agg_combine_partial",
            "flash_attention", "decode_attention", "set_interpret",
            "get_interpret", "BITSTREAMS", "program_config",
            "octa_bitstream", "lsap_bitstream", "hetero_bitstream",

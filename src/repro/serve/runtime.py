@@ -249,6 +249,11 @@ class ServingRuntime:
         sup = getattr(store, "health", None)
         if sup is not None:
             out["health"] = sup.snapshot()
+        if hasattr(self.service, "engine_stats"):
+            # compute-plane placement + jit trace cache (mesh is None when
+            # the engine runs unsharded) — operators watch evictions here
+            # for pad-group drift blowing the trace cache
+            out["engine"] = self.service.engine_stats()
         return out
 
     def shard_link_snapshot(self) -> list[dict] | None:

@@ -1,0 +1,51 @@
+"""Host-mesh construction: the pure (data, model) shape-selection policy
+(no devices needed) and real mesh building over the forced host pool."""
+import pytest
+
+from repro.launch.mesh import host_mesh_shape, make_host_mesh
+
+
+def test_shape_policy_prefers_widest_dividing_model_axis():
+    assert host_mesh_shape(8) == (2, 4)
+    assert host_mesh_shape(4) == (1, 4)
+    assert host_mesh_shape(2) == (1, 2)
+    assert host_mesh_shape(12) == (3, 4)
+
+
+def test_shape_policy_odd_counts_never_drop_devices():
+    # counts not divisible by 4 (or 2) fall through the 4/2/1 ladder
+    assert host_mesh_shape(6) == (3, 2)
+    assert host_mesh_shape(7) == (7, 1)
+    assert host_mesh_shape(3) == (3, 1)
+    assert host_mesh_shape(1) == (1, 1)
+    for n in range(1, 33):
+        d, m = host_mesh_shape(n)
+        assert d * m == n                     # every device is in the mesh
+
+
+def test_shape_policy_model_override():
+    assert host_mesh_shape(8, model=2) == (4, 2)
+    assert host_mesh_shape(8, model=8) == (1, 8)
+    assert host_mesh_shape(6, model=3) == (2, 3)
+    with pytest.raises(ValueError):
+        host_mesh_shape(8, model=3)           # must divide
+    with pytest.raises(ValueError):
+        host_mesh_shape(8, model=0)
+    with pytest.raises(ValueError):
+        host_mesh_shape(0)
+
+
+def test_make_host_mesh_builds_submeshes(spmd_devices):
+    mesh = make_host_mesh()                   # all devices, policy shape
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.size == spmd_devices
+    sub = make_host_mesh(2)                   # submesh of the pool
+    assert sub.devices.shape == (1, 2)
+    pinned = make_host_mesh(8, model=2)
+    assert pinned.devices.shape == (4, 2)
+    explicit = make_host_mesh(4, shape=(2, 2))
+    assert explicit.devices.shape == (2, 2)
+    with pytest.raises(ValueError):
+        make_host_mesh(4, shape=(1, 2))       # shape must cover n
+    with pytest.raises(ValueError):
+        make_host_mesh(10 ** 6)               # more than exist

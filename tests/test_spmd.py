@@ -1,0 +1,214 @@
+"""SPMD engine execution: sharded == single-device numerics (fp32 allclose)
+for GCN/GIN/NGCF across mesh shapes, padding of odd hidden/row dims, the
+Pallas fused path (AggCombinePartial + psum), the serving batcher on a
+meshed service, and the bounded LRU jit cache.
+
+Runs on 8 forced host CPU devices (tests/conftest.py sets XLA_FLAGS before
+any jax import); ``spmd_devices`` skips mesh tests if the force didn't
+stick.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.dfg import Engine
+from repro.core.registry import KernelRegistry
+from repro.core.xbuilder import XBuilder, SHELL_DEVICE
+from repro.core import gnn
+from repro.core.service import HolisticGNNService, make_service_dfg
+from repro.kernels.ops import program_config
+from repro.launch.mesh import make_host_mesh
+
+MESH_SHAPES = [(1, 1), (1, 2), (2, 2), (1, 4)]
+N, K = 60, 5
+ROWS = [24, 12]                      # decreasing hop row counts
+
+
+def _blocks(rng, rows=ROWS, n=N):
+    out, prev = [], n
+    for d in rows:
+        nbr = jnp.asarray(rng.integers(0, prev, (d, K)), jnp.int32)
+        mask = jnp.asarray((rng.random((d, K)) < 0.8).astype(np.float32))
+        out.append((nbr, mask))
+        prev = d
+    return out
+
+
+def _engine(mesh=None, config=None, **kw):
+    reg = KernelRegistry()
+    xb = XBuilder(reg)
+    for name, fn in gnn.extra_shell_kernels().items():
+        reg.register_op(name, SHELL_DEVICE, fn)
+    if config:
+        program_config(xb, config)
+    return Engine(reg, mesh=mesh, **kw)
+
+
+def _model_case(model, dims, seed=1):
+    rng = np.random.default_rng(0)
+    params = gnn.init_params(model, dims, seed=seed)
+    emb = jnp.asarray(rng.standard_normal((N, dims[0])).astype(np.float32))
+    dfg = gnn.BUILD_DFG[model](len(dims) - 1)
+    feeds = gnn.dfg_feeds(model, params, emb, _blocks(rng))
+    return dfg, feeds
+
+
+# -------------------------------------------------- sharded == single-device
+@pytest.mark.parametrize("shape", MESH_SHAPES)
+@pytest.mark.parametrize("model,dims", [
+    ("gcn", [13, 17, 7]), ("gin", [13, 17, 7]), ("ngcf", [13, 13, 13])])
+def test_sharded_matches_single_device(model, dims, shape, spmd_devices):
+    dfg, feeds = _model_case(model, dims)
+    ref = _engine().run(dfg, dict(feeds), jit=True)
+    mesh = make_host_mesh(shape[0] * shape[1], shape=shape)
+    out = _engine(mesh).run(dfg, dict(feeds), jit=True)
+    for k in ref:
+        np.testing.assert_allclose(ref[k], out[k], rtol=2e-5, atol=2e-5)
+
+
+def test_data_by_model_mesh(spmd_devices):
+    """Both axes striped at once (2 data x 4 model = all 8 devices)."""
+    for model, dims in [("gcn", [13, 17, 7]), ("ngcf", [13, 13, 13])]:
+        dfg, feeds = _model_case(model, dims)
+        ref = _engine().run(dfg, dict(feeds), jit=True)
+        out = _engine(make_host_mesh(8, shape=(2, 4))).run(
+            dfg, dict(feeds), jit=True)
+        np.testing.assert_allclose(ref["Result"], out["Result"],
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_hetero_fused_pallas_path(spmd_devices):
+    """The hetero config fuses GCN layers into AggCombine; the sharded
+    engine must route through AggCombinePartial + psum and still match."""
+    dfg, feeds = _model_case("gcn", [13, 17, 7])
+    ref = _engine(config="hetero").run(dfg, dict(feeds), jit=True)
+    eng = _engine(make_host_mesh(8, shape=(2, 4)), config="hetero")
+    out = eng.run(dfg, dict(feeds), jit=True)
+    assert any(op == "AggCombine" for op, _ in eng.trace)  # fusion fired
+    np.testing.assert_allclose(ref["Result"], out["Result"],
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dims", [[5, 9, 3], [7, 11, 11]])
+def test_odd_hidden_dims_are_padded(dims, spmd_devices):
+    """No dim divides the 4-way model axis: zero-padding to divisibility
+    must be numerically invisible and outputs sliced back to true shape."""
+    dfg, feeds = _model_case("gcn", dims)
+    ref = _engine().run(dfg, dict(feeds), jit=True)
+    out = _engine(make_host_mesh(8, shape=(2, 4))).run(
+        dfg, dict(feeds), jit=True)
+    assert np.asarray(out["Result"]).shape == np.asarray(ref["Result"]).shape
+    np.testing.assert_allclose(ref["Result"], out["Result"],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_odd_row_counts_are_padded(spmd_devices):
+    """Hop row counts that don't divide the data axis (11, 7 on d=2)."""
+    rng = np.random.default_rng(4)
+    params = gnn.init_params("gcn", [13, 17, 7], seed=1)
+    emb = jnp.asarray(rng.standard_normal((N, 13)).astype(np.float32))
+    dfg = gnn.BUILD_DFG["gcn"](2)
+    feeds = gnn.dfg_feeds("gcn", params, emb, _blocks(rng, rows=[11, 7]))
+    ref = _engine().run(dfg, dict(feeds), jit=True)
+    out = _engine(make_host_mesh(8, shape=(2, 4))).run(
+        dfg, dict(feeds), jit=True)
+    np.testing.assert_allclose(ref["Result"], out["Result"],
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------- service / serving
+def _graph_service(**kw):
+    rng = np.random.default_rng(7)
+    n, e, feat = 400, 3000, 32
+    edges = np.stack([rng.integers(0, n, e), rng.zipf(1.4, e) % n],
+                     axis=1).astype(np.int64)
+    emb = rng.standard_normal((n, feat)).astype(np.float32)
+    svc = HolisticGNNService(h_threshold=16, pad_to=32, **kw)
+    svc.store.update_graph(edges, emb)
+    return svc, n
+
+
+def test_run_batch_on_meshed_service(spmd_devices):
+    """The serving batcher's fused super-batch through the SPMD engine:
+    same near-storage sampling, allclose results, mesh in stats."""
+    plain, n = _graph_service()
+    meshed, _ = _graph_service(model_parallel=4)
+    params = gnn.init_params("gcn", [32, 16, 8], seed=1)
+    dfg = make_service_dfg("gcn", 2, [5, 5]).save()
+    weights = {k: v for k, v in
+               gnn.dfg_feeds("gcn", params, None, []).items() if k != "H"}
+    rng = np.random.default_rng(5)
+    reqs = [{"targets": rng.integers(0, n, sz).tolist(), "seed": 50 + i}
+            for i, sz in enumerate([8, 3, 16])]
+    ref = plain.run_batch(dfg, reqs, weights=weights, jit=True)
+    out = meshed.run_batch(dfg, reqs, weights=weights, jit=True)
+    for a, b in zip(ref, out):
+        for k in a:
+            assert a[k].shape == b[k].shape
+            np.testing.assert_allclose(a[k], b[k], rtol=2e-5, atol=2e-5)
+    st = meshed.stats()["engine"]
+    assert st["mesh"] == {"data": 2, "model": 4}
+    assert st["jit_cache"]["misses"] >= 1
+    plain.close()
+    meshed.close()
+
+
+def test_service_run_on_mesh(spmd_devices):
+    """Single-request Run RPC path (BatchPre eager prefix + sharded
+    suffix) against an explicit mesh= handle."""
+    plain, n = _graph_service()
+    meshed, _ = _graph_service(mesh=make_host_mesh(4, shape=(1, 4)))
+    params = gnn.init_params("gin", [32, 16, 8], seed=2)
+    dfg = make_service_dfg("gin", 2, [5, 5]).save()
+    weights = {k: v for k, v in
+               gnn.dfg_feeds("gin", params, None, []).items() if k != "H"}
+    targets = list(range(12))
+    ref = plain.run(dfg, targets, weights=weights, seed=3, jit=True)
+    out = meshed.run(dfg, targets, weights=weights, seed=3, jit=True)
+    for k in ref:
+        np.testing.assert_allclose(ref[k], out[k], rtol=2e-5, atol=2e-5)
+    plain.close()
+    meshed.close()
+
+
+# ------------------------------------------------------------- LRU jit cache
+def test_jit_cache_lru_eviction_and_stats():
+    eng = _engine(jit_cache_size=2)
+    dfg = gnn.BUILD_DFG["gcn"](1)
+    rng = np.random.default_rng(0)
+    params = gnn.init_params("gcn", [8, 4], seed=0)
+
+    def feeds(d):
+        emb = jnp.asarray(rng.standard_normal((N, 8)).astype(np.float32))
+        return gnn.dfg_feeds("gcn", params, emb, _blocks(rng, rows=[d]))
+
+    f1, f2, f3 = feeds(8), feeds(12), feeds(16)   # 3 distinct signatures
+    eng.run(dfg, f1, jit=True)
+    eng.run(dfg, f1, jit=True)                    # hit
+    st = eng.cache_stats()
+    assert (st["hits"], st["misses"], st["evictions"]) == (1, 1, 0)
+    eng.run(dfg, f2, jit=True)                    # fills capacity
+    eng.run(dfg, f3, jit=True)                    # evicts f1 (LRU)
+    st = eng.cache_stats()
+    assert st["evictions"] == 1 and st["size"] == st["capacity"] == 2
+    eng.run(dfg, f2, jit=True)                    # still cached
+    assert eng.cache_stats()["hits"] == 2
+    eng.run(dfg, f1, jit=True)                    # was evicted -> miss
+    assert eng.cache_stats()["misses"] == 4
+
+    with pytest.raises(ValueError):
+        _engine(jit_cache_size=0)
+
+
+def test_mesh_in_cache_key(spmd_devices):
+    """Same DFG + signature on different meshes must not share traces."""
+    dfg, feeds = _model_case("gcn", [13, 17, 7])
+    eng = _engine(make_host_mesh(2, shape=(1, 2)))
+    eng.run(dfg, dict(feeds), jit=True)
+    eng.mesh = make_host_mesh(4, shape=(1, 4))    # re-point the engine
+    out = eng.run(dfg, dict(feeds), jit=True)
+    st = eng.cache_stats()
+    assert st["misses"] == 2 and st["hits"] == 0  # distinct cache entries
+    ref = _engine().run(dfg, dict(feeds), jit=True)
+    np.testing.assert_allclose(ref["Result"], out["Result"],
+                               rtol=2e-5, atol=2e-5)
