@@ -58,7 +58,7 @@ def main(argv=None) -> None:
                    fig19_batchprep, fig20_mutable, fig21_fastpath,
                    fig22_serving, fig23_sharded, fig24_replicated,
                    fig25_multihost, fig26_autonomic, fig27_ingest,
-                   fig28_spmd, table5_datasets)
+                   fig28_spmd, fig29_reshard, table5_datasets)
     suites = {
         "table5": table5_datasets.run,
         "fig3": fig3_breakdown.run,
@@ -77,6 +77,7 @@ def main(argv=None) -> None:
         "fig26": fig26_autonomic.run,
         "fig27": fig27_ingest.run,
         "fig28": fig28_spmd.run,
+        "fig29": fig29_reshard.run,
     }
     if args.smoke:
         suites = {
@@ -89,6 +90,7 @@ def main(argv=None) -> None:
             "fig26": lambda: fig26_autonomic.run(smoke=True),
             "fig27": lambda: fig27_ingest.run(smoke=True),
             "fig28": lambda: fig28_spmd.run(smoke=True),
+            "fig29": lambda: fig29_reshard.run(smoke=True),
         }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

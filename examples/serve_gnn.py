@@ -38,6 +38,19 @@ coordinator speaks only the ShardEndpoint protocol, and rebuild streams
 survivor pages shard-to-shard over the peer links.  Results stay
 bit-identical to the in-process array.
 
+With ``--reshard-grow K`` (or ``--reshard-shrink K``) the run doubles as
+an elastic drill: once a third of the traffic has completed, the array is
+resharded LIVE — K shards attach (or the K highest-id shards drain out)
+and only the vertex classes that change owner migrate over the peer
+links, while the clients and the mutator keep running.  Combined with
+``--kill-shard S`` the kill fires *mid-migration* (the chaos thread waits
+for the copy windows to open) and the migration must complete from the
+surviving replicas.  After the traffic drains, the mutated graph is
+asserted bit-identical to a reference store that replays the acknowledged
+op log serially — the array answered through attach, copy, flip and
+detach without dropping or corrupting anything, with zero failed
+requests.
+
 With ``--firehose`` the bulk load goes through the distributed
 device-side ingest (raw chunk streaming + shard-local sort/pack) and the
 mutator's writes flow through an open ``MutationFirehose``: each time
@@ -115,6 +128,14 @@ def main():
                     help="ingest drill: chunked distributed bulk load + "
                          "mutations batched through a MutationFirehose, "
                          "verified bit-identical to serial replay at exit")
+    ap.add_argument("--reshard-grow", type=int, default=None, metavar="K",
+                    help="elastic drill: grow the array by K shards LIVE "
+                         "once a third of the traffic has completed; the "
+                         "final graph is verified bit-identical to serial "
+                         "replay")
+    ap.add_argument("--reshard-shrink", type=int, default=None, metavar="K",
+                    help="elastic drill: drain the K highest-id shards out "
+                         "of the array live (same verification)")
     args = ap.parse_args()
     if args.kill_shard is not None and args.replication < 2:
         ap.error("--kill-shard needs --replication >= 2")
@@ -126,6 +147,25 @@ def main():
         ap.error("--remote-shards and --shards are mutually exclusive")
     if args.firehose and (args.chaos or args.kill_shard is not None):
         ap.error("--firehose and the fault drills are mutually exclusive")
+    reshard_drill = (args.reshard_grow is not None
+                     or args.reshard_shrink is not None)
+    if reshard_drill:
+        n_arr = args.remote_shards if args.remote_shards is not None \
+            else args.shards
+        if args.reshard_grow is not None and args.reshard_shrink is not None:
+            ap.error("--reshard-grow and --reshard-shrink are mutually "
+                     "exclusive")
+        if args.chaos or args.firehose:
+            ap.error("the reshard drill composes with --kill-shard only")
+        if n_arr < 2:
+            ap.error("the reshard drill needs an array "
+                     "(--shards/--remote-shards >= 2)")
+        if args.reshard_shrink is not None and args.kill_shard is not None:
+            ap.error("--reshard-shrink renumbers shards; combine "
+                     "--kill-shard with --reshard-grow")
+        if args.reshard_shrink is not None \
+                and n_arr - args.reshard_shrink < max(1, args.replication):
+            ap.error("--reshard-shrink would leave too few shards")
 
     rng = np.random.default_rng(0)
     n, e, feat = 5000, 40000, 128
@@ -175,15 +215,53 @@ def main():
 
     killed = threading.Event()
     chaos_victim = 1
+    reshard_started = threading.Event()
+    reshard_report: dict = {}
 
-    def chaos_loop():
-        """Fail the victim shard once a third of the traffic completed."""
+    def reshard_loop():
+        """Reshard the array live once a third of the traffic completed.
+
+        Small chunks + pacing stretch the migration so the traffic (and,
+        with --kill-shard, the kill) really lands mid-copy-window."""
         import time
         cl = runtime.client()
         deadline = time.perf_counter() + 120.0
         while completed() < total_reqs // 3 \
                 and time.perf_counter() < deadline:
             time.sleep(0.01)
+        reshard_started.set()
+        kw = dict(chunk_pages=8, pace_s=0.002, timeout=600)
+        if args.reshard_grow is not None:
+            r = cl.call("reshard", add=args.reshard_grow, **kw)
+        else:
+            n0 = svc.store.n_shards
+            r = cl.call("reshard",
+                        remove=list(range(n0 - args.reshard_shrink, n0)),
+                        **kw)
+        reshard_report.update(r)
+        print(f"reshard: {r['classes_moved']} classes moved "
+              f"({r['copies']} copies, {r['bytes_shipped']} bytes over the "
+              f"peer links) -> {r['n_shards']} shards in "
+              f"{r['seconds'] * 1e3:.0f} ms, {r['epochs']} routing epochs")
+
+    def chaos_loop():
+        """Fail the victim shard once a third of the traffic completed —
+        or, when composed with the reshard drill, mid-migration."""
+        import time
+        cl = runtime.client()
+        if reshard_drill:
+            reshard_started.wait(timeout=120.0)
+            deadline = time.perf_counter() + 60.0
+            while time.perf_counter() < deadline and not reshard_report:
+                ps = svc.store.placement_stats()
+                if ps["migrating_classes"]:
+                    break                     # a copy window is open NOW
+                time.sleep(0.001)
+        else:
+            deadline = time.perf_counter() + 120.0
+            while completed() < total_reqs // 3 \
+                    and time.perf_counter() < deadline:
+                time.sleep(0.01)
         info = cl.call("fail_shard", shard=args.kill_shard, timeout=600)
         killed.set()
         print(f"chaos: failed shard {args.kill_shard} after {completed()} "
@@ -246,6 +324,8 @@ def main():
     threads = [threading.Thread(target=client_loop, args=(c,))
                for c in range(args.clients)]
     mut = threading.Thread(target=mutator_loop)
+    if reshard_drill:
+        threads.append(threading.Thread(target=reshard_loop))
     if args.kill_shard is not None:
         threads.append(threading.Thread(target=chaos_loop))
     if args.chaos:
@@ -306,6 +386,35 @@ def main():
         assert sh["pages_l"] + sh["pages_h"] > 0 \
             and sh["device"]["written_pages"] > 0, sh
         print("fault drill: degraded serve + rebuild verified bit-identical")
+
+    if reshard_drill:
+        assert reshard_report, "reshard thread never completed"
+        st = boot.call("stats", timeout=600)
+        pl = st["placement"]
+        assert not pl["resharding"] and not pl["migrating_classes"], pl
+        n_expect = (n_arr + args.reshard_grow) \
+            if args.reshard_grow is not None \
+            else n_arr - args.reshard_shrink
+        assert reshard_report["n_shards"] == n_expect \
+            and svc.store.n_shards == n_expect, (reshard_report, n_expect)
+        # the migrated, mutated-throughout graph must be EXACTLY the graph
+        # a serial replay of the acknowledged op log leaves — the copy
+        # windows, flips and detaches dropped / duplicated nothing
+        from repro.store import BlockDevice, GraphStore
+        ref = GraphStore(BlockDevice(), h_threshold=64)
+        ref.update_graph(edges, emb)
+        for op in op_log:
+            getattr(ref, op[0])(*op[1:])
+        vids = np.arange(0, n, 7)
+        assert (np.asarray(svc.store.get_embeds(vids)) ==
+                ref.get_embeds(vids)).all(), \
+            "post-reshard embeddings diverged from serial replay"
+        assert ref.to_adjacency() == svc.store.to_adjacency(), \
+            "post-reshard graph diverged from serial replay"
+        print(f"reshard drill: array now {n_expect} shards "
+              f"({reshard_report['bytes_shipped']} bytes migrated, "
+              f"{reshard_report['epochs']} epochs) — graph bit-identical "
+              f"to serial replay after live migration")
 
     if args.chaos:
         assert killed.is_set(), "chaos thread never fired"

@@ -24,6 +24,11 @@ from . import gnn
 
 
 class HolisticGNNService:
+    """The device-resident service object: Table-1 RPC surface over one
+    store (single device, sharded array, or replicated array) plus the
+    DFG engine, kernel registry, and XBuilder.  Construct once per
+    array; dispatch via ``RPCServer`` or call directly in-process."""
+
     def __init__(self, *, h_threshold: int = 128, pad_to: int = 64,
                  dev: BlockDevice | None = None,
                  cache_pages: int | None = None,
@@ -139,18 +144,23 @@ class HolisticGNNService:
         return self.firehose if self.firehose is not None else self.store
 
     def add_vertex(self, vid, embed=None):
+        """Unit AddVertex RPC: insert ``vid`` (optional embedding row)."""
         self._mutator().add_vertex(int(vid), embed)
 
     def delete_vertex(self, vid):
+        """Unit DeleteVertex RPC: remove ``vid`` and every incident edge."""
         self._mutator().delete_vertex(int(vid))
 
     def add_edge(self, dst, src):
+        """Unit AddEdge RPC: undirected edge insert (both directions)."""
         self._mutator().add_edge(int(dst), int(src))
 
     def delete_edge(self, dst, src):
+        """Unit DeleteEdge RPC: undirected edge delete (both directions)."""
         self._mutator().delete_edge(int(dst), int(src))
 
     def update_embed(self, vid, embed):
+        """Unit UpdateEmbed RPC: overwrite ``vid``'s embedding row."""
         self._mutator().update_embed(int(vid), np.asarray(embed))
 
     # -------------------------------------------------------------- firehose
@@ -185,9 +195,12 @@ class HolisticGNNService:
         return fh.close()
 
     def get_embed(self, vid):
+        """Point read of one vertex embedding (test/admin RPC — serving
+        reads go through the batched sampler plan/fetch path)."""
         return self.store.get_embed(int(vid))
 
     def get_neighbors(self, vid):
+        """Point read of one vertex's sorted neighbor list."""
         return self.store.get_neighbors(int(vid))
 
     # ---------------------------------------------------------- fault admin
@@ -217,6 +230,83 @@ class HolisticGNNService:
         if not hasattr(self.store, "probe_shards"):
             raise RuntimeError("probe_shards needs a sharded array")
         return self.store.probe_shards()
+
+    # ------------------------------------------------------- elastic reshard
+    def reshard(self, add=None, remove=None, rebalance=False,
+                refine=4, chunk_pages=None, pace_s=None):
+        """Elastic online reshard RPC (see ``ShardedGraphStore.reshard``).
+
+        Exactly one mode per call:
+
+        * ``add=k`` (int) — grow the array by ``k`` shards.  The service
+          builds the new endpoints itself, matched to the array's
+          transport: in-process arrays get ``LocalShardEndpoint``s,
+          RoP-linked arrays get fresh ``ShardHost`` + ``RopShardEndpoint``
+          pairs; each new device clones shard 0's performance profile.
+          ``add=[...]`` passes pre-built ``ShardEndpoint``s instead.
+        * ``remove=[ids]`` — shrink: migrate those shards' classes to the
+          survivors, detach and close them.
+        * ``rebalance=True`` — keep N, refine the placement map by
+          ``refine`` and move the hottest classes off the most-loaded
+          shards (heat = the gossiped read counters).
+
+        ``chunk_pages`` bounds each peer-link migration pull;
+        ``pace_s`` sleeps that long between pulls so migration yields
+        device bandwidth to serving reads (supervisor-style pacing).
+        Serving stays up throughout: reads route to the old owner until
+        each class atomically flips, writes gate only during their own
+        class's copy window.
+
+        Returns the migration report (classes/copies/bytes/epochs —
+        see the store docstring).  Raises ``RuntimeError`` on a
+        single-device store and whatever the store raises (mode errors,
+        reshard/rebuild already in progress, failed shards present).
+        """
+        store = self.store
+        if not hasattr(store, "reshard"):
+            raise RuntimeError("reshard needs a sharded array "
+                               "(construct with n_shards > 1)")
+        kw = {"rebalance": bool(rebalance), "refine": int(refine)}
+        if chunk_pages is not None:
+            kw["chunk_pages"] = int(chunk_pages)
+        if pace_s is not None:
+            kw["pace_s"] = float(pace_s)
+        if remove is not None:
+            kw["remove"] = [int(s) for s in remove]
+        if isinstance(add, (int, np.integer)):
+            kw["add"] = self._build_endpoints(int(add))
+        elif add is not None:
+            kw["add"] = list(add)
+        return store.reshard(**kw)
+
+    def _build_endpoints(self, k: int) -> list:
+        """``k`` fresh shard endpoints matching the array's transport,
+        devices cloned from shard 0's performance profile."""
+        from ..store.endpoint import (LocalShardEndpoint, RopShardEndpoint,
+                                      ShardHost, clone_dev_profile)
+        store = self.store
+        template = store.endpoints[0]
+        ht = store.h_threshold
+        d = store.feature_dim
+        eps = []
+        for _ in range(k):
+            dev = None
+            old_dev = getattr(getattr(template, "service", None), "store",
+                              None)
+            old_dev = getattr(old_dev, "dev", None)
+            if old_dev is None:
+                old_dev = getattr(getattr(getattr(template, "host", None),
+                                          "service", None), "store", None)
+                old_dev = getattr(old_dev, "dev", None)
+            if old_dev is not None:
+                dev = clone_dev_profile(old_dev)
+            if isinstance(template, RopShardEndpoint):
+                host = ShardHost(dev, h_threshold=ht, feature_dim=d)
+                eps.append(RopShardEndpoint(host))
+            else:
+                eps.append(LocalShardEndpoint(dev=dev, h_threshold=ht,
+                                              feature_dim=d))
+        return eps
 
     # ------------------------------------------------------------ GraphRunner
     def _register_batchpre(self):
@@ -405,6 +495,8 @@ class HolisticGNNService:
                 "r": repl,
                 "failed_shards": [i for i, f in
                                   enumerate(self.store.failed_shards) if f]}
+        if hasattr(self.store, "placement_stats"):
+            out["placement"] = self.store.placement_stats()
         sup = getattr(self.store, "health", None)
         if sup is not None:
             out["health"] = sup.snapshot()

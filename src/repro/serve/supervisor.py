@@ -116,6 +116,8 @@ class ShardSupervisor:
 
     # ---------------------------------------------------------- lifecycle
     def start(self) -> "ShardSupervisor":
+        """Attach as ``store.health`` and launch the monitor thread
+        (idempotent); returns ``self`` for chaining."""
         if self._thread is not None:
             return self
         self.store.health = self
@@ -126,6 +128,8 @@ class ShardSupervisor:
         return self
 
     def stop(self) -> None:
+        """Detach from the store, join the monitor and any in-flight
+        rebuild threads."""
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=10.0)
@@ -135,12 +139,60 @@ class ShardSupervisor:
         if getattr(self.store, "health", None) is self:
             self.store.health = None
 
+    def resize(self, n: int, keep: list[int] | None = None) -> None:
+        """Re-dimension the per-shard state after an elastic reshard.
+
+        Called by the store's ``_topology_changed`` hook once a grow or
+        shrink commits.  On grow the new shards start ``healthy``; on
+        shrink the survivors were renumbered by the store, and — since
+        ``reshard`` refuses to run with any shard failed — every
+        survivor was healthy or suspect at commit time, so the state
+        resets to ``healthy`` (a still-flaky shard re-marks itself on
+        its next error).  ``keep`` optionally lists the old ids of the
+        survivors in new-id order to preserve their state instead.
+
+        Args:
+            n: the store's new shard count.
+            keep: old shard ids of the survivors, in new-id order
+                (shrink only); ``None`` resets shrunk state.
+        """
+        n = int(n)
+        with self._lock:
+            old_n = len(self._state)
+            if n == old_n:
+                return
+
+            def remap(lst, default):
+                if n > old_n:
+                    return list(lst) + [default] * (n - old_n)
+                if keep is not None:
+                    return [lst[int(o)] for o in keep]
+                return [default] * n
+
+            self._state = remap(self._state, HEALTHY)
+            self._drained = remap(self._drained, False)
+            self._errors = remap(self._errors, None)
+            for i, q in enumerate(self._errors):
+                if q is None or (n < old_n and keep is None):
+                    self._errors[i] = deque(maxlen=64)
+            self._last_error = remap(self._last_error, 0.0)
+            self._first_error = remap(self._first_error, 0.0)
+            self._draining = remap(self._draining, False)
+            self._rebuild_attempts = remap(self._rebuild_attempts, 0)
+            self._next_rebuild_t = remap(self._next_rebuild_t, 0.0)
+            self.events.append({"t": time.monotonic(), "shard": -1,
+                                "from": f"n={old_n}", "to": f"n={n}",
+                                "cause": "resize"})
+
     # ------------------------------------------------------------ queries
     def state_of(self, shard: int) -> str:
+        """Current health state of one shard (``healthy`` / ``suspect``
+        / ``failed`` / ``rebuilding``)."""
         with self._lock:
             return self._state[int(shard)]
 
     def states(self) -> list[str]:
+        """Health state of every shard, indexed by shard id."""
         with self._lock:
             return list(self._state)
 
@@ -151,6 +203,10 @@ class ShardSupervisor:
             return [s for s, st in enumerate(self._state) if st == SUSPECT]
 
     def snapshot(self) -> dict:
+        """Point-in-time health block for the service ``stats`` RPC:
+        per-shard states, suspect list, incident count + last incident,
+        the 16 most recent transition events, and the active policy
+        thresholds."""
         with self._lock:
             return {
                 "states": list(self._state),
@@ -289,9 +345,20 @@ class ShardSupervisor:
             ok = not info.get("rebuild_in_progress")
         except Exception as e:  # noqa: BLE001 — e.g. a survivor died
             info, ok = {"error": f"{type(e).__name__}: {e}"}, False
+        deferred = bool(info.get("reshard_in_progress"))
         with self._lock:
             self._rebuild_threads.pop(s, None)
-            if ok:
+            if deferred:
+                # an elastic reshard holds the maintenance plane — not a
+                # failure of THIS shard, so reschedule without burning an
+                # attempt (the reshard itself refuses to start while any
+                # shard is failed, so this can only race its final flip)
+                self._next_rebuild_t[s] = time.monotonic() \
+                    + pol.rebuild_retry_s
+                self._transition_locked(
+                    s, FAILED, {"cause": "rebuild_deferred",
+                                "reason": "reshard_in_progress"})
+            elif ok:
                 self._errors[s].clear()
                 self._drained[s] = False
                 self._rebuild_attempts[s] = 0

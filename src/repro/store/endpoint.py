@@ -49,6 +49,7 @@ import numpy as np
 from .blockdev import (BlockDevice, DeviceFailedError, SLOTS_PER_PAGE,
                        SLOT_DTYPE)
 from .graphstore import GraphStore, bucket_pairs, csr_from_pairs, mirror_edges
+from .placement import PlacementMap, rows_of_class
 
 _REBUILD_CHUNK_PAGES = 512        # default pages per rebuild stream chunk
 _EXCHANGE_CHUNK_EDGES = 1 << 18   # default pairs per peer-exchange pull
@@ -65,33 +66,42 @@ class _IngestSession:
     """
 
     def __init__(self, shard: int, n_shards: int, replication: int,
-                 already_undirected: bool, emb_rows: int, feature_dim: int):
+                 already_undirected: bool, emb_rows: int, feature_dim: int,
+                 placement: PlacementMap | None = None):
         self.shard = int(shard)
         self.n_shards = int(n_shards)
         self.replication = int(replication)
         self.already_undirected = bool(already_undirected)
+        self.placement = placement
         self.edges_in = 0                       # raw edges streamed in
         self.exchanged_in = 0                   # pairs pulled from peers
         self.local: list[np.ndarray] = []       # pair chunks this shard owns
         self.outbound: list[list[np.ndarray]] = \
             [[] for _ in range(self.n_shards)]
         self.out_ready: list[np.ndarray | None] = [None] * self.n_shards
-        # per-role embedding stripe staging: role r holds the rows of
-        # residue class (shard - r) % N, local row = vid // N — the exact
-        # layout _emb_shard_rows ships on the monolithic path
+        # per-stripe embedding staging in canonical (class, role) order.
+        # Default map: stripe index == role r, class (shard - r) % N,
+        # local row = vid // N — the exact layout _emb_shard_rows ships
+        # on the monolithic path.  A custom placement replaces the class
+        # set and modulus but keeps the same role-major stripe order
+        # (PlacementMap.pairs_of).
         self.feature_dim = int(feature_dim)
         self.emb_rows = int(emb_rows)
+        if placement is not None:
+            self.modulus = placement.n_classes
+            self.class_pairs = placement.pairs_of(self.shard)
+        else:
+            self.modulus = self.n_shards
+            self.class_pairs = [((self.shard - r) % self.n_shards, r)
+                                for r in range(self.replication)]
         self.stripes: list[np.ndarray] = []
-        for r in range(self.replication):
-            c = (self.shard - r) % self.n_shards
-            rows = ((self.emb_rows - c + self.n_shards - 1) // self.n_shards
-                    if self.emb_rows > c else 0)
+        for c, _r in self.class_pairs:
+            rows = rows_of_class(self.emb_rows, c, self.modulus)
             self.stripes.append(
                 np.zeros((rows, self.feature_dim), dtype=np.float32))
 
     def owned_classes(self) -> set[int]:
-        return {(self.shard - r) % self.n_shards
-                for r in range(self.replication)}
+        return {c for c, _r in self.class_pairs}
 
 
 # ------------------------------------------------------------ plan packing
@@ -222,15 +232,22 @@ class ShardService:
 
     # ----------------------------------------------------------- unit ops
     def get_neighbors(self, vid):
+        """Sorted neighbor list of one locally-owned vid."""
         return self.store.get_neighbors(int(vid))
 
     def get_embed_row(self, row):
+        """One embedding row by SHARD-LOCAL row index (the coordinator
+        does the vid -> (shard, row) placement math)."""
         return self.store.get_embed(int(row))
 
     def add_vertex(self, vid) -> None:
+        """Insert one vid into the local partition (idempotent)."""
         self.store.add_vertex(int(vid))
 
     def insert_neighbor(self, vid, nbr, count: bool = False) -> None:
+        """Add ``nbr`` to ``vid``'s local adjacency; ``count=True``
+        bills it as the unit update (one logical op counted once across
+        the replica fan-out)."""
         st = self.store
         with st._lock:
             if count:
@@ -238,6 +255,8 @@ class ShardService:
             st._insert_neighbor(int(vid), int(nbr))
 
     def remove_neighbor(self, vid, nbr, count: bool = False) -> None:
+        """Remove ``nbr`` from ``vid``'s local adjacency (see
+        ``insert_neighbor`` for ``count``)."""
         st = self.store
         with st._lock:
             if count:
@@ -245,6 +264,7 @@ class ShardService:
             st._remove_neighbor(int(vid), int(nbr))
 
     def drop_vertex_pages(self, vid, count: bool = False) -> None:
+        """Drop every adjacency page of ``vid`` (vertex delete)."""
         st = self.store
         with st._lock:
             if count:
@@ -252,14 +272,18 @@ class ShardService:
             st._drop_vertex_pages(int(vid))
 
     def update_embed_row(self, row, embed) -> None:
+        """Overwrite one embedding row by shard-local row index."""
         self.store.update_embed(int(row), np.asarray(embed))
 
     # --------------------------------------------------------- bulk writes
     def write_adjacency(self, indptr, indices) -> None:
+        """Bulk-pack a pre-partitioned CSR into the local page store
+        (coordinator-side ingest path)."""
         self.store._write_adjacency(np.asarray(indptr, dtype=np.int64),
                                     np.asarray(indices))
 
     def write_embedding_table(self, rows) -> None:
+        """Bulk-write the shard-local embedding stripe table."""
         self.store._write_embedding_table(
             np.ascontiguousarray(rows, dtype=np.float32))
 
@@ -281,15 +305,24 @@ class ShardService:
 
     def ingest_begin(self, shard, n_shards, replication: int = 1,
                      already_undirected: bool = False, emb_rows: int = 0,
-                     feature_dim: int = 0) -> dict:
-        """Open a bulk-load session on this shard."""
+                     feature_dim: int = 0, placement=None) -> dict:
+        """Open a bulk-load session on this shard.
+
+        ``placement`` (a ``PlacementMap`` payload dict, or ``None`` for
+        the default ``vid % N`` layout) selects the ownership rule the
+        session buckets and stripes under; it is omitted from the wire
+        at the default map, so legacy callers are unaffected."""
         if self._ingest is not None:
             raise RuntimeError("ingest session already open on this shard")
         if self.store.dev.failed:
             raise DeviceFailedError("shard device failed; cannot ingest")
+        pmap = None
+        if placement is not None:
+            pmap = (placement if isinstance(placement, PlacementMap)
+                    else PlacementMap.from_payload(placement))
         self._ingest = _IngestSession(shard, n_shards, replication,
                                       already_undirected, emb_rows,
-                                      feature_dim)
+                                      feature_dim, placement=pmap)
         return {"shard": int(shard)}
 
     def ingest_edges(self, chunk) -> dict:
@@ -302,7 +335,8 @@ class ShardService:
         pairs = mirror_edges(raw, already_undirected=ss.already_undirected)
         max_vid = int(raw.max()) if raw.size else -1
         for t, b in enumerate(bucket_pairs(pairs, ss.n_shards,
-                                           replication=ss.replication)):
+                                           replication=ss.replication,
+                                           placement=ss.placement)):
             if not len(b):
                 continue
             if t == ss.shard:
@@ -312,8 +346,10 @@ class ShardService:
         return {"edges": int(len(raw)), "max_vid": max_vid}
 
     def ingest_emb_rows(self, role, row0, rows) -> dict:
-        """Stage a slice of one replica role's embedding stripe (rows of
-        class ``(shard - role) % N`` in local-row order)."""
+        """Stage a slice of one embedding stripe in local-row order.
+        ``role`` is the stripe index in canonical (class, role) order —
+        under the default map that is the replica role holding class
+        ``(shard - role) % N``."""
         ss = self._require_ingest()
         rows = np.ascontiguousarray(rows, dtype=np.float32)
         r0 = int(row0)
@@ -405,7 +441,7 @@ class ShardService:
         pairs = (np.concatenate(ss.local) if ss.local
                  else np.empty((0, 2), dtype=np.int64))
         indptr, indices = csr_from_pairs(
-            pairs, n, n_shards=ss.n_shards, classes=ss.owned_classes())
+            pairs, n, n_shards=ss.modulus, classes=ss.owned_classes())
         box["sort_s"] = time.perf_counter() - s0
         th.join()
         s0 = time.perf_counter()
@@ -481,6 +517,9 @@ class ShardService:
 
     # ----------------------------------------------------------- telemetry
     def stats(self) -> dict:
+        """Full shard telemetry snapshot: store page/update counters,
+        device IO counters, cache stats (or None), and the failed flag —
+        the per-shard block the service ``stats`` RPC aggregates."""
         st = self.store.stats
         dev = self.store.dev.stats
         return {
@@ -517,16 +556,19 @@ class ShardService:
 
     # --------------------------------------------------------------- cache
     def attach_cache(self, capacity_pages, cache_graph_pages: bool = True):
+        """Attach a device-DRAM page cache of ``capacity_pages``."""
         from .embcache import EmbeddingPageCache
         self.store.attach_cache(EmbeddingPageCache(int(capacity_pages)),
                                 cache_graph_pages=cache_graph_pages)
 
     def cache_stats(self) -> dict | None:
+        """Cache counter snapshot, or ``None`` when no cache attached."""
         if self.store.cache is None:
             return None
         return self.store.cache.stats.snapshot()
 
     def clear_cache(self) -> None:
+        """Drop every cached page (counters survive)."""
         if self.store.cache is not None:
             self.store.cache.clear()
 
@@ -605,6 +647,96 @@ class ShardService:
         """One bounded chunk of local embedding rows (a stripe slice)."""
         return self.store.get_embeds(int(row0) + np.arange(int(n_rows)))
 
+    def export_emb_rows(self, rows):
+        """Embedding rows by explicit local row index — the migration
+        export (moved classes are non-contiguous under coarse extents)."""
+        return self.store.get_embeds(np.asarray(rows, dtype=np.int64))
+
+    # ---------------------------------------------- class migration: dst
+    def emb_reserve_rows(self, n_rows) -> dict:
+        """Grow this shard's embedding table by ``n_rows`` zero rows and
+        return the base row index of the new region (the import target
+        of one migrating class's stripe)."""
+        return {"base": int(self.store.extend_embedding_table(int(n_rows)))}
+
+    def import_emb_rows(self, row0, rows) -> dict:
+        """Overwrite the local embedding rows ``[row0, row0+len)`` with
+        ``rows`` (page-granular RMW into a reserved region)."""
+        rows = np.asarray(rows, dtype=np.float32)
+        self.store.write_embed_rows(int(row0), rows)
+        return {"rows": int(len(rows))}
+
+    def import_adj_chunk(self, l_vids, l_lens, l_nbrs, h_vids, h_lens,
+                         h_pages) -> dict:
+        """Import one ``export_adj_chunk`` payload into the LIVE store
+        (unlike ``rebuild``, which materialises a fresh one): L vids are
+        re-laid through the unit insert path, H chains cloned page-exact.
+        Replace-safe, so a chunk redo after a source failover converges."""
+        st = self.store
+        l_vids = np.asarray(l_vids, dtype=np.int64)
+        l_lens = np.asarray(l_lens, dtype=np.int64)
+        l_nbrs = np.asarray(l_nbrs, dtype=SLOT_DTYPE)
+        h_vids = np.asarray(h_vids, dtype=np.int64)
+        h_lens = np.asarray(h_lens, dtype=np.int64)
+        h_pages = np.asarray(h_pages, dtype=SLOT_DTYPE)
+        off = 0
+        for v, ln in zip(l_vids.tolist(), l_lens.tolist()):
+            st.import_l_vertex(int(v), l_nbrs[off: off + ln])
+            off += ln
+        off = 0
+        for v, ln in zip(h_vids.tolist(), h_lens.tolist()):
+            st.import_h_chain(int(v), h_pages[off: off + ln])
+            off += ln
+        return {"l": int(len(l_vids)), "h": int(len(h_vids))}
+
+    def migrate_pull(self, cls, modulus, src, start_vid, max_pages) -> dict:
+        """Pull ONE bounded adjacency chunk of class ``cls`` from peer
+        ``src`` over the peer link and import it into the live store.
+
+        The coordinator drives the cursor loop (so it can pace, probe
+        bit-identity at every chunk boundary, and fail the source over),
+        but only O(1) metadata crosses the coordinator link — the page
+        data moves shard-to-shard.  Returns the next cursor, ``done``,
+        and the payload byte count for the migration's accounting."""
+        if self.peers is None:
+            raise RuntimeError("migrate_pull needs peer links (set_peers)")
+        chunk = self.peers[int(src)].call(
+            "export_adj_chunk", cls=int(cls), n_shards=int(modulus),
+            start_vid=int(start_vid), max_pages=int(max_pages))
+        h_pages = np.asarray(chunk["h_pages"], dtype=SLOT_DTYPE)
+        l_nbrs = np.asarray(chunk["l_nbrs"], dtype=SLOT_DTYPE)
+        self.import_adj_chunk(chunk["l_vids"], chunk["l_lens"], l_nbrs,
+                              chunk["h_vids"], chunk["h_lens"], h_pages)
+        return {"next_vid": int(chunk["next_vid"]),
+                "done": bool(chunk["done"]),
+                "l": int(len(chunk["l_vids"])),
+                "h": int(len(chunk["h_vids"])),
+                "pages": int(len(h_pages)),
+                "bytes": int(l_nbrs.nbytes + h_pages.nbytes)}
+
+    def migrate_pull_emb(self, src, cls, modulus, src_base, src_mod,
+                         row0, take, dst_row0) -> dict:
+        """Pull ``take`` embedding rows of class ``cls`` (class-local
+        rows ``[row0, row0+take)``) from peer ``src`` and write them at
+        local rows ``[dst_row0, ...)``.  Source rows are computed from
+        O(1) extent metadata (``src_base + vid // src_mod``), so the
+        coordinator ships no row lists."""
+        if self.peers is None:
+            raise RuntimeError("migrate_pull_emb needs peer links")
+        vids = int(cls) + int(modulus) * (
+            int(row0) + np.arange(int(take), dtype=np.int64))
+        src_rows = int(src_base) + vids // int(src_mod)
+        vals = np.asarray(self.peers[int(src)].call(
+            "export_emb_rows", rows=src_rows), dtype=np.float32)
+        self.store.write_embed_rows(int(dst_row0), vals)
+        return {"rows": int(len(vals)), "bytes": int(vals.nbytes)}
+
+    def drop_class(self, cls, modulus) -> dict:
+        """Free every vertex of ``cls`` (mod ``modulus``) — the source
+        side's release once the class's routing flip commits."""
+        return {"dropped": int(self.store.drop_class(int(cls),
+                                                     int(modulus)))}
+
     # ------------------------------------------------- rebuild stream: dst
     def rebuild(self, plan: dict) -> dict:
         """Re-materialise this shard from survivor peers, streaming.
@@ -665,19 +797,29 @@ class ShardService:
                         off += ln
                         n_cloned += 1
             if d and int(entry.get("rows", 0)):
-                rows_left, row0 = int(entry["rows"]), int(entry["src_row0"])
+                rows_n = int(entry["rows"])
+                # rows-mode entries carry (src_base, src_mod) extent
+                # metadata so moved classes with coarse (non-contiguous)
+                # stripes stream too; legacy src_row0 entries are the
+                # contiguous special case src_mod == n_shards
+                if "src_row0" in entry:
+                    src_base, src_mod = int(entry["src_row0"]), n_shards
+                else:
+                    src_base = int(entry["src_base"])
+                    src_mod = int(entry["src_mod"])
+                vids = int(entry["cls"]) + n_shards * np.arange(
+                    rows_n, dtype=np.int64)
+                src_rows = src_base + vids // src_mod
                 max_rows = max(1, chunk_pages * SLOTS_PER_PAGE // max(d, 1))
                 parts = []
-                while rows_left > 0:
+                for off in range(0, rows_n, max_rows):
                     if pace_s and n_chunks:
                         time.sleep(pace_s)
                     n_chunks += 1
-                    take = min(rows_left, max_rows)
                     parts.append(np.asarray(
-                        src.call("export_emb_chunk", row0=row0,
-                                 n_rows=take), dtype=np.float32))
-                    row0 += take
-                    rows_left -= take
+                        src.call("export_emb_rows",
+                                 rows=src_rows[off: off + max_rows]),
+                        dtype=np.float32))
                 stripes.append(np.concatenate(parts) if len(parts) > 1
                                else parts[0])
         if vids_all:
@@ -731,6 +873,8 @@ class ShardEndpoint:
 
     # -- transport (subclass responsibility) -----------------------------
     def call(self, method: str, **kw):
+        """Synchronous shard command: dispatch ``method`` on the shard's
+        ``ShardService`` and return its result (raises what it raises)."""
         raise NotImplementedError
 
     def call_submit(self, method: str, **kw):
@@ -740,22 +884,32 @@ class ShardEndpoint:
         raise NotImplementedError
 
     def call_result(self, handle):
+        """Await one ``call_submit`` handle and return its result."""
         raise NotImplementedError
 
     def fetch_submit(self, **kw):
+        """Submit one batched-read (``fetch``) command and return a
+        handle; the coordinator awaits all shards together and pays
+        max(shard costs), not the sum."""
         raise NotImplementedError
 
     def fetch_result(self, handle) -> dict:
+        """Await one ``fetch_submit`` handle -> the shard's fetch block."""
         raise NotImplementedError
 
     def set_peers(self, endpoints: list["ShardEndpoint"]) -> None:
+        """(Re)wire this shard's peer links for shard-to-shard streaming
+        (rebuild, migration, ingest exchange).  Idempotent — called again
+        after every elastic grow/shrink."""
         raise NotImplementedError
 
     def close(self) -> None:
+        """Release transport resources (base: no-op)."""
         pass
 
     # -- shared convenience ----------------------------------------------
     def stats(self) -> dict:
+        """The shard's full telemetry snapshot (``ShardService.stats``)."""
         return self.call("stats")
 
     def rpc_calls(self) -> int:
@@ -781,13 +935,18 @@ class LocalShardEndpoint(ShardEndpoint):
 
     @property
     def local_store(self) -> GraphStore:
+        """The wrapped in-process ``GraphStore`` (tests/admin)."""
         return self.service.store
 
     @property
     def method_stats(self) -> dict:
+        """Per-method call accounting (same shape as the RoP client's)."""
         return self._stats.method_stats
 
     def call(self, method: str, **kw):
+        """Direct ``ShardService`` dispatch with RoP-identical per-method
+        accounting; ``stats`` results gain the same ``rpc`` injection the
+        remote RPC server performs."""
         t0 = time.perf_counter()
         ok = True
         try:
@@ -802,21 +961,26 @@ class LocalShardEndpoint(ShardEndpoint):
         return out
 
     def call_submit(self, method: str, **kw):
-        # in-process "submission" computes immediately — device latency is
-        # deferred into io_us where it matters, so awaiting N local
-        # shards still costs max(shard costs)
+        """In-process "submission" computes immediately — device latency
+        is deferred into ``io_us`` where it matters, so awaiting N local
+        shards still costs max(shard costs)."""
         return self.call(method, **kw)
 
     def call_result(self, handle):
+        """Handles ARE results in-process."""
         return handle
 
     def fetch_submit(self, **kw):
+        """Batched read, computed inline (see ``call_submit``)."""
         return self.call("fetch", pack=False, **kw)
 
     def fetch_result(self, handle) -> dict:
+        """Handles ARE results in-process."""
         return handle
 
     def set_peers(self, endpoints) -> None:
+        """Wire direct in-process peer links (RoP peers get a real
+        peer-queue client).  Idempotent."""
         self.service.peers = [
             _DirectPeer(ep.service) if isinstance(ep, LocalShardEndpoint)
             else ep.peer_link() for ep in endpoints]
@@ -841,6 +1005,7 @@ class ShardHost:
         self._thread: threading.Thread | None = None
 
     def start(self) -> None:
+        """Launch the firmware poll thread (idempotent)."""
         if self._thread is not None:
             return
         self._stop.clear()
@@ -867,6 +1032,7 @@ class ShardHost:
         self._thread.start()
 
     def stop(self) -> None:
+        """Signal and join the poll thread."""
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=5.0)
@@ -891,6 +1057,7 @@ class RopShardEndpoint(ShardEndpoint):
 
     @property
     def method_stats(self) -> dict:
+        """Per-method call accounting from the RoP client stub."""
         return self.client.method_stats
 
     def _map_error(self, e: RuntimeError):
@@ -900,24 +1067,31 @@ class RopShardEndpoint(ShardEndpoint):
         raise e
 
     def call(self, method: str, **kw):
+        """One synchronous command over the RoP link (remote
+        ``DeviceFailedError`` re-raised as the typed local exception)."""
         try:
             return self.client.call(method, **kw)
         except RuntimeError as e:
             self._map_error(e)
 
     def call_submit(self, method: str, **kw):
+        """Write one command into the SQ and return its handle."""
         return self.client.submit(method, **kw)
 
     def call_result(self, handle):
+        """Await one submitted command's CQ completion."""
         try:
             return self.client.result(handle)
         except RuntimeError as e:
             self._map_error(e)
 
     def fetch_submit(self, **kw):
+        """Submit one packed batched-read command (awaited via
+        ``fetch_result``; plans travel packed over the wire)."""
         return self.client.submit("fetch", pack=True, **kw)
 
     def fetch_result(self, handle) -> dict:
+        """Await a fetch completion and unpack its plan descriptor."""
         try:
             out = self.client.result(handle)
         except RuntimeError as e:
@@ -937,6 +1111,8 @@ class RopShardEndpoint(ShardEndpoint):
                               tx=PCIeChannel(), rx=PCIeChannel())
 
     def set_peers(self, endpoints) -> None:
+        """Wire this shard host's peer clients (one queue-pair client
+        per RoP peer, direct dispatch to local peers).  Idempotent."""
         self.host.service.peers = [
             _DirectPeer(ep.service) if isinstance(ep, LocalShardEndpoint)
             else ep.peer_link() for ep in endpoints]
@@ -948,6 +1124,7 @@ class RopShardEndpoint(ShardEndpoint):
                 + self.client.rx.stats.bytes_moved)
 
     def close(self) -> None:
+        """Stop the shard host's poll thread."""
         self.host.stop()
 
 
@@ -955,6 +1132,8 @@ class RopShardEndpoint(ShardEndpoint):
 def make_local_endpoints(n_shards: int, devs: list | None = None, *,
                          h_threshold: int = 128,
                          feature_dim: int = 0) -> list[LocalShardEndpoint]:
+    """An in-process CSSD array: one ``LocalShardEndpoint`` per shard
+    over fresh (or caller-provided) simulated devices."""
     devs = devs or [BlockDevice() for _ in range(n_shards)]
     return [LocalShardEndpoint(dev=d, h_threshold=h_threshold,
                                feature_dim=feature_dim) for d in devs]

@@ -537,8 +537,18 @@ class GraphStore:
         layout and per-page counts preserved, next pointers re-addressed)
         — the import half of replica rebuild streaming.  Replicas keep
         IDENTICAL chain page layouts, which is what lets the spread fetch
-        serve page i of a chain from any live owner."""
+        serve page i of a chain from any live owner.  Replace-safe: any
+        chain the vid already owns is freed first, so a migration redo
+        after a mid-copy failure cannot leak or double-map pages."""
         with self._lock:
+            if self.gmap.get(vid) == "H":
+                old, _ = self.h_table.pop(vid)
+                self.h_chain.pop(vid, None)
+                while old >= 0:
+                    pg = self.dev.read_page(old)
+                    nxt = int(pg[_H_NEXT])
+                    self.dev.free_page(old)
+                    old = nxt
             new_lpns = [self.dev.alloc_front() for _ in range(len(pages))]
             for i, lpn in enumerate(new_lpns):
                 page = np.asarray(pages[i], dtype=SLOT_DTYPE).copy()
@@ -549,6 +559,110 @@ class GraphStore:
             self.h_chain[vid] = new_lpns
             self.gmap[vid] = "H"
             self.stats.pages_h += len(new_lpns)
+
+    def import_l_vertex(self, vid: int, nbrs: np.ndarray) -> None:
+        """Install a complete L-type neighbor list for ``vid`` (the
+        adjacency import half of class migration).  Replace-safe: any
+        prior mapping — L node or H chain — is removed first, so a redo
+        after a mid-copy failure converges to the same state."""
+        with self._lock:
+            vid = int(vid)
+            kind = self.gmap.get(vid)
+            if kind == "H":
+                lpn, _ = self.h_table.pop(vid)
+                self.h_chain.pop(vid, None)
+                while lpn >= 0:
+                    pg = self.dev.read_page(lpn)
+                    nxt = int(pg[_H_NEXT])
+                    self.dev.free_page(lpn)
+                    lpn = nxt
+                self.gmap.pop(vid, None)
+            elif kind == "L":
+                hit = self._l_lookup_page(vid)
+                if hit is not None:
+                    lpn, page = hit
+                    self._l_remove_node(page, lpn, vid)
+                self.gmap.pop(vid, None)
+            chunk = np.asarray(nbrs, dtype=SLOT_DTYPE).reshape(-1)
+            if not self._l_keys:
+                self._l_insert_new_page([vid], [chunk])
+            elif vid > self._l_keys[-1]:
+                lpn = self._l_lpns[-1]
+                page = self.dev.read_page(lpn).copy()
+                if self._l_free_slots(page) >= len(chunk) + 2:
+                    self._l_append_node(page, vid, chunk)
+                    self.dev.write_page(lpn, page)
+                    self._l_keys[-1] = vid
+                else:
+                    self._l_insert_new_page([vid], [chunk])
+            else:
+                k = bisect.bisect_left(self._l_keys, vid)
+                self._l_split_insert(k, vid, chunk)
+            self.gmap[vid] = "L"
+            self.num_vertices = max(self.num_vertices, vid + 1)
+
+    def drop_class(self, cls: int, modulus: int) -> int:
+        """Free every vertex whose vid ≡ ``cls`` (mod ``modulus``) — the
+        source-side release after a migrated class's routing flip commits.
+        Embedding stripe pages are left in place (no longer addressed;
+        the next rebuild compacts them).  Returns the vertex count
+        dropped."""
+        with self._lock:
+            vids = [v for v in list(self.gmap) if v % modulus == cls]
+            for v in vids:
+                self._drop_vertex_pages(v)
+            return len(vids)
+
+    def extend_embedding_table(self, n_rows: int) -> int:
+        """Grow the embedding table by ``n_rows`` zero rows and return the
+        row index of the first new row (the migration import base).  The
+        table is rewritten to a fresh span; the old span is abandoned
+        (the simulated device reclaims it on the next rebuild)."""
+        with self._lock:
+            d = self.feature_dim
+            if d == 0:
+                raise ValueError("no feature dim set; load a table first")
+            if n_rows <= 0:
+                return self._emb_rows
+            old_rows = self._emb_rows
+            old = np.empty((old_rows, d), dtype=np.float32)
+            if old_rows:
+                self._get_embeds_locked(
+                    np.arange(old_rows, dtype=np.int64), old)
+            grown = np.concatenate(
+                [old, np.zeros((n_rows, d), dtype=np.float32)], axis=0)
+            self._write_embedding_table(grown)
+            return old_rows
+
+    def write_embed_rows(self, row0: int, rows: np.ndarray) -> None:
+        """Overwrite the contiguous embedding rows ``[row0, row0+len)``
+        in place (page-granular RMW) — the bulk import half of embedding
+        migration.  Raises ``KeyError`` if no table is loaded and
+        ``IndexError`` if the range exceeds the table."""
+        if self._emb_base is None:
+            raise KeyError("no embedding table loaded")
+        with self._lock:
+            d = self.feature_dim
+            rows = np.ascontiguousarray(rows, dtype=np.float32).reshape(-1, d)
+            m = len(rows)
+            if m == 0:
+                return
+            if row0 < 0 or row0 + m > self._emb_rows:
+                raise IndexError(
+                    f"rows [{row0}, {row0 + m}) outside table "
+                    f"of {self._emb_rows}")
+            lo = row0 * d
+            p0 = lo // SLOTS_PER_PAGE
+            within = lo - p0 * SLOTS_PER_PAGE
+            n_pages = -(-(within + m * d) // SLOTS_PER_PAGE)
+            flat = self.dev.read_span(self._emb_base + p0, n_pages,
+                                      tag="embed").copy()
+            flat[within: within + m * d] = rows.reshape(-1).view(np.int32)
+            for i in range(n_pages):
+                self.dev.write_page(
+                    self._emb_base + p0 + i,
+                    flat[i * SLOTS_PER_PAGE: (i + 1) * SLOTS_PER_PAGE],
+                    tag="embed")
 
     def sample_neighbors_batch(self, vids, fanout: int,
                                rng: np.random.Generator | None = None, *,
@@ -1098,15 +1212,27 @@ def mirror_edges(edge_array: np.ndarray, *,
 
 
 def bucket_pairs(pairs: np.ndarray, n_shards: int, *,
-                 replication: int = 1) -> list[np.ndarray]:
+                 replication: int = 1, placement=None) -> list[np.ndarray]:
     """[G-3] routing: directed pairs grouped by destination shard.
 
-    Replica ``r`` of row ``vid`` lives on shard ``(vid + r) % N`` (the
-    array's placement rule), so each pair is routed to the R shards that
-    own its row — shard ``s`` receives the residue classes
+    Under the default map, replica ``r`` of row ``vid`` lives on shard
+    ``(vid + r) % N``, so each pair is routed to the R shards that own
+    its row — shard ``s`` receives the residue classes
     ``{(s - r) % N, r < R}``, exactly the classes ``partition_csr`` keeps.
+    A ``placement`` (:class:`repro.store.placement.PlacementMap`) replaces
+    that rule: pairs route by ``vid % C`` through the map's owner table
+    (role order preserved, so stripe layouts follow ``pairs_of``).
     """
     pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+    if placement is not None:
+        cls = pairs[:, 0] % placement.n_classes
+        out = []
+        for s in range(n_shards):
+            parts = [pairs[cls == c] for c, _r in placement.pairs_of(s)]
+            parts = [p for p in parts if len(p)]
+            out.append(np.concatenate(parts) if parts
+                       else np.empty((0, 2), dtype=np.int64))
+        return out
     cls = pairs[:, 0] % n_shards
     out: list[np.ndarray] = []
     for s in range(n_shards):

@@ -82,12 +82,21 @@ def distributed_update_graph(store, edge_array, embeddings=None, *,
         store._prepare_emb_layout(len(emb))
     d = 0 if emb is None else int(emb.shape[1])
 
+    # placement plumbing: the session always buckets by the store's
+    # current placement map, but the map only goes over the wire when it
+    # is NOT the legacy modular layout — default arrays keep the exact
+    # legacy ingest_begin payload (and bit-identical page layouts).
+    pmap = store._routing.pmap
+    begin_kw = dict(n_shards=N, replication=R,
+                    already_undirected=bool(already_undirected),
+                    emb_rows=0 if emb is None else len(emb),
+                    feature_dim=d)
+    if not pmap.is_modular(N):
+        begin_kw["placement"] = pmap.to_payload()
+    C = pmap.n_classes
+
     store._submit_round([
-        (s, "ingest_begin",
-         dict(shard=s, n_shards=N, replication=R,
-              already_undirected=bool(already_undirected),
-              emb_rows=0 if emb is None else len(emb), feature_dim=d))
-        for s in range(N)])
+        (s, "ingest_begin", dict(begin_kw, shard=s)) for s in range(N)])
     try:
         # ---- transfer: stream raw chunks + stripe slices, all shards in
         # parallel (each shard's sequence on its own thread; the max-vid
@@ -104,10 +113,12 @@ def distributed_update_graph(store, edge_array, embeddings=None, *,
                               chunk=edges[i * ce: (i + 1) * ce])
                 mv = max(mv, int(out["max_vid"]))
             if emb is not None:
-                for r in range(R):
-                    stripe = emb[(s - r) % N:: N]
+                # one stripe per owned (class, role) pair, canonical
+                # order — the session's stripe index is the wire "role"
+                for j, (c, _r) in enumerate(pmap.pairs_of(s)):
+                    stripe = emb[c::C]
                     for r0 in range(0, len(stripe), er):
-                        ep.call("ingest_emb_rows", role=r, row0=r0,
+                        ep.call("ingest_emb_rows", role=j, row0=r0,
                                 rows=stripe[r0: r0 + er])
             max_vid[s] = mv
 
@@ -155,6 +166,8 @@ def distributed_update_graph(store, edge_array, embeddings=None, *,
 # ======================================================= mutation firehose
 @dataclass
 class FirehoseCounters:
+    """Cumulative firehose accounting (surfaced by ``snapshot``)."""
+
     submitted: int = 0        # logical ops logged
     applied: int = 0          # logical ops applied device-side
     subops: int = 0           # per-replica sub-ops applied
@@ -248,6 +261,8 @@ class MutationFirehose:
         return self
 
     def stop(self) -> None:
+        """Stop the window timer WITHOUT draining the log (see
+        ``close`` for the draining variant)."""
         if self._thread is not None:
             self._stop.set()
             self._thread.join(timeout=5.0)
@@ -261,6 +276,9 @@ class MutationFirehose:
         return self.snapshot()
 
     def snapshot(self) -> dict:
+        """Counter + config snapshot: submitted/applied/subops/windows/
+        barriers/shed, current log depth, and the window limits (the
+        ``firehose`` block of the service ``stats`` RPC)."""
         c = self.counters
         with self._lock:
             depth = len(self._log)
@@ -294,6 +312,9 @@ class MutationFirehose:
             check(vid)
 
     def add_vertex(self, vid, embed=None) -> None:
+        """Log one AddVertex (+ optional embedding row).  Raises
+        ``BackpressureError`` when the log is full, ``IndexError`` for an
+        out-of-range embed row."""
         if embed is not None:
             self._check_embed(int(vid))
         self._submit(("add_vertex", int(vid),
@@ -301,17 +322,25 @@ class MutationFirehose:
                       else np.asarray(embed, dtype=np.float32)))
 
     def add_edge(self, dst, src) -> None:
+        """Log one undirected AddEdge (raises ``BackpressureError``
+        when the log is full)."""
         self._submit(("add_edge", int(dst), int(src)))
 
     def delete_edge(self, dst, src) -> None:
+        """Log one undirected DeleteEdge (``BackpressureError`` when
+        the log is full)."""
         self._submit(("delete_edge", int(dst), int(src)))
 
     def update_embed(self, vid, embed) -> None:
+        """Log one UpdateEmbed (bounds-checked at submission; raises
+        ``BackpressureError`` when the log is full)."""
         self._check_embed(int(vid))
         self._submit(("update_embed", int(vid),
                       np.asarray(embed, dtype=np.float32)))
 
     def delete_vertex(self, vid) -> None:
+        """Log one DeleteVertex — applied as a BARRIER at flush time
+        (pending window drains first; see class docstring)."""
         self._submit(("delete_vertex", int(vid)))
 
     # ---------------------------------------------------------------- apply
@@ -330,13 +359,14 @@ class MutationFirehose:
                 applied += self._apply_window(window)
 
     def _replicas(self, vid: int) -> list[tuple[int, int]]:
-        """(shard, stripe row offset) of every live replica of ``vid`` —
-        primary first; plain sharded arrays have exactly the owner."""
+        """(shard, local embedding row) of every live replica of ``vid``
+        — primary first, resolved through the store's current routing
+        (placement-map and reshard aware); plain sharded arrays have
+        exactly the owner."""
         st = self.store
-        if hasattr(st, "_live_eps"):
-            return [(s, int(st._stripe_off[s, r]))
-                    for s, r, _ep in st._live_eps(vid)]
-        return [(int(vid) % st.n_shards, 0)]
+        if hasattr(st, "_emb_locate"):
+            return st._emb_locate(vid)
+        return [(int(vid) % st.n_shards, int(vid) // st.n_shards)]
 
     def _apply_window(self, window: list[tuple]) -> int:
         st = self.store
@@ -353,7 +383,6 @@ class MutationFirehose:
             self.counters.windows += 1
             return len(window)
 
-        N = st.n_shards
         per_shard: dict[int, _ShardOps] = {}
 
         def ops_of(s: int) -> _ShardOps:
@@ -366,8 +395,7 @@ class MutationFirehose:
                 return
             items = [(s, "apply_mutations", ops.kwargs())
                      for s, ops in sorted(per_shard.items())]
-            with st._write_gate():
-                outs = st._submit_round(items)
+            outs = st._submit_round(items)
             self.counters.windows += 1
             self.counters.subops += sum(o["applied"] for o in outs)
             per_shard.clear()
@@ -381,42 +409,49 @@ class MutationFirehose:
                 embed_row(v, embed, reps)
 
         def embed_row(v, embed, reps=None):
-            for s, off in (reps or self._replicas(v)):
-                ops_of(s).add(4, off + v // N, emb=embed)
+            for s, row in (reps or self._replicas(v)):
+                ops_of(s).add(4, row, emb=embed)
 
         applied = 0
-        for op in window:
-            kind = op[0]
-            if kind == "add_vertex":
-                vertex(op[1], op[2])
-            elif kind == "add_edge":
-                dst, src = op[1], op[2]
-                vertex(dst)
-                if src != dst:
-                    vertex(src)
-                for s, _off in self._replicas(dst):
-                    ops_of(s).add(1, dst, src, flag=1)
-                if dst != src:
-                    for s, _off in self._replicas(src):
-                        ops_of(s).add(1, src, dst)
-            elif kind == "delete_edge":
-                dst, src = op[1], op[2]
-                for s, _off in self._replicas(dst):
-                    ops_of(s).add(2, dst, src, flag=1)
-                if dst != src:
-                    for s, _off in self._replicas(src):
-                        ops_of(s).add(2, src, dst)
-            elif kind == "update_embed":
-                embed_row(op[1], op[2])
-            elif kind == "delete_vertex":
-                # BARRIER: decomposition reads the current neighbor set,
-                # so everything logged before it must be applied first
-                dispatch()
-                self.counters.barriers += 1
-                st.delete_vertex(op[1])
-            else:
-                raise ValueError(f"unknown firehose op {kind!r}")
-            applied += 1
-        dispatch()
+        # the whole window — replica decomposition AND dispatch — runs
+        # under one write gate: the gate waits out any in-flight class
+        # migration and holds the mutation lock, so a reshard's routing
+        # flip can never land between decomposing an op against the old
+        # owners and applying it (nested gates, e.g. the delete_vertex
+        # barrier, re-enter without waiting)
+        with st._write_gate():
+            for op in window:
+                kind = op[0]
+                if kind == "add_vertex":
+                    vertex(op[1], op[2])
+                elif kind == "add_edge":
+                    dst, src = op[1], op[2]
+                    vertex(dst)
+                    if src != dst:
+                        vertex(src)
+                    for s, _row in self._replicas(dst):
+                        ops_of(s).add(1, dst, src, flag=1)
+                    if dst != src:
+                        for s, _row in self._replicas(src):
+                            ops_of(s).add(1, src, dst)
+                elif kind == "delete_edge":
+                    dst, src = op[1], op[2]
+                    for s, _row in self._replicas(dst):
+                        ops_of(s).add(2, dst, src, flag=1)
+                    if dst != src:
+                        for s, _row in self._replicas(src):
+                            ops_of(s).add(2, src, dst)
+                elif kind == "update_embed":
+                    embed_row(op[1], op[2])
+                elif kind == "delete_vertex":
+                    # BARRIER: decomposition reads the current neighbor
+                    # set, so everything logged before it applies first
+                    dispatch()
+                    self.counters.barriers += 1
+                    st.delete_vertex(op[1])
+                else:
+                    raise ValueError(f"unknown firehose op {kind!r}")
+                applied += 1
+            dispatch()
         self.counters.applied += applied
         return applied

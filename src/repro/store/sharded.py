@@ -75,6 +75,8 @@ from .endpoint import LocalShardEndpoint, make_local_endpoints
 from .graphstore import (BulkTimeline, GraphStoreStats, _H_COUNT,
                          neighbors_from_plan, preprocess_edges,
                          select_from_plan)
+from .placement import (PlacementMap, common_refine, grow_plan, heat_plan,
+                        modular, plan_moves, rows_of_class, shrink_plan)
 from .sampler import _ramp
 
 
@@ -109,7 +111,8 @@ class FlowControl:
 
 
 def partition_csr(indptr: np.ndarray, indices: np.ndarray,
-                  n_shards: int, shard: int, *, replication: int = 1):
+                  n_shards: int, shard: int, *, replication: int = 1,
+                  placement: PlacementMap | None = None):
     """Mask a global CSR down to the rows shard ``shard`` owns.
 
     Non-owned rows keep indptr slots with zero degree, so the row index
@@ -120,15 +123,57 @@ def partition_csr(indptr: np.ndarray, indices: np.ndarray,
     of vertex ``vid`` lives on shard ``(vid + r) % N``, so shard ``s``
     holds the classes ``{(s - r) % N, r < R}``.  The owned vid subset is
     still ascending, so the shard-local L-page range search is unchanged.
+
+    A ``placement`` map replaces that modular rule: the shard owns the
+    classes ``placement.classes_of(shard)`` under modulus
+    ``placement.n_classes`` (``replication`` is then ignored — the map
+    already encodes every replica role).
     """
     n = len(indptr) - 1
     degrees = np.diff(indptr)
-    classes = [(shard - r) % n_shards for r in range(replication)]
-    own = np.isin(np.arange(n) % n_shards, classes)
+    if placement is not None:
+        modulus = placement.n_classes
+        classes = placement.classes_of(shard)
+    else:
+        modulus = n_shards
+        classes = [(shard - r) % n_shards for r in range(replication)]
+    own = np.isin(np.arange(n) % modulus, classes)
     deg_s = np.where(own, degrees, 0)
     indptr_s = np.concatenate([[0], np.cumsum(deg_s)])
     row_of = np.repeat(np.arange(n), degrees)
     return indptr_s, indices[own[row_of]]
+
+
+class _Routing:
+    """One immutable routing generation of the array.
+
+    Readers snapshot the coordinator's ``_routing`` reference once per
+    operation and use only the snapshot, so an in-flight batched read
+    keeps addressing the OLD owner of a migrating class while the
+    resharder copies it; the atomic reference swap (under ``_mutate``,
+    bumping ``epoch``) is the per-class flip.  Fields:
+
+    * ``pmap`` — the :class:`PlacementMap` (class/role → shard),
+    * ``ew_mod`` / ``ew_base`` — per (class, role) embedding extents:
+      the local row of vid on its role-``r`` shard is
+      ``ew_base[c, r] + vid // ew_mod[c, r]`` (coarse pre-refinement
+      stripes keep their old modulus; migrated-in classes get dense
+      ``mod = n_classes`` regions),
+    * ``epoch`` — monotonically increasing flip counter,
+    * ``heat`` — per-class accumulated read weight (the gossip-derived
+      signal ``heat_plan`` partitions on); rides the routing object so
+      its length always matches ``pmap.n_classes``.
+    """
+
+    __slots__ = ("pmap", "ew_mod", "ew_base", "epoch", "heat")
+
+    def __init__(self, pmap: PlacementMap, ew_mod: np.ndarray,
+                 ew_base: np.ndarray, epoch: int, heat: np.ndarray):
+        self.pmap = pmap
+        self.ew_mod = ew_mod
+        self.ew_base = ew_base
+        self.epoch = int(epoch)
+        self.heat = heat
 
 
 def _class_flow(supplies: dict, cand_of: dict, caps: np.ndarray):
@@ -267,11 +312,35 @@ class _ShardedCacheView:
 
 class ShardedGraphStore:
     """Drop-in for ``GraphStore`` across the query/mutation surface the
-    service layer uses, backed by ``n_shards`` shard endpoints."""
+    service layer uses, backed by ``n_shards`` shard endpoints.
+
+    Construction (exactly one backing form):
+
+    Args:
+        n_shards: shard count when the store builds its own local
+            endpoints (defaults to 2; inferred from ``devs`` or
+            ``endpoints`` when those are given).
+        devs: explicit ``BlockDevice`` list, one per shard (local
+            endpoints are built around them).
+        endpoints: pre-built ``ShardEndpoint`` list (local, remote, or
+            mixed); adopted as-is, including their ``h_threshold``.
+        h_threshold: L/H degree threshold pushed to owned endpoints.
+        feature_dim: embedding width for owned endpoints (0 until a
+            table is loaded).
+        placement: optional :class:`repro.store.placement.PlacementMap`
+            replacing the default ``vid % N`` ownership (must have one
+            role column for the unreplicated store).
+        flow: :class:`FlowControl` policy (defaults applied when None).
+
+    Raises:
+        ValueError: conflicting backing arguments, zero shards, or a
+            placement map that is not total over the array.
+    """
 
     def __init__(self, n_shards: int | None = None,
                  devs: list | None = None, *, endpoints: list | None = None,
                  h_threshold: int = 128, feature_dim: int = 0,
+                 placement: PlacementMap | None = None,
                  flow: FlowControl | None = None):
         if endpoints is not None:
             if devs is not None:
@@ -356,8 +425,142 @@ class ShardedGraphStore:
             self._failed[s] = bool(snap["failed"])
             if not own_endpoints:
                 self.h_threshold = int(snap["store"]["h_threshold"])
+        # routing generation + reshard machinery.  ``replication`` and
+        # ``_emb_rows`` live on the base class so the routing/locate math
+        # is shared; the replicated subclass overwrites them before its
+        # own ``_init_routing`` call.
+        self.replication = 1
+        self._emb_rows = 0
+        # reader barrier: batched reads register with ``_read_routing``
+        # so a class flip can quiesce every in-flight read that may hold
+        # a pre-flip routing snapshot before the old owner's pages are
+        # dropped.  Independent lock — NEVER held together with _mutate.
+        self._rd_cv = threading.Condition(threading.Lock())
+        self._rd_active = 0
+        self._rd_barrier = False
+        # per-class write gates during a copy window + reshard state.
+        self._mig_classes: set[int] = set()
+        self._mig_cv = threading.Condition(self._mutate)
+        self._resharding = False
+        self._reshard_stats: dict = {}
+        if not hasattr(self, "_init_routing_deferred"):
+            self._init_routing(1, placement)
+
+    # ------------------------------------------------------------- routing
+    def _init_routing(self, replication: int, placement) -> None:
+        """Install the initial routing generation: the given placement
+        map (validated against the array) or the legacy modular map
+        ``owner[c, r] = (c + r) % N``, with canonical embedding extents.
+
+        Raises:
+            ValueError: placement map that is not total, out of range,
+                or has the wrong number of role columns.
+        """
+        pmap = placement if placement is not None else modular(
+            self.n_shards, replication)
+        if pmap.owner.shape[1] != replication:
+            raise ValueError(
+                f"placement map has {pmap.owner.shape[1]} role columns, "
+                f"store replication is {replication}")
+        pmap.validate(self.n_shards)
+        self._routing = self._canonical_routing(pmap, self._emb_rows, 0)
+
+    def _canonical_routing(self, pmap: PlacementMap, n_rows: int,
+                           epoch: int, heat: np.ndarray | None = None
+                           ) -> _Routing:
+        """Build a ``_Routing`` whose embedding extents are the canonical
+        dense layout: every class striped at modulus ``n_classes``, each
+        shard's stripes concatenated in ``pairs_of`` order (role-major,
+        class-ascending — exactly the legacy ``_stripe_off`` cumsum at
+        the default modular map)."""
+        C, R = pmap.n_classes, pmap.owner.shape[1]
+        ew_mod = np.full((C, R), C, dtype=np.int64)
+        ew_base = np.zeros((C, R), dtype=np.int64)
+        for s in range(self.n_shards):
+            acc = 0
+            for c, r in pmap.pairs_of(s):
+                ew_base[c, r] = acc
+                acc += rows_of_class(n_rows, c, C)
+        if heat is None:
+            heat = np.zeros(C, dtype=np.float64)
+        return _Routing(pmap, ew_mod, ew_base, epoch, heat)
+
+    def _swap_routing(self, rt: _Routing) -> None:
+        """Atomically publish a new routing generation (callers hold
+        ``_mutate``; readers pick it up on their next snapshot)."""
+        self._routing = rt
+
+    @contextmanager
+    def _read_routing(self):
+        """Register a routing-snapshot read: yields the current routing
+        and holds the read barrier open until the reader finishes, so a
+        class flip can wait out every read planned against the pre-flip
+        owners before dropping their pages."""
+        cv = self._rd_cv
+        with cv:
+            while self._rd_barrier:
+                cv.wait()
+            self._rd_active += 1
+            rt = self._routing
+        try:
+            yield rt
+        finally:
+            with cv:
+                self._rd_active -= 1
+                cv.notify_all()
+
+    @contextmanager
+    def _quiesce_reads(self):
+        """Block new snapshot reads and wait for in-flight ones to drain
+        (used between a routing flip and dropping the vacated pages).
+        Never entered while holding ``_mutate`` — a draining reader may
+        need it."""
+        cv = self._rd_cv
+        with cv:
+            while self._rd_barrier:
+                cv.wait()
+            self._rd_barrier = True
+            while self._rd_active > 0:
+                cv.wait()
+        try:
+            yield
+        finally:
+            with cv:
+                self._rd_barrier = False
+                cv.notify_all()
+
+    def _check_not_resharding(self, what: str) -> None:
+        if self._resharding:
+            raise RuntimeError(
+                f"{what} rejected: online reshard in progress")
+
+    def _emb_locate(self, vid: int, rt: _Routing | None = None):
+        """Live (shard, local embedding row) candidates for ``vid``,
+        primary role first.
+
+        Raises:
+            DeviceFailedError: every replica of the vid's class is on a
+                failed shard.
+        """
+        rt = rt or self._routing
+        c = int(vid) % rt.pmap.n_classes
+        out = []
+        for r in range(rt.pmap.owner.shape[1]):
+            s = int(rt.pmap.owner[c, r])
+            if not self._failed[s]:
+                out.append((s, int(rt.ew_base[c, r])
+                            + int(vid) // int(rt.ew_mod[c, r])))
+        if not out:
+            raise DeviceFailedError(
+                f"all replicas of vid {vid} (class {c}) are failed")
+        return out
 
     # ------------------------------------------------------------- topology
+    @property
+    def failed_shards(self) -> list[bool]:
+        """Per-shard failed flags (True = dropped by ``fail_shard``)."""
+        return list(self._failed)
+
     @property
     def shards(self) -> list:
         """The in-process ``GraphStore`` objects (tests/benchmarks only —
@@ -371,13 +574,17 @@ class ShardedGraphStore:
 
     @property
     def devs(self) -> list:
+        """The shards' ``BlockDevice``s (in-process arrays only)."""
         return [sh.dev for sh in self.shards]
 
     def owner_of(self, vid: int) -> int:
-        return int(vid) % self.n_shards
+        """Primary owner shard of ``vid`` under the current routing
+        (equals ``vid % n_shards`` at the default modular placement)."""
+        rt = self._routing
+        return int(rt.pmap.owner[int(vid) % rt.pmap.n_classes, 0])
 
     def _owner_ep(self, vid: int):
-        return self.endpoints[int(vid) % self.n_shards]
+        return self.endpoints[self.owner_of(vid)]
 
     def _map(self, fn, items):
         """Bulk-ingest fan-out: per-shard write bursts (ms-scale simulated
@@ -395,10 +602,12 @@ class ShardedGraphStore:
 
     @property
     def feature_dim(self) -> int:
+        """Embedding feature dimension (0 until a table is loaded)."""
         return self._feature_dim
 
     @property
     def num_vertices(self) -> int:
+        """Vertex-id space size as of the last bulk load + unit adds."""
         return self._num_vertices
 
     def shard_stats(self) -> list[dict]:
@@ -408,6 +617,8 @@ class ShardedGraphStore:
 
     @property
     def stats(self) -> GraphStoreStats:
+        """Array-aggregated ``GraphStoreStats`` (summed over one
+        endpoint ``stats`` snapshot per shard)."""
         snaps = self.shard_stats()
         out = GraphStoreStats(
             l_evictions=sum(s["store"]["l_evictions"] for s in snaps),
@@ -428,6 +639,8 @@ class ShardedGraphStore:
     # ---------------------------------------------------------------- cache
     @property
     def cache(self):
+        """Aggregated device-DRAM cache view, or ``None`` when no
+        cache is attached (see ``attach_cache_pages``)."""
         if self.endpoints[0].call("cache_stats") is None:
             return None
         return _ShardedCacheView(self.endpoints)
@@ -442,20 +655,33 @@ class ShardedGraphStore:
 
     # ----------------------------------------------------------- bulk ingest
     def _prepare_emb_layout(self, n_rows: int) -> None:
-        """Hook: called once per bulk ingest with the embedding row count,
-        before any shard's table write (the replicated store derives its
-        per-shard stripe offsets here)."""
+        """Called once per bulk ingest with the embedding row count,
+        before any shard's table write: records the row count and
+        installs fresh canonical embedding extents for the current
+        placement map (``vid // N`` per stripe at the default map)."""
+        with self._mutate:
+            self._emb_rows = int(n_rows)
+            rt = self._routing
+            self._swap_routing(self._canonical_routing(
+                rt.pmap, self._emb_rows, rt.epoch + 1, rt.heat))
 
     def _emb_shard_rows(self, embeddings: np.ndarray, s: int) -> np.ndarray:
-        """Hook: the embedding rows shard ``s`` stores, in local-row order
-        (round-robin stripe ``embeddings[s::N]``; R stripes when
-        replicated)."""
-        return embeddings[s:: self.n_shards]
+        """The embedding rows shard ``s`` stores, in local-row order:
+        one round-robin stripe per owned (class, role) pair, in
+        canonical ``pairs_of`` order (``embeddings[s::N]`` at the
+        default unreplicated map)."""
+        pmap = self._routing.pmap
+        C = pmap.n_classes
+        return np.concatenate(
+            [embeddings[c::C] for c, _r in pmap.pairs_of(s)]) \
+            if pmap.pairs_of(s) else embeddings[:0]
 
     def _adj_shard_csr(self, indptr: np.ndarray, indices: np.ndarray,
                        s: int):
-        """Hook: the global-CSR mask shard ``s`` writes as adjacency."""
-        return partition_csr(indptr, indices, self.n_shards, s)
+        """The global-CSR mask shard ``s`` writes as adjacency (all owned
+        classes under the current placement map)."""
+        return partition_csr(indptr, indices, self.n_shards, s,
+                             placement=self._routing.pmap)
 
     def update_graph(self, edge_array: np.ndarray,
                      embeddings: np.ndarray | None = None,
@@ -466,7 +692,11 @@ class ShardedGraphStore:
         (much larger) embedding write exactly as on one device — except the
         embedding table is striped ``embeddings[s::N]`` and every shard's
         sequential write burst proceeds in parallel on its own device.
+
+        Raises:
+            RuntimeError: an online reshard is migrating classes.
         """
+        self._check_not_resharding("bulk ingest")
         tl = BulkTimeline()
         t0 = time.perf_counter()
 
@@ -543,6 +773,7 @@ class ShardedGraphStore:
         if emb_chunk_rows is not None:
             kw["emb_chunk_rows"] = int(emb_chunk_rows)
         with self._maintenance:
+            self._check_not_resharding("bulk ingest")
             if any(self._failed):
                 raise DeviceFailedError(
                     "bulk ingest needs every shard live; rebuild_shard "
@@ -558,20 +789,42 @@ class ShardedGraphStore:
         return MutationFirehose(self, **kw)
 
     # ------------------------------------------------------ batched queries
-    def _partition(self, vids: np.ndarray) -> list[tuple[int, np.ndarray]]:
-        """plan phase: query positions grouped by owning shard (no I/O)."""
-        owner = vids % self.n_shards
+    def _partition(self, vids: np.ndarray,
+                   rt: _Routing | None = None
+                   ) -> list[tuple[int, np.ndarray]]:
+        """plan phase: query positions grouped by primary-owner shard
+        under routing snapshot ``rt`` (no I/O).  Also accumulates the
+        per-class read heat the heat-aware resharder partitions on."""
+        rt = rt or self._routing
+        cls = vids % rt.pmap.n_classes
+        np.add.at(rt.heat, cls, 1.0)
+        owner = rt.pmap.owner[cls, 0]
         parts = [(s, np.nonzero(owner == s)[0])
                  for s in range(self.n_shards)]
         return [(s, pos) for s, pos in parts if len(pos)]
 
     # ------------------------------------------------------- flow control
     @contextmanager
-    def _write_gate(self):
+    def _write_gate(self, vids=None):
         """Mutation critical section: maintenance gate first, then the
-        mutation lock (the one legal order — see ``_maintenance``)."""
+        mutation lock (the one legal order — see ``_maintenance``).
+
+        While a reshard copies a class, writes touching that class wait
+        on ``_mig_cv`` until its flip (``vids=None`` — e.g. a
+        delete_vertex whose neighbor set is unknown up front — waits out
+        ANY migrating class).  Nested gates never wait: a migration
+        window cannot begin while ``_mutate`` is held, so reentrant
+        callers already inside the gate see ``_mig_classes`` unchanged.
+        """
         with self._maintenance:
             with self._mutate:
+                if vids is None:
+                    while self._mig_classes:
+                        self._mig_cv.wait()
+                else:
+                    while any(int(v) % self._routing.pmap.n_classes
+                              in self._mig_classes for v in vids):
+                        self._mig_cv.wait()
                 yield
 
     def _notify_shard_error(self, shard: int, exc: Exception) -> None:
@@ -598,29 +851,32 @@ class ShardedGraphStore:
         delay = min(fl.backoff_max_s, fl.backoff_base_s * (2 ** attempt))
         time.sleep(delay * (1.0 + fl.jitter * random.random()))
 
-    def _acquire_windows(self, shards) -> list[int]:
-        """Take one in-flight window slot per distinct target shard;
-        on timeout release what was taken and shed typed backpressure."""
-        taken: list[int] = []
+    def _acquire_windows(self, shards) -> list:
+        """Take one in-flight window slot per distinct target shard; on
+        timeout release what was taken and shed typed backpressure.
+        Returns the semaphore OBJECTS, not shard indices — a reshard may
+        remap ``_windows`` while this round is in flight, and the release
+        must hit the semaphores actually acquired."""
+        taken: list = []
         for s in shards:
             win = self._windows[s]
             if win is None:
                 continue
             if not win.acquire(timeout=self.flow.window_timeout_s):
                 for t in taken:
-                    self._windows[t].release()
+                    t.release()
                 raise self._shed(
                     f"shard {s} in-flight window full "
                     f"(limit {self.flow.max_inflight_per_shard}, waited "
                     f"{self.flow.window_timeout_s}s)",
                     {"source": "inflight_window", "shard": int(s),
                      "limit": self.flow.max_inflight_per_shard})
-            taken.append(s)
+            taken.append(win)
         return taken
 
     def _release_windows(self, taken) -> None:
-        for s in taken:
-            self._windows[s].release()
+        for win in taken:
+            win.release()
 
     def _submit_round(self, items: list) -> list:
         """One concurrent metadata round: submit ``(shard, method,
@@ -787,11 +1043,12 @@ class ShardedGraphStore:
         (block, desc) position-identical to a single device's
         ``_fetch_plan`` over the same vids.
         """
-        parts = self._partition(vids_arr)
+        with self._read_routing() as rt:
+            parts = self._partition(vids_arr, rt)
 
-        # fetch: ONE batched command per shard, all shards concurrent
-        payloads, _ = self._endpoint_fetch(
-            [(s, {"l_vids": vids_arr[pos]}) for s, pos in parts])
+            # fetch: ONE batched command per shard, all shards concurrent
+            payloads, _ = self._endpoint_fetch(
+                [(s, {"l_vids": vids_arr[pos]}) for s, pos in parts])
 
         # build: re-base each shard's descriptor rows into the concatenated
         # block and scatter them back to their global positions
@@ -817,9 +1074,16 @@ class ShardedGraphStore:
         return block, desc
 
     def get_neighbors(self, vid: int) -> np.ndarray:
-        return self._owner_ep(vid).call("get_neighbors", vid=int(vid))
+        """Neighbor list of one vid from its owning shard."""
+        with self._read_routing() as rt:
+            c = int(vid) % rt.pmap.n_classes
+            ep = self.endpoints[int(rt.pmap.owner[c, 0])]
+            return ep.call("get_neighbors", vid=int(vid))
 
     def get_neighbors_batch(self, vids) -> list[np.ndarray]:
+        """Batched neighbor read: one fetch command per shard, results
+        recomposed in input order (bit-identical to the single-device
+        store)."""
         vids_arr = np.asarray(vids, dtype=np.int64).reshape(-1)
         block, desc = self._fan_fetch(vids_arr)
         return neighbors_from_plan(vids_arr, block, desc)
@@ -837,13 +1101,16 @@ class ShardedGraphStore:
 
     # ----------------------------------------------------------- embeddings
     def get_embed(self, vid: int) -> np.ndarray:
-        return self._owner_ep(vid).call("get_embed_row",
-                                        row=int(vid) // self.n_shards)
+        """One embedding row from the vid's owning shard."""
+        with self._read_routing() as rt:
+            s, row = self._emb_locate(vid, rt)[0]
+            return self.endpoints[s].call("get_embed_row", row=row)
 
     def get_embeds(self, vids: np.ndarray) -> np.ndarray:
         """Coalesced gather across the array: each shard serves its owned
-        rows (local row = vid // N) with ONE batched command,
-        concurrently; rows scatter back to their query positions."""
+        rows (local row from the routing extents; ``vid // N`` at the
+        default map) with ONE batched command, concurrently; rows
+        scatter back to their query positions."""
         d = self.feature_dim
         if not d:
             raise KeyError("no embedding table loaded")
@@ -851,34 +1118,46 @@ class ShardedGraphStore:
         out = np.empty((len(vids), d), dtype=np.float32)
         if not len(vids):
             return out
-        parts = self._partition(vids)
-        payloads, _ = self._endpoint_fetch(
-            [(s, {"emb_rows": vids[pos] // self.n_shards})
-             for s, pos in parts])
+        with self._read_routing() as rt:
+            cls = vids % rt.pmap.n_classes
+            parts = self._partition(vids, rt)
+            reqs = []
+            for s, pos in parts:
+                c = cls[pos]
+                reqs.append((s, {"emb_rows": rt.ew_base[c, 0]
+                                 + vids[pos] // rt.ew_mod[c, 0]}))
+            payloads, _ = self._endpoint_fetch(reqs)
         for (s, pos), pl in zip(parts, payloads):
             out[pos] = pl["emb"]
         return out
 
     def update_embed(self, vid: int, embed: np.ndarray) -> None:
-        self._owner_ep(vid).call("update_embed_row",
-                                 row=int(vid) // self.n_shards, embed=embed)
+        """Overwrite one embedding row on the vid's owner (all live
+        replicas when replicated)."""
+        with self._write_gate((vid,)):
+            for s, row in self._emb_locate(vid):
+                self.endpoints[s].call("update_embed_row", row=row,
+                                       embed=embed)
 
     # ------------------------------------------------------------- unit ops
     def add_vertex(self, vid: int, embed: np.ndarray | None = None) -> None:
-        with self._write_gate():
+        """Insert an isolated vertex (idempotent), optionally with its
+        embedding row."""
+        with self._write_gate((vid,)):
             vid = int(vid)
             ep = self._owner_ep(vid)
             ep.call("add_vertex", vid=vid)       # adjacency under global vid
             self._num_vertices = max(self._num_vertices, vid + 1)
             if embed is not None:
-                ep.call("update_embed_row", row=vid // self.n_shards,
-                        embed=embed)
+                for s, row in self._emb_locate(vid):
+                    self.endpoints[s].call("update_embed_row", row=row,
+                                           embed=embed)
 
     def add_edge(self, dst: int, src: int) -> None:
         """Undirected insert: each endpoint's chunk updates on ITS owning
         shard (two independent single-page RMWs, possibly on different
         devices)."""
-        with self._write_gate():
+        with self._write_gate((dst, src)):
             dst, src = int(dst), int(src)
             for v in (dst, src):
                 # device-side add_vertex no-ops when the vid exists
@@ -891,7 +1170,8 @@ class ShardedGraphStore:
                                          nbr=dst, count=False)
 
     def delete_edge(self, dst: int, src: int) -> None:
-        with self._write_gate():
+        """Undirected removal of edge (dst, src) from both owners."""
+        with self._write_gate((dst, src)):
             dst, src = int(dst), int(src)
             self._owner_ep(dst).call("remove_neighbor", vid=dst, nbr=src,
                                      count=True)
@@ -901,7 +1181,9 @@ class ShardedGraphStore:
 
     def delete_vertex(self, vid: int) -> None:
         """Remove ``vid`` everywhere: backlinks on each neighbor's owning
-        shard first, then the owner drops the vertex's own pages."""
+        shard first, then the owner drops the vertex's own pages.  The
+        neighbor set (and so the touched class set) is unknown up front,
+        so the gate waits out ANY in-flight class migration."""
         with self._write_gate():
             vid = int(vid)
             nbrs = self._owner_ep(vid).call("get_neighbors", vid=vid)
@@ -916,11 +1198,399 @@ class ShardedGraphStore:
 
     # --------------------------------------------------------------- export
     def to_adjacency(self) -> dict[int, set[int]]:
+        """Full adjacency as ``{vid: neighbor set}`` (test/verification
+        helper — walks every shard)."""
         out: dict[int, set[int]] = {}
         for ep in self.endpoints:
             for v, nb in ep.call("export_adjacency"):
                 out[int(v)] = set(np.asarray(nb).tolist())
         return out
+
+    # ------------------------------------------------------ online reshard
+    def placement_stats(self) -> dict:
+        """Routing/placement telemetry: class count, routing epoch,
+        whether the map is still the legacy modular layout, per-shard
+        owned-class counts, live-migration state, accumulated read heat
+        and the last reshard's report."""
+        rt = self._routing
+        with self._mutate:
+            migrating = sorted(self._mig_classes)
+        with self._bp_lock:
+            resharding = self._resharding
+            last = dict(self._reshard_stats)
+        return {
+            "n_classes": int(rt.pmap.n_classes),
+            "replication": int(self.replication),
+            "epoch": int(rt.epoch),
+            "modular": bool(rt.pmap.is_modular(self.n_shards)),
+            "classes_per_shard": [len(rt.pmap.classes_of(s))
+                                  for s in range(self.n_shards)],
+            "resharding": resharding,
+            "migrating_classes": migrating,
+            "heat_total": float(rt.heat.sum()),
+            "last_reshard": last,
+        }
+
+    def _live_sources(self, c: int, dst: int) -> list[int]:
+        """Live shards holding class ``c`` under the CURRENT routing,
+        excluding ``dst`` — the candidate copy sources, primary first."""
+        row = self._routing.pmap.owner[c]
+        out = []
+        for s in (int(x) for x in row):
+            if s != dst and not self._failed[s] and s not in out:
+                out.append(s)
+        if not out:
+            raise DeviceFailedError(
+                f"no live source holds vertex class {c}")
+        return out
+
+    def _migrate_copy(self, m, C: int, chunk_pages: int, pace_s: float,
+                      on_progress, acc: dict) -> tuple[int, int]:
+        """Stream one copy move: the destination pulls class ``m.cls``'s
+        adjacency chunks and embedding rows from a live source over the
+        peer links (page data never transits the coordinator).  Returns
+        the (ew_base, ew_mod) extent the class gets on ``m.dst`` at flip
+        time.  Fails over to another live replica of the class if the
+        source dies mid-stream (chunk pulls are replace-safe, so a
+        partially-pulled range is simply re-pulled)."""
+        c, dst = int(m.cls), int(m.dst)
+        dep = self.endpoints[dst]
+        srcs = self._live_sources(c, dst)
+        if int(m.src) in srcs:       # plan's source first
+            srcs.remove(int(m.src))
+            srcs.insert(0, int(m.src))
+
+        # ---- adjacency: cursor loop over bounded page chunks
+        cursor, done, last_err = 0, False, None
+        for src in srcs:
+            try:
+                while not done:
+                    out = dep.call("migrate_pull", cls=c, modulus=C,
+                                   src=src, start_vid=cursor,
+                                   max_pages=chunk_pages)
+                    cursor, done = int(out["next_vid"]), bool(out["done"])
+                    acc["chunks"] += 1
+                    acc["pages_shipped"] += int(out["pages"])
+                    acc["adj_bytes"] += int(out["bytes"])
+                    acc["bytes_shipped"] += int(out["bytes"])
+                    if on_progress is not None:
+                        on_progress({"event": "chunk", "cls": c,
+                                     "src": src, "dst": dst,
+                                     "next_vid": cursor, "done": done,
+                                     "bytes": int(out["bytes"])})
+                    if pace_s:
+                        time.sleep(pace_s)
+                break
+            except DeviceFailedError as e:
+                self._notify_shard_error(src, e)
+                last_err = e
+        else:
+            raise last_err
+
+        # ---- embeddings: reserve a dense region on dst, pull row chunks
+        base = 0
+        rows = rows_of_class(self._emb_rows, c, C)
+        if rows and self._feature_dim:
+            base = int(dep.call("emb_reserve_rows", n_rows=rows)["base"])
+            d = max(1, self._feature_dim)
+            take = max(1, (chunk_pages * SLOTS_PER_PAGE) // d)
+            rt = self._routing
+            row0, last_err = 0, None
+            while row0 < rows:
+                n = min(take, rows - row0)
+                for src in self._live_sources(c, dst):
+                    r2 = [r for r in range(rt.pmap.owner.shape[1])
+                          if int(rt.pmap.owner[c, r]) == src][0]
+                    try:
+                        out = dep.call(
+                            "migrate_pull_emb", src=src, cls=c, modulus=C,
+                            src_base=int(rt.ew_base[c, r2]),
+                            src_mod=int(rt.ew_mod[c, r2]),
+                            row0=row0, take=n, dst_row0=base + row0)
+                        acc["emb_bytes"] += int(out["bytes"])
+                        acc["bytes_shipped"] += int(out["bytes"])
+                        acc["chunks"] += 1
+                        break
+                    except DeviceFailedError as e:
+                        self._notify_shard_error(src, e)
+                        last_err = e
+                else:
+                    raise last_err
+                row0 += n
+                if on_progress is not None:
+                    on_progress({"event": "emb_chunk", "cls": c,
+                                 "dst": dst, "rows_done": row0,
+                                 "rows": rows})
+                if pace_s:
+                    time.sleep(pace_s)
+        return base, C
+
+    def reshard(self, *, add: list | None = None,
+                remove: list | None = None,
+                placement: PlacementMap | None = None,
+                rebalance: bool = False, refine: int = 4,
+                chunk_pages: int | None = None, pace_s: float = 0.0,
+                on_progress=None) -> dict:
+        """Elastic online reshard: change the array's shard set or its
+        placement map under live traffic, with zero downtime.
+
+        Exactly one mode:
+
+        Args:
+            add: new ``ShardEndpoint`` list to grow onto (attached
+                immediately; the planner steals the hottest classes from
+                the most-loaded existing shards).
+            remove: shard indices to drain and detach (their classes
+                move to the least-loaded survivors; indices compact when
+                the last class flips).
+            placement: explicit target :class:`PlacementMap` (same
+                replication; refined to a common class count with the
+                current map).
+            rebalance: True = heat-weighted rebalance over the current
+                shards using the accumulated read-heat histogram.
+            refine: class-split factor for ``rebalance`` (finer classes
+                let one hot class spread over several shards).
+            chunk_pages: page budget per shard-to-shard chunk pull
+                (defaults to ``rebuild_chunk_pages``, or 512).
+            pace_s: sleep between chunk pulls so migration traffic
+                trickles under serving reads (supervisor-style pacing).
+            on_progress: optional callback receiving ``{"event":
+                "chunk" | "emb_chunk" | "flip", ...}`` dicts — called
+                OUTSIDE all coordinator locks, so probes may issue reads
+                (the bit-identity-at-every-chunk-boundary hook).
+
+        The protocol per migrating class: mark the class write-gated →
+        destination pulls its pages/rows from a live owner over the peer
+        links → the routing epoch flips the class to its new owners
+        atomically under the mutation lock → in-flight reads planned
+        against the old routing drain behind the read barrier → vacated
+        shards free the class's pages.  Batched reads route to the OLD
+        owner until the flip, so every read before, during, and after a
+        chunk boundary stays bit-identical.
+
+        Returns a report dict: ``classes_moved``, ``copies``,
+        ``relabels``, ``pages_shipped``, ``bytes_shipped`` (split into
+        ``adj_bytes``/``emb_bytes``), ``chunks``, ``epochs``,
+        ``n_shards``, ``seconds``; or ``{"reshard_in_progress": True}``
+        / ``{"reshard_rejected": ...}`` when it cannot start.
+
+        Raises:
+            ValueError: not exactly one mode, or an invalid target map.
+            DeviceFailedError: a shard is failed at start, or a class
+                loses its last live source mid-copy.
+        """
+        modes = sum([add is not None, remove is not None,
+                     placement is not None, bool(rebalance)])
+        if modes != 1:
+            raise ValueError("reshard takes exactly one of add=, "
+                             "remove=, placement=, rebalance=True")
+        # ---- claim: brief maintenance hold serialises against bulk
+        # ingest and any in-flight rebuild stream; from here on both
+        # reject with reshard_in_progress until we clear the flag
+        with self._maintenance:
+            with self._bp_lock:
+                if self._resharding:
+                    return {"reshard_in_progress": True}
+                if self._rebuilding:
+                    return {"reshard_rejected": "rebuild_in_progress"}
+                self._resharding = True
+        t0 = time.perf_counter()
+        try:
+            return self._run_reshard(add, remove, placement, rebalance,
+                                     refine, chunk_pages, pace_s,
+                                     on_progress, t0)
+        finally:
+            with self._mutate:
+                self._mig_classes.clear()
+                self._mig_cv.notify_all()
+            with self._bp_lock:
+                self._resharding = False
+
+    def _run_reshard(self, add, remove, placement, rebalance, refine,
+                     chunk_pages, pace_s, on_progress, t0) -> dict:
+        if any(self._failed):
+            raise DeviceFailedError(
+                "reshard needs every shard live at start; rebuild first")
+        chunk_pages = int(chunk_pages
+                          or getattr(self, "rebuild_chunk_pages", 512))
+        n_old = self.n_shards
+        epoch0 = self._routing.epoch
+
+        # ---- grow: attach the new endpoints before planning, so copy
+        # targets are addressable.  endpoints grows BEFORE n_shards so a
+        # concurrent probe/gossip thread never indexes past the list.
+        if add is not None:
+            new_eps = list(add)
+            if not new_eps:
+                raise ValueError("add= needs at least one endpoint")
+            with self._mutate:
+                self.endpoints = self.endpoints + new_eps
+                self.n_shards = len(self.endpoints)
+                self._failed = self._failed + [False] * len(new_eps)
+                self._windows = self._windows + [
+                    threading.BoundedSemaphore(
+                        self.flow.max_inflight_per_shard)
+                    if self.flow.max_inflight_per_shard > 0 else None
+                    for _ in new_eps]
+            for ep in self.endpoints:
+                ep.set_peers(self.endpoints)
+                ep._peers_wired = True
+            self._topology_changed()
+
+        # ---- target map (planners refine internally as needed), then
+        # refine the live routing to the common class count — a
+        # metadata-only change: tiled extents keep every vid's row
+        rt0 = self._routing
+        cur = rt0.pmap
+        heat = rt0.heat.copy()
+        removed: list[int] = []
+        if add is not None:
+            target = grow_plan(cur, n_old, self.n_shards, heat)
+        elif remove is not None:
+            removed = sorted(set(int(s) for s in remove))
+            if not removed:
+                raise ValueError("remove= needs at least one shard")
+            if any(not 0 <= s < self.n_shards for s in removed):
+                raise ValueError(f"remove={removed} out of range")
+            if len(removed) >= self.n_shards:
+                raise ValueError("cannot remove every shard")
+            target = shrink_plan(cur, removed, self.n_shards, heat)
+        elif rebalance:
+            live = [s for s in range(self.n_shards)
+                    if not self._failed[s]]
+            target = heat_plan(cur, heat, live, refine=max(1, int(refine)))
+        else:
+            if placement.replication != self.replication:
+                raise ValueError(
+                    f"target map has {placement.replication} roles, "
+                    f"store replication is {self.replication}")
+            placement.validate(self.n_shards)
+            target = placement
+        cur_f, target = common_refine(cur, target)
+        C = cur_f.n_classes
+        k = C // cur.n_classes
+        if k > 1:
+            with self._mutate:
+                rt = self._routing
+                self._swap_routing(_Routing(
+                    cur_f, np.tile(rt.ew_mod, (k, 1)),
+                    np.tile(rt.ew_base, (k, 1)), rt.epoch + 1,
+                    np.tile(rt.heat / k, k)))
+
+        moves, drops = plan_moves(cur_f, target)
+        by_class: dict[int, list] = {}
+        for m in moves:
+            by_class.setdefault(int(m.cls), []).append(m)
+        drops_of_class: dict[int, list[int]] = {}
+        for s, cls_list in drops.items():
+            for c in cls_list:
+                drops_of_class.setdefault(int(c), []).append(int(s))
+
+        acc = {"classes_moved": len(by_class), "copies": 0, "relabels": 0,
+               "pages_shipped": 0, "bytes_shipped": 0, "adj_bytes": 0,
+               "emb_bytes": 0, "chunks": 0}
+
+        # ---- per class: gate writes -> copy -> flip -> drain -> drop
+        for c in sorted(by_class):
+            cls_moves = by_class[c]
+            # taking _mutate here also waits out any write already past
+            # its gate — writes hold _mutate for their whole fan-out
+            with self._mutate:
+                self._mig_classes.add(c)
+            try:
+                flip_ext: dict[int, tuple[int, int]] = {}
+                for m in cls_moves:
+                    if m.kind == "copy":
+                        acc["copies"] += 1
+                        flip_ext[m.role] = self._migrate_copy(
+                            m, C, chunk_pages, pace_s, on_progress, acc)
+                    else:
+                        acc["relabels"] += 1
+                # ---- the flip: one atomic routing swap moves every
+                # changed role of this class to its new owner
+                with self._mutate:
+                    rt = self._routing
+                    owner = rt.pmap.owner.copy()
+                    nb, nm = rt.ew_base.copy(), rt.ew_mod.copy()
+                    for m in cls_moves:
+                        owner[c, m.role] = m.dst
+                        if m.kind == "copy":
+                            nb[c, m.role], nm[c, m.role] = flip_ext[m.role]
+                        else:
+                            nb[c, m.role] = rt.ew_base[c, m.src_role]
+                            nm[c, m.role] = rt.ew_mod[c, m.src_role]
+                    self._swap_routing(_Routing(
+                        PlacementMap(C, owner), nm, nb,
+                        rt.epoch + 1, rt.heat))
+                    self._mig_classes.discard(c)
+                    self._mig_cv.notify_all()
+            except BaseException:
+                with self._mutate:
+                    self._mig_classes.discard(c)
+                    self._mig_cv.notify_all()
+                raise
+            # drain reads planned against the pre-flip routing before
+            # the vacated owners free the class's pages
+            with self._quiesce_reads():
+                pass
+            for s in drops_of_class.get(c, ()):
+                if not self._failed[s]:
+                    try:
+                        self.endpoints[s].call("drop_class", cls=c,
+                                               modulus=C)
+                    except Exception:  # noqa: BLE001 — frees are advisory
+                        pass
+            if on_progress is not None:
+                on_progress({"event": "flip", "cls": c,
+                             "epoch": self._routing.epoch})
+
+        # ---- shrink finalise: drained shards detach, indices compact
+        if removed:
+            keep = [s for s in range(self.n_shards) if s not in removed]
+            lut = np.full(self.n_shards, -1, dtype=np.int64)
+            lut[keep] = np.arange(len(keep))
+            with self._quiesce_reads():
+                with self._mutate:
+                    rt = self._routing
+                    pm = PlacementMap(C, lut[rt.pmap.owner])
+                    old_eps = self.endpoints
+                    # n_shards shrinks BEFORE endpoints so concurrent
+                    # iterators never index past the shorter list
+                    self.n_shards = len(keep)
+                    self.endpoints = [old_eps[s] for s in keep]
+                    self._failed = [self._failed[s] for s in keep]
+                    self._windows = [self._windows[s] for s in keep]
+                    self._swap_routing(_Routing(
+                        pm, rt.ew_mod, rt.ew_base, rt.epoch + 1, rt.heat))
+            for ep in self.endpoints:
+                ep.set_peers(self.endpoints)
+                ep._peers_wired = True
+            for s in removed:
+                try:
+                    old_eps[s].close()
+                except Exception:  # noqa: BLE001 — detach is best-effort
+                    pass
+            self._topology_changed()
+
+        acc["epochs"] = self._routing.epoch - epoch0
+        acc["n_shards"] = self.n_shards
+        acc["seconds"] = time.perf_counter() - t0
+        with self._bp_lock:
+            self._reshard_stats = dict(acc)
+        return acc
+
+    def _topology_changed(self) -> None:
+        """Post-attach/detach hook: resize the supervisor's per-shard
+        state and reset the replicated gossip feedback (both no-ops on
+        the base store without them)."""
+        sup = self.health
+        if sup is not None and hasattr(sup, "resize"):
+            try:
+                sup.resize(self.n_shards)
+            except Exception:  # noqa: BLE001 — telemetry best-effort
+                pass
+        if hasattr(self, "_reset_feedback"):
+            self._reset_feedback()
 
 
 class ReplicatedGraphStore(ShardedGraphStore):
@@ -978,12 +1648,34 @@ class ReplicatedGraphStore(ShardedGraphStore):
     RPC.
     """
 
+    # base __init__ must not install a 1-role routing the replicated
+    # store immediately replaces — it defers to our own _init_routing
+    _init_routing_deferred = True
+
     def __init__(self, n_shards: int | None = None, devs: list | None = None,
                  *, endpoints: list | None = None, replication: int = 2,
                  h_threshold: int = 128, feature_dim: int = 0,
+                 placement: PlacementMap | None = None,
                  stats_staleness_s: float = 0.0,
                  rebuild_chunk_pages: int = 512,
                  flow: FlowControl | None = None):
+        """Same backing forms as :class:`ShardedGraphStore`, plus:
+
+        Args:
+            replication: replica count R (1 <= R <= N); every vertex
+                class keeps R copies, one per role column.
+            placement: optional R-role :class:`PlacementMap` replacing
+                the default ``(c + r) % N`` replica ring.
+            stats_staleness_s: max age of the gossiped read-counter
+                snapshot replica selection plans against (0 = refresh
+                every selection).
+            rebuild_chunk_pages: page budget per shard-to-shard chunk
+                pull during rebuild and reshard streams.
+
+        Raises:
+            ValueError: replication out of range, or a placement map
+                whose role count differs from ``replication``.
+        """
         super().__init__(n_shards, devs, endpoints=endpoints,
                          h_threshold=h_threshold, feature_dim=feature_dim,
                          flow=flow)
@@ -993,7 +1685,7 @@ class ReplicatedGraphStore(ShardedGraphStore):
                              f"n_shards={self.n_shards}")
         self.replication = r
         self._emb_rows = 0
-        self._stripe_off = np.zeros((self.n_shards, r), dtype=np.int64)
+        self._init_routing(r, placement)
         # gossiped selection feedback: every selection starts from a
         # staleness-bounded snapshot of the shards' ACTUAL page-read
         # counters since the last topology change (periodic ``counters``
@@ -1010,21 +1702,21 @@ class ReplicatedGraphStore(ShardedGraphStore):
         self._read_base = self._refresh_gossip(force=True).copy()
 
     # ------------------------------------------------------------- topology
-    @property
-    def failed_shards(self) -> list[bool]:
-        return list(self._failed)
-
     def replica_shards(self, vid: int) -> list[int]:
-        return [(int(vid) + r) % self.n_shards
-                for r in range(self.replication)]
+        """The shards holding ``vid``'s replicas, role order (primary
+        first) — ``[(vid + r) % N]`` at the default modular map."""
+        rt = self._routing
+        c = int(vid) % rt.pmap.n_classes
+        return [int(rt.pmap.owner[c, r]) for r in range(self.replication)]
 
-    def _live_eps(self, vid: int):
+    def _live_eps(self, vid: int, rt: _Routing | None = None):
         """(shard, role, endpoint) of ``vid``'s live replicas, primary
         first."""
+        rt = rt or self._routing
         out = []
-        c = int(vid) % self.n_shards
+        c = int(vid) % rt.pmap.n_classes
         for r in range(self.replication):
-            s = (c + r) % self.n_shards
+            s = int(rt.pmap.owner[c, r])
             if not self._failed[s]:
                 out.append((s, r, self.endpoints[s]))
         if not out:
@@ -1032,25 +1724,27 @@ class ReplicatedGraphStore(ShardedGraphStore):
         return out
 
     def _survivor_of_class(self, c: int, exclude: int) -> int:
+        rt = self._routing
         for r in range(self.replication):
-            s = (c + r) % self.n_shards
+            s = int(rt.pmap.owner[c, r])
             if s != exclude and not self._failed[s]:
                 return s
         raise DeviceFailedError(f"no live replica holds vertex class {c}")
 
-    def _meta_shard(self, c: int) -> int:
+    def _meta_shard(self, c: int, rt: _Routing | None = None) -> int:
         """A live replica holding class ``c``'s mapping tables — the
         planning metadata every replica agrees on (same op history)."""
+        rt = rt or self._routing
         for r in range(self.replication):
-            s = (c + r) % self.n_shards
+            s = int(rt.pmap.owner[c, r])
             if not self._failed[s]:
                 return s
         raise DeviceFailedError(f"no live replica for vertex class {c}")
 
     # ----------------------------------------------------- embedding layout
     def _rows_of_class(self, c: int) -> int:
-        n = self._emb_rows
-        return (n - c + self.n_shards - 1) // self.n_shards if n > c else 0
+        return rows_of_class(self._emb_rows, int(c),
+                             self._routing.pmap.n_classes)
 
     def _check_emb_vid(self, vid: int) -> None:
         """Reject rows beyond the ingested table: in the striped replica
@@ -1061,31 +1755,20 @@ class ReplicatedGraphStore(ShardedGraphStore):
             raise KeyError(f"vid {vid} outside the embedding table "
                            f"({self._emb_rows} rows)")
 
-    def _prepare_emb_layout(self, n_rows: int) -> None:
-        self._emb_rows = int(n_rows)
-        off = np.zeros((self.n_shards, self.replication), dtype=np.int64)
-        for s in range(self.n_shards):
-            acc = 0
-            for r in range(self.replication):
-                off[s, r] = acc
-                acc += self._rows_of_class((s - r) % self.n_shards)
-        self._stripe_off = off
-
-    def _emb_shard_rows(self, embeddings: np.ndarray, s: int) -> np.ndarray:
-        return np.concatenate(
-            [embeddings[(s - r) % self.n_shards:: self.n_shards]
-             for r in range(self.replication)])
-
-    def _adj_shard_csr(self, indptr, indices, s: int):
-        return partition_csr(indptr, indices, self.n_shards, s,
-                             replication=self.replication)
-
     def update_graph(self, edge_array, embeddings=None, *,
                      already_undirected: bool = False):
+        """Bulk UpdateGraph across the replicated array (see the base
+        class); every shard writes all R of its owned stripes.
+
+        Raises:
+            DeviceFailedError: a shard is failed (rebuild first).
+            RuntimeError: an online reshard is migrating classes.
+        """
         # behind the maintenance gate: a bulk ingest must not interleave
         # with a streaming rebuild (and a rebuild in progress means a
         # failed flag is still set, which the check below rejects)
         with self._maintenance:
+            self._check_not_resharding("bulk ingest")
             if any(self._failed):
                 raise DeviceFailedError(
                     "bulk ingest needs every shard live; rebuild_shard first")
@@ -1123,10 +1806,17 @@ class ReplicatedGraphStore(ShardedGraphStore):
         shard hosts look pre-loaded) and supervisor-suspect status (a
         suspect shard is avoided unless its class has no other live
         candidate; the min-max solver does exactly that)."""
-        reads = self._refresh_gossip()
+        def _pad(a: np.ndarray, n: int) -> np.ndarray:
+            # a reshard may grow n_shards between gossip pulls; a fresh
+            # shard starts with zero history until the feedback reset
+            return (a if len(a) >= n
+                    else np.concatenate([a, np.zeros(n - len(a))]))
+
+        n = self.n_shards
+        reads = _pad(self._refresh_gossip(), n)[:n]
         with self._gossip_lock:
-            h = reads - self._read_base
-            depth = self._gossip_depth.copy()
+            h = reads - _pad(self._read_base, n)[:n]
+            depth = _pad(self._gossip_depth, n)[:n].copy()
         h = h - h.min()
         fl = self.flow
         if fl.queue_depth_penalty_pages:
@@ -1159,26 +1849,29 @@ class ReplicatedGraphStore(ShardedGraphStore):
         Pure planning — the returned owner per position only decides which
         device pays the page fetch; replicas hold identical data.
         """
-        n_shards, rep = self.n_shards, self.replication
+        rt = self._routing
+        C, rep = rt.pmap.n_classes, self.replication
         vids = np.asarray(vids, dtype=np.int64).reshape(-1)
-        cls = vids % n_shards
+        cls = vids % C
         w = (np.ones(len(vids)) if weights is None
              else np.asarray(weights, dtype=np.float64))
+        np.add.at(rt.heat, cls, w)
         live = [not f for f in self._failed]
-        class_w = np.bincount(cls, weights=w, minlength=n_shards)
+        class_w = np.bincount(cls, weights=w, minlength=C)
 
         order = (np.argsort(cls, kind="stable") if key is None
                  else np.lexsort((np.asarray(key), cls)))
         sorted_cls = cls[order]
-        lo = np.searchsorted(sorted_cls, np.arange(n_shards), side="left")
-        hi = np.searchsorted(sorted_cls, np.arange(n_shards), side="right")
+        lo = np.searchsorted(sorted_cls, np.arange(C), side="left")
+        hi = np.searchsorted(sorted_cls, np.arange(C), side="right")
 
         # ---- per-class quotas: exact min-max via level search + max-flow
-        occupied = [int(c) for c in range(n_shards) if hi[c] > lo[c]]
+        occupied = [int(c) for c in range(C) if hi[c] > lo[c]]
         cand_of: dict[int, np.ndarray] = {}
         for c in occupied:
-            cands = np.asarray([(c + r) % n_shards for r in range(rep)
-                                if live[(c + r) % n_shards]])
+            row = rt.pmap.owner[c]
+            cands = np.asarray([int(row[r]) for r in range(rep)
+                                if live[int(row[r])]])
             if not len(cands):
                 raise DeviceFailedError(
                     f"no live replica for vertex class {c}")
@@ -1208,9 +1901,8 @@ class ReplicatedGraphStore(ShardedGraphStore):
         across replicas only in companion classes) split that page's
         single fetch between them, so L quotas stay commensurate with
         per-page H quotas."""
-        n_shards = self.n_shards
         w = np.ones(len(vids))
-        cls = vids % n_shards
+        cls = vids % self._routing.pmap.n_classes
         for c in np.unique(cls):
             idx = np.nonzero(cls == c)[0]
             pg = l_page[idx]
@@ -1273,12 +1965,12 @@ class ReplicatedGraphStore(ShardedGraphStore):
         return block, desc
 
     def _plan_and_fetch_spread(self, vids_arr: np.ndarray):
-        n_shards = self.n_shards
+        rt = self._routing       # stable: flips also hold _mutate
         desc: list = [None] * len(vids_arr)
         # ---- planning metadata: ONE plan_info call per occupied vertex
         # class against a live replica (replica-invariant tables) — the
         # coordinator never reads shard mapping state directly
-        cls_arr = vids_arr % n_shards
+        cls_arr = vids_arr % rt.pmap.n_classes
         chain_len = np.zeros(len(vids_arr), dtype=np.int64)
         l_page = np.full(len(vids_arr), -1, dtype=np.int64)
         idxs, items = [], []
@@ -1408,22 +2100,35 @@ class ReplicatedGraphStore(ShardedGraphStore):
             raise
 
     def get_neighbors(self, vid: int) -> np.ndarray:
+        """Neighbor list of one vid from a live replica, with failover."""
         def read():
-            s, _r, ep = self._live_eps(vid)[0]
-            return self._unit_call(s, ep, "get_neighbors", vid=int(vid))
+            with self._read_routing() as rt:
+                s, _r, ep = self._live_eps(vid, rt)[0]
+                return self._unit_call(s, ep, "get_neighbors", vid=int(vid))
         return self._with_failover(read)
 
     def get_embed(self, vid: int) -> np.ndarray:
+        """One embedding row from a live replica, with failover.
+
+        Raises:
+            KeyError: vid outside the ingested table.
+        """
         self._check_emb_vid(vid)
 
         def read():
-            s, r, ep = self._live_eps(vid)[0]
-            return self._unit_call(s, ep, "get_embed_row",
-                                   row=int(self._stripe_off[s, r])
-                                   + int(vid) // self.n_shards)
+            with self._read_routing() as rt:
+                s, row = self._emb_locate(vid, rt)[0]
+                return self._unit_call(s, self.endpoints[s],
+                                       "get_embed_row", row=row)
         return self._with_failover(read)
 
     def get_embeds(self, vids: np.ndarray) -> np.ndarray:
+        """Replica-spread coalesced embedding gather (see class
+        docstring); bit-identical rows, load-balanced page fetches.
+
+        Raises:
+            KeyError: no table loaded, or a vid outside it.
+        """
         d = self.feature_dim
         if not d:
             raise KeyError("no embedding table loaded")
@@ -1435,35 +2140,43 @@ class ReplicatedGraphStore(ShardedGraphStore):
             self._check_emb_vid(int(vids.max()
                                     if vids.max() >= self._emb_rows
                                     else vids.min()))
-        local = vids // self.n_shards
 
         def gather():
-            # group by stripe page so rows sharing a 4 KB page are fetched
-            # together from ONE replica (no duplicate page fetches); weigh
-            # rows in PAGES — page-mates split their page's single fetch —
-            # so embedding quotas stay commensurate with adjacency quotas
-            page_key = (local * d) // SLOTS_PER_PAGE
-            if d >= SLOTS_PER_PAGE:
-                w = np.full(len(vids), d / SLOTS_PER_PAGE)
-            else:
-                # page-mates are same-CLASS rows on one stripe page; rows of
-                # different classes sharing a raw page index live on
-                # different shards' stripes and must not pool their weight
-                ck = (vids % self.n_shards) * (int(page_key.max()) + 1) \
-                    + page_key
-                _, inv, cnt = np.unique(ck, return_inverse=True,
-                                        return_counts=True)
-                w = 1.0 / cnt[inv]
-            owner = self._select_replicas(vids, weights=w, key=page_key)
-            parts = [(s, np.nonzero(owner == s)[0])
-                     for s in range(self.n_shards)]
-            parts = [(s, pos) for s, pos in parts if len(pos)]
-            reqs = []
-            for s, pos in parts:
-                role = (s - vids[pos] % self.n_shards) % self.n_shards
-                reqs.append((s, {"emb_rows":
-                                 self._stripe_off[s][role] + local[pos]}))
-            payloads, _ = self._endpoint_fetch(reqs)
+            with self._read_routing() as rt:
+                C = rt.pmap.n_classes
+                cls = vids % C
+                local = vids // C
+                # group by stripe page so rows sharing a 4 KB page are
+                # fetched together from ONE replica (no duplicate page
+                # fetches); weigh rows in PAGES — page-mates split their
+                # page's single fetch — so embedding quotas stay
+                # commensurate with adjacency quotas
+                page_key = (local * d) // SLOTS_PER_PAGE
+                if d >= SLOTS_PER_PAGE:
+                    w = np.full(len(vids), d / SLOTS_PER_PAGE)
+                else:
+                    # page-mates are same-CLASS rows on one stripe page;
+                    # rows of different classes sharing a raw page index
+                    # live on different shards' stripes and must not pool
+                    # their weight
+                    ck = cls * (int(page_key.max()) + 1) + page_key
+                    _, inv, cnt = np.unique(ck, return_inverse=True,
+                                            return_counts=True)
+                    w = 1.0 / cnt[inv]
+                owner = self._select_replicas(vids, weights=w, key=page_key)
+                parts = [(s, np.nonzero(owner == s)[0])
+                         for s in range(self.n_shards)]
+                parts = [(s, pos) for s, pos in parts if len(pos)]
+                reqs = []
+                for s, pos in parts:
+                    # which role serves each position on shard s
+                    role = np.zeros(len(pos), dtype=np.int64)
+                    for r in range(self.replication):
+                        role[rt.pmap.owner[cls[pos], r] == s] = r
+                    rows = rt.ew_base[cls[pos], role] \
+                        + vids[pos] // rt.ew_mod[cls[pos], role]
+                    reqs.append((s, {"emb_rows": rows}))
+                payloads, _ = self._endpoint_fetch(reqs)
             for (s, pos), pl in zip(parts, payloads):
                 out[pos] = pl["emb"]
             return out
@@ -1488,7 +2201,9 @@ class ReplicatedGraphStore(ShardedGraphStore):
         return ok
 
     def add_vertex(self, vid: int, embed=None) -> None:
-        with self._write_gate():
+        """Insert an isolated vertex on every live replica (idempotent),
+        optionally with its embedding row."""
+        with self._write_gate((vid,)):
             vid = int(vid)
             self._fanout(self._live_eps(vid),
                          lambda s, r, ep: ep.call("add_vertex", vid=vid))
@@ -1497,18 +2212,27 @@ class ReplicatedGraphStore(ShardedGraphStore):
                 self.update_embed(vid, embed)
 
     def update_embed(self, vid: int, embed: np.ndarray) -> None:
-        with self._write_gate():
+        """Overwrite one embedding row on every live replica.
+
+        Raises:
+            KeyError: vid outside the ingested table.
+        """
+        with self._write_gate((vid,)):
             vid = int(vid)
             self._check_emb_vid(vid)
+            rt = self._routing
+            c = vid % rt.pmap.n_classes
 
             def write(s, r, ep):
                 ep.call("update_embed_row",
-                        row=int(self._stripe_off[s, r])
-                        + vid // self.n_shards, embed=embed)
-            self._fanout(self._live_eps(vid), write)
+                        row=int(rt.ew_base[c, r])
+                        + vid // int(rt.ew_mod[c, r]), embed=embed)
+            self._fanout(self._live_eps(vid, rt), write)
 
     def add_edge(self, dst: int, src: int) -> None:
-        with self._write_gate():
+        """Undirected insert, fanned out to every live replica of both
+        endpoints' classes."""
+        with self._write_gate((dst, src)):
             dst, src = int(dst), int(src)
             for v in (dst, src):
                 # device-side add_vertex no-ops when the vid exists
@@ -1527,7 +2251,8 @@ class ReplicatedGraphStore(ShardedGraphStore):
                 ins(src, dst, False)
 
     def delete_edge(self, dst: int, src: int) -> None:
-        with self._write_gate():
+        """Undirected removal, fanned out to every live replica."""
+        with self._write_gate((dst, src)):
             dst, src = int(dst), int(src)
 
             def rm(vid, nbr, count):
@@ -1540,6 +2265,9 @@ class ReplicatedGraphStore(ShardedGraphStore):
                 rm(src, dst, False)
 
     def delete_vertex(self, vid: int) -> None:
+        """Remove ``vid`` and its backlinks on every live replica; the
+        touched class set is unknown up front, so the gate waits out any
+        in-flight class migration."""
         with self._write_gate():
             vid = int(vid)
             nbrs = self.get_neighbors(vid)
@@ -1557,6 +2285,8 @@ class ReplicatedGraphStore(ShardedGraphStore):
 
     # --------------------------------------------------------------- export
     def to_adjacency(self) -> dict[int, set[int]]:
+        """Full adjacency export from the LIVE shards (replicas
+        deduplicate via the set union) — test/verification helper."""
         out: dict[int, set[int]] = {}
         for s, ep in enumerate(self.endpoints):
             if self._failed[s]:
@@ -1577,12 +2307,13 @@ class ReplicatedGraphStore(ShardedGraphStore):
                 raise ValueError(f"shard {s} out of range")
             if self._failed[s]:
                 return {"shard": s, "already_failed": True}
-            n_shards, rep = self.n_shards, self.replication
+            rt = self._routing
+            rep = self.replication
+            owned = rt.pmap.classes_of(s)
             lost = []
-            for r in range(rep):
-                c = (s - r) % n_shards
-                if not any((c + r2) % n_shards != s
-                           and not self._failed[(c + r2) % n_shards]
+            for c in owned:
+                if not any(int(rt.pmap.owner[c, r2]) != s
+                           and not self._failed[int(rt.pmap.owner[c, r2])]
                            for r2 in range(rep)):
                     lost.append(c)
             if lost:
@@ -1593,9 +2324,7 @@ class ReplicatedGraphStore(ShardedGraphStore):
             self.endpoints[s].call("fail")
             self._failed[s] = True
             self._reset_feedback()        # load history predates the fault
-            return {"shard": s,
-                    "degraded_classes":
-                        sorted({(s - r) % n_shards for r in range(rep)})}
+            return {"shard": s, "degraded_classes": sorted(owned)}
 
     def rebuild_shard(self, shard: int, *,
                       pacing_s: float | None = None) -> dict:
@@ -1634,24 +2363,32 @@ class ReplicatedGraphStore(ShardedGraphStore):
         with self._bp_lock:
             if s in self._rebuilding:
                 return {"shard": s, "rebuild_in_progress": True}
+            if self._resharding:
+                # a reshard owns the peer links and the routing epoch;
+                # the supervisor retries after it completes
+                return {"shard": s, "rebuild_in_progress": True,
+                        "reshard_in_progress": True}
         t0 = time.perf_counter()
         with self._maintenance:
             with self._mutate:
                 if not self._failed[s]:
                     return {"shard": s, "already_live": True}
-                n_shards, rep = self.n_shards, self.replication
+                rt = self._routing
+                C = rt.pmap.n_classes
+                pairs = rt.pmap.pairs_of(s)
                 classes = []
-                for r in range(rep):
-                    c = (s - r) % n_shards
-                    entry = {"cls": c,
-                             "src": self._survivor_of_class(c, exclude=s)}
+                for c, _r in pairs:
+                    src = self._survivor_of_class(c, exclude=s)
+                    entry = {"cls": int(c), "src": int(src)}
                     if self._emb_rows and self._feature_dim:
-                        role2 = (entry["src"] - c) % n_shards
-                        entry["src_row0"] = int(
-                            self._stripe_off[entry["src"], role2])
-                        entry["rows"] = int(self._rows_of_class(c))
+                        r2 = [int(rr) for rr in range(self.replication)
+                              if int(rt.pmap.owner[c, rr]) == src][0]
+                        entry["src_base"] = int(rt.ew_base[c, r2])
+                        entry["src_mod"] = int(rt.ew_mod[c, r2])
+                        entry["rows"] = int(rows_of_class(
+                            self._emb_rows, c, C))
                     classes.append(entry)
-                plan = {"n_shards": n_shards,
+                plan = {"n_shards": C,
                         "num_vertices": int(self._num_vertices),
                         "chunk_pages": self.rebuild_chunk_pages,
                         "pace_s": float(pacing_s or 0.0),
@@ -1667,6 +2404,26 @@ class ReplicatedGraphStore(ShardedGraphStore):
             finally:
                 with self._bp_lock:
                     self._rebuilding.discard(s)
+            # the replacement laid its stripes canonically dense (one
+            # class after another in pairs_of order): update its extents
+            # if the pre-fault ones were coarse, BEFORE re-admission, so
+            # no reader ever addresses the fresh device with stale math
+            with self._mutate:
+                rt = self._routing
+                nb, nm = rt.ew_base.copy(), rt.ew_mod.copy()
+                acc = 0
+                for c, r in pairs:
+                    nb[c, r] = acc
+                    nm[c, r] = C
+                    acc += rows_of_class(self._emb_rows, c, C)
+                changed = not (np.array_equal(nb, rt.ew_base)
+                               and np.array_equal(nm, rt.ew_mod))
+                if changed:
+                    self._swap_routing(_Routing(rt.pmap, nm, nb,
+                                                rt.epoch + 1, rt.heat))
+            if changed:
+                with self._quiesce_reads():
+                    pass
             with self._mutate:
                 self._failed[s] = False
                 self._reset_feedback()    # fresh topology, fresh history

@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""CI lint: every PUBLIC def/class on the operator-facing surface must
+carry a docstring.
+
+The operator guide (docs/operations.md) and architecture walk
+(docs/architecture.md) point into these modules; an undocumented public
+method there is a broken link in the docs.  Scope: the store/serve
+surface named in docs/ — not the whole tree — so internal helpers stay
+free to be terse (anything prefixed ``_`` is exempt, as are trivial
+``__dunder__`` overrides other than ``__init__`` on public classes).
+
+Pure stdlib (ast) — no pip dependency, runs anywhere CI does:
+
+  python tools/check_docstrings.py [--verbose]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# the public store/serve surface the docs point into
+TARGETS = [
+    "src/repro/store/sharded.py",
+    "src/repro/store/endpoint.py",
+    "src/repro/store/ingest.py",
+    "src/repro/store/placement.py",
+    "src/repro/serve/supervisor.py",
+    "src/repro/core/service.py",
+]
+
+
+def _public_defs(tree: ast.Module):
+    """Yield (qualname, node) for every public module-level def/class
+    and every public method of a public class."""
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not node.name.startswith("_"):
+                yield node.name, node
+        elif isinstance(node, ast.ClassDef):
+            if node.name.startswith("_"):
+                continue
+            yield node.name, node
+            for sub in node.body:
+                if not isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                    continue
+                name = sub.name
+                if name.startswith("_") and name != "__init__":
+                    continue
+                yield f"{node.name}.{name}", sub
+
+
+def check_file(path: str) -> list[str]:
+    with open(path) as fh:
+        tree = ast.parse(fh.read(), filename=path)
+    rel = os.path.relpath(path, REPO)
+    missing = []
+    if ast.get_docstring(tree) is None:
+        missing.append(f"{rel}:1: module docstring missing")
+    for qual, node in _public_defs(tree):
+        if ast.get_docstring(node) is None:
+            # an undocumented __init__ is fine when the class docstring
+            # covers construction
+            if qual.endswith(".__init__"):
+                continue
+            kind = "class" if isinstance(node, ast.ClassDef) else "def"
+            missing.append(f"{rel}:{node.lineno}: public {kind} "
+                           f"`{qual}` has no docstring")
+    return missing
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--verbose", action="store_true",
+                    help="also list the files that passed")
+    args = ap.parse_args(argv)
+    failures: list[str] = []
+    for rel in TARGETS:
+        path = os.path.join(REPO, rel)
+        if not os.path.exists(path):
+            failures.append(f"{rel}: target module missing")
+            continue
+        miss = check_file(path)
+        if miss:
+            failures.extend(miss)
+        elif args.verbose:
+            print(f"ok: {rel}")
+    if failures:
+        print(f"{len(failures)} undocumented public definition(s):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"docstring lint: {len(TARGETS)} modules clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
