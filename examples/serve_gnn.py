@@ -484,6 +484,15 @@ def main():
                  if "channel_bytes" in link else " (in-process)")
         print(f"  link {link['shard']}: {link['calls']} commands{extra}")
     svc.close()
+    # CI drills run with REPRO_LOCK_WITNESS=1: every lock the drill
+    # touched was order-checked live; a recorded inversion fails here
+    from repro.concurrency import assert_clean, witness_enabled, \
+        witness_report
+    if witness_enabled():
+        rep = witness_report()
+        print(f"lock witness: {len(rep['edges'])} nesting edges observed, "
+              f"{len(rep['violations'])} violations")
+        assert_clean()
     if errors:
         print(f"{len(errors)} failed requests; first: {errors[0]}")
         raise SystemExit(1)

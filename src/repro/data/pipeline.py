@@ -55,7 +55,8 @@ class Pipeline:
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
         self._step = start_step
         self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="pipeline-prefetch")
         self._thread.start()
 
     def _worker(self):
@@ -77,8 +78,12 @@ class Pipeline:
 
     def close(self):
         self._stop.set()
+        # drain so a worker blocked on a full queue sees the stop flag on
+        # its next put timeout, then reap it — close() must not leave the
+        # prefetch thread running against a torn-down pipeline
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+        self._thread.join(timeout=5.0)

@@ -31,6 +31,7 @@ import time
 from collections import deque
 from dataclasses import dataclass
 
+from ..concurrency import witness_condition, witness_lock
 from .transport import serialize, deserialize, check_reply
 
 
@@ -78,7 +79,8 @@ class QueuePair:
     def __init__(self, qid: int, depth: int):
         self.qid = qid
         self.depth = int(depth)
-        self.cv = threading.Condition()        # guards sq + cq of THIS pair
+        self.cv = witness_condition(           # guards sq + cq of THIS pair
+            "queues.cv", threading.Condition())
         self.sq: deque = deque()               # (cmd_id, packet)
         self.cq: dict[int, bytes] = {}         # cmd_id -> reply packet
         self.abandoned: set[int] = set()       # waiters that timed out
@@ -93,7 +95,8 @@ class MultiQueueRoP:
             raise ValueError("need at least one queue pair")
         self.pairs = [QueuePair(q, depth) for q in range(n_queues)]
         # device-side doorbell: counts commands sitting in any SQ
-        self._work = threading.Condition()
+        self._work = witness_condition("queues._work",
+                                       threading.Condition())
         self._sq_count = 0
         self._next_cmd = 1
         self.inflight: dict[int, dict] = {}    # cmd_id -> {qid, method, t}
@@ -236,7 +239,7 @@ class AsyncRPCClient:
         self.rx = rx                              # device -> host channel
         self._stats = ClientStats()
         self._pending: dict[int, tuple[str, float]] = {}
-        self._lock = threading.Lock()
+        self._lock = witness_lock("rpcclient._lock", threading.Lock())
 
     @property
     def method_stats(self) -> dict:

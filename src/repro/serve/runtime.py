@@ -47,6 +47,7 @@ import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 
+from ..concurrency import witness_lock
 from ..rpc import RPCServer, MultiQueueRoP, AsyncRPCClient
 from ..rpc.transport import serialize, deserialize
 from .scheduler import BatchScheduler, AdmissionError
@@ -85,9 +86,10 @@ class ServingRuntime:
         # write-side admission telemetry: mutation commands dispatched and
         # shed (typed BackpressureError — e.g. a full firehose log or an
         # exhausted submit-retry budget rejects the write at admission)
-        self._write_lock = threading.Lock()
-        self.write_ops = 0
-        self.write_shed = 0
+        self._write_lock = witness_lock(
+            "runtime._write_lock", threading.Lock())
+        self.write_ops = 0                     # guarded-by: _write_lock
+        self.write_shed = 0                    # guarded-by: _write_lock
 
     # ---------------------------------------------------------------- clients
     def client(self, qid: int | None = None) -> AsyncRPCClient:

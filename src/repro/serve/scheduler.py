@@ -34,6 +34,7 @@ from typing import Callable
 
 import numpy as np
 
+from ..concurrency import witness_condition, witness_lock
 from ..rpc.queues import BackpressureError
 from .batcher import fingerprint_weights
 
@@ -70,21 +71,49 @@ class QoSTelemetry:
     """Bounded rolling latency window + lifetime counters (thread-safe)."""
 
     def __init__(self, window: int = 512):
-        self._lock = threading.Lock()
-        self._window = deque(maxlen=window)    # (t_done, latency_s)
-        self.completed = 0
-        self.errors = 0
-        self.expired = 0
-        self.rejected = 0
-        self.backpressured = 0        # groups shed by typed BackpressureError
-        self.last_reject_reason: dict | None = None
-        self.groups = 0
-        self.grouped_requests = 0
+        self._lock = witness_lock(
+            "scheduler.qos._lock", threading.Lock())
+        self._window = deque(maxlen=window)    # guarded-by: _lock
+        self.completed = 0                     # guarded-by: _lock
+        self.errors = 0                        # guarded-by: _lock
+        self.expired = 0                       # guarded-by: _lock
+        self.rejected = 0                      # guarded-by: _lock
+        self.backpressured = 0                 # guarded-by: _lock
+        self.last_reject_reason: dict | None = None  # guarded-by: _lock
+        self.groups = 0                        # guarded-by: _lock
+        self.grouped_requests = 0              # guarded-by: _lock
 
     def record(self, latency_s: float) -> None:
         with self._lock:
             self._window.append((time.perf_counter(), latency_s))
             self.completed += 1
+
+    # locked mutators: the scheduler threads bump the lifetime counters
+    # through these so every read in ``snapshot`` sees a consistent set
+    def note_rejected(self, reason: dict | None = None) -> None:
+        with self._lock:
+            self.rejected += 1
+            if reason is not None:
+                self.last_reject_reason = dict(reason)
+
+    def note_expired(self, n: int = 1) -> None:
+        with self._lock:
+            self.expired += int(n)
+
+    def note_backpressured(self, reason: dict | None = None) -> None:
+        with self._lock:
+            self.backpressured += 1
+            if reason is not None:
+                self.last_reject_reason = dict(reason)
+
+    def note_errors(self, n: int = 1) -> None:
+        with self._lock:
+            self.errors += int(n)
+
+    def note_group(self, size: int) -> None:
+        with self._lock:
+            self.groups += 1
+            self.grouped_requests += int(size)
 
     def snapshot(self, *, queue_depth: int = 0) -> dict:
         with self._lock:
@@ -137,7 +166,8 @@ class BatchScheduler:
         # degraded array)
         self.health_provider = None
         self._pending: list[ServeRequest] = []
-        self._cond = threading.Condition()
+        self._cond = witness_condition(
+            "scheduler._cond", threading.Condition())
         self._seq = itertools.count()
 
     # -------------------------------------------------------------- admission
@@ -175,7 +205,6 @@ class BatchScheduler:
             wkey = f"{weights_ref}|{fingerprint_weights(weights)}"
         with self._cond:
             if len(self._pending) >= self.max_pending:
-                self.qos.rejected += 1
                 reason = {"source": "admission",
                           "queue_depth": len(self._pending),
                           "max_pending": self.max_pending}
@@ -187,7 +216,7 @@ class BatchScheduler:
                         health = None
                     if health:
                         reason["shard_health"] = health
-                self.qos.last_reject_reason = reason
+                self.qos.note_rejected(reason)
                 raise AdmissionError(
                     f"admission queue full ({self.max_pending} pending)",
                     reason=reason)
@@ -228,7 +257,7 @@ class BatchScheduler:
                  else alive).append(r)
             self._pending = alive
             for r in expired:
-                self.qos.expired += 1
+                self.qos.note_expired()
                 r.on_done({"ok": False, "error":
                            "DeadlineExceeded: request expired in queue "
                            f"(waited {now - r.t_enqueue:.3f}s)"})
@@ -293,24 +322,22 @@ class BatchScheduler:
             # typed shed: the array's flow control (in-flight windows /
             # queue-full retry budget) refused the fused fetch — report
             # the reason, don't crash the group as a generic error
-            self.qos.backpressured += 1
-            self.qos.last_reject_reason = dict(e.reason)
+            self.qos.note_backpressured(dict(e.reason))
             resp = {"ok": False, "error": f"BackpressureError: {e}",
                     "backpressure": True, "reason": dict(e.reason)}
+            self.qos.note_errors(len(group))
             for r in group:
-                self.qos.errors += 1
                 r.on_done(dict(resp))
             return
         except Exception as e:  # noqa: BLE001 — fault fans out to the group
             resp = {"ok": False, "error": f"{type(e).__name__}: {e}",
                     "traceback": traceback.format_exc()}
+            self.qos.note_errors(len(group))
             for r in group:
-                self.qos.errors += 1
                 r.on_done(dict(resp))
             return
         now = time.perf_counter()
-        self.qos.groups += 1
-        self.qos.grouped_requests += len(group)
+        self.qos.note_group(len(group))
         for r, out in zip(group, results):
             self.qos.record(now - r.t_enqueue)
             r.on_done({"ok": True, "result": out})

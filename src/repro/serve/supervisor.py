@@ -54,6 +54,7 @@ import time
 from collections import deque
 from dataclasses import dataclass
 
+from ..concurrency import witness_lock
 from ..store.blockdev import DeviceFailedError
 
 # health states
@@ -92,7 +93,8 @@ class ShardSupervisor:
         self.store = store
         self.policy = policy or HealthPolicy()
         self.on_transition = on_transition
-        self._lock = threading.Lock()          # LEAF — see module docstring
+        self._lock = witness_lock(             # LEAF — see module docstring
+            "supervisor._lock", threading.Lock())
         n = store.n_shards
         self._state = [HEALTHY] * n
         self._drained = [False] * n
@@ -102,9 +104,10 @@ class ShardSupervisor:
         self._draining = [False] * n
         self._rebuild_attempts = [0] * n
         self._next_rebuild_t = [0.0] * n
-        self._rebuild_threads: dict[int, threading.Thread] = {}
+        self._rebuild_threads: dict[int, threading.Thread] = {}  # guarded-by: _lock
         self.events: deque = deque(maxlen=int(max_events))
         self.incidents: list[dict] = []        # one per completed drain
+        self._hookq: deque = deque()           # guarded-by: _lock
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         # shards already failed at attach time (operator predecessors)
@@ -134,7 +137,9 @@ class ShardSupervisor:
         if self._thread is not None:
             self._thread.join(timeout=10.0)
             self._thread = None
-        for th in list(self._rebuild_threads.values()):
+        with self._lock:
+            rebuilds = list(self._rebuild_threads.values())
+        for th in rebuilds:
             th.join(timeout=30.0)
         if getattr(self.store, "health", None) is self:
             self.store.health = None
@@ -248,6 +253,7 @@ class ShardSupervisor:
                     and not self._draining[s]:
                 self._draining[s] = True
                 drain = True
+        self._fire_hooks()
         if drain:
             self._drain(s, cause="error_burst")
 
@@ -302,12 +308,18 @@ class ShardSupervisor:
                             s, REBUILDING,
                             {"attempt": self._rebuild_attempts[s] + 1})
                         to_rebuild.append(s)
+        self._fire_hooks()
         for s in to_drain:
             self._drain(s, cause="probe")
         for s in to_rebuild:
             th = threading.Thread(target=self._rebuild, args=(s,),
                                   name=f"shard-rebuild-{s}", daemon=True)
-            self._rebuild_threads[s] = th
+            # register BEFORE start: a fast rebuild could finish and pop
+            # its entry before an unlocked post-start assignment ran,
+            # leaving a dead thread wedged in the map (and _tick would
+            # never schedule that shard again)
+            with self._lock:
+                self._rebuild_threads[s] = th
             th.start()
 
     # ------------------------------------------------------------- actions
@@ -336,6 +348,7 @@ class ShardSupervisor:
                         "degraded_classes": info.get("degraded_classes")}
             self.incidents.append(incident)
             self._transition_locked(s, FAILED, incident)
+        self._fire_hooks()
 
     def _rebuild(self, s: int) -> None:
         pol = self.policy
@@ -381,18 +394,33 @@ class ShardSupervisor:
                     {"cause": "rebuild_failed",
                      "attempt": self._rebuild_attempts[s],
                      "error": info.get("error")})
+        self._fire_hooks()
 
     # ---------------------------------------------------------- transitions
-    def _transition_locked(self, s: int, new: str, info: dict) -> None:
+    def _transition_locked(self, s: int, new: str, info: dict) -> None:  # requires-lock: _lock
         old = self._state[s]
         self._state[s] = new
         ev = {"t": time.monotonic(), "shard": s, "from": old, "to": new}
         ev.update({k: v for k, v in info.items()
                    if isinstance(v, (str, int, float, bool, type(None)))})
         self.events.append(ev)
-        hook = self.on_transition
-        if hook is not None:
-            try:
-                hook(s, old, new, dict(info))
-            except Exception:  # noqa: BLE001 — hooks must not break the loop
-                pass
+        if self.on_transition is not None:
+            # the hook is arbitrary telemetry code — it must never run
+            # under the LEAF supervisor lock (it may acquire anything).
+            # Queue it; every caller drains via _fire_hooks() after
+            # releasing.
+            self._hookq.append((s, old, new, dict(info)))
+
+    def _fire_hooks(self) -> None:
+        """Run queued transition hooks.  Call WITHOUT the lock held."""
+        while True:
+            with self._lock:
+                if not self._hookq:
+                    return
+                s, old, new, info = self._hookq.popleft()
+            hook = self.on_transition
+            if hook is not None:
+                try:
+                    hook(s, old, new, info)
+                except Exception:  # noqa: BLE001 — hooks must not break
+                    pass           # the loop

@@ -38,6 +38,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..concurrency import witness_lock
+
 PAGE_BYTES = 4096
 SLOT_DTYPE = np.int32
 SLOTS_PER_PAGE = PAGE_BYTES // 4  # 1024 int32 slots
@@ -139,7 +141,7 @@ class BlockDevice:
         self._front = 0                 # next free LPN in neighbor space
         self._back = num_pages          # one past last used LPN in embedding space
         self._free: list[int] = []      # recycled neighbor-space pages
-        self._lock = threading.Lock()
+        self._lock = witness_lock("blockdev._lock", threading.Lock())
         self._t0 = time.perf_counter()
         self.stats = IOStats()
         if trace_events:
@@ -166,7 +168,8 @@ class BlockDevice:
         # per-thread deferred-latency slot (see defer_latency)
         self._defer = threading.local()
         # busy-until command arbitration: one command pipeline per device
-        self._busy_lock = threading.Lock()
+        self._busy_lock = witness_lock(
+            "blockdev._busy_lock", threading.Lock())
         self._busy_until = 0.0
         self.failed = False
 
@@ -201,7 +204,11 @@ class BlockDevice:
     def num_pages(self) -> int:
         return self._pages.shape[0]
 
-    def _grow(self, min_extra: int) -> None:
+    def _grow(self, min_extra: int) -> list:
+        """Grow the page array (caller holds ``_lock``).  Returns the
+        observer callbacks to fire AFTER the lock is released — arbitrary
+        hook code (the page cache, the store's base-LPN shift) must not
+        run under the device allocator lock."""
         old = self._pages
         extra = max(min_extra, old.shape[0])
         grown = np.zeros((old.shape[0] + extra, SLOTS_PER_PAGE), dtype=SLOT_DTYPE)
@@ -213,22 +220,32 @@ class BlockDevice:
             grown[self._back: old.shape[0]] = 0
         self._back = grown.shape[0] - back_len
         self._pages = grown
+        hooks = []
         if self.on_grow is not None:           # embedding LPNs shifted up
-            self.on_grow(extra)
+            hooks.append((self.on_grow, (extra,)))
         if self.on_write is not None:          # embedding span relocated:
-            self.on_write(0, grown.shape[0])   # every cached LPN is stale
+            hooks.append((self.on_write,       # every cached LPN is stale
+                          (0, grown.shape[0])))
+        return hooks
+
+    @staticmethod
+    def _fire(hooks: list) -> None:
+        for fn, args in hooks:
+            fn(*args)
 
     def alloc_front(self) -> int:
         """Allocate one page in the neighbor space (graph pages)."""
         self._check_alive()
+        hooks: list = []
         with self._lock:
             if self._free:
                 return self._free.pop()
             if self._front >= self._back:
-                self._grow(1)
+                hooks = self._grow(1)
             lpn = self._front
             self._front += 1
-            return lpn
+        self._fire(hooks)
+        return lpn
 
     def alloc_back(self, n: int) -> int:
         """Allocate ``n`` contiguous pages at the top (embedding space).
@@ -236,11 +253,14 @@ class BlockDevice:
         Returns the first LPN of the span (ascending order within the span).
         """
         self._check_alive()
+        hooks: list = []
         with self._lock:
             if self._back - n < self._front:
-                self._grow(n)
+                hooks = self._grow(n)
             self._back -= n
-            return self._back
+            base = self._back
+        self._fire(hooks)
+        return base
 
     def free_page(self, lpn: int) -> None:
         self._check_alive()

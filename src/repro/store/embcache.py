@@ -36,6 +36,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..concurrency import witness_lock
 from .blockdev import PAGE_BYTES, SLOTS_PER_PAGE, SLOT_DTYPE
 
 
@@ -75,7 +76,7 @@ class EmbeddingPageCache:
         self._lpn_slot = np.full(1024, -1, np.int64)           # lpn -> slot
         self._free: list[int] = list(range(self.capacity))
         self._tick = 0
-        self._lock = threading.RLock()
+        self._lock = witness_lock("embcache._lock", threading.RLock())
         self.stats = CacheStats()
 
     def __len__(self) -> int:

@@ -608,14 +608,18 @@ class ShardService:
         next_vid = -1
         done = True
         with st._lock:
-            vids_c = sorted(v for v in st.gmap
-                            if v % n_shards == cls and v >= int(start_vid))
+            # vid list AND kinds in one snapshot: consulting the live map
+            # per-vid outside the lock could see a concurrent L->H
+            # promotion and ship a half-of-each view of that vertex
+            kinds = {v: k for v, k in st.gmap.items()
+                     if v % n_shards == cls and v >= int(start_vid)}
+        vids_c = sorted(kinds)
         pend_l: list[int] = []
         for v in vids_c:
             if used >= budget:
                 next_vid, done = v, False
                 break
-            kind = st.gmap.get(v)
+            kind = kinds[v]
             if kind == "L":
                 pend_l.append(v)
                 used += 1            # L vids are cheap; count conservatively
@@ -643,10 +647,6 @@ class ShardService:
             "next_vid": next_vid, "done": done,
         }
 
-    def export_emb_chunk(self, row0, n_rows):
-        """One bounded chunk of local embedding rows (a stripe slice)."""
-        return self.store.get_embeds(int(row0) + np.arange(int(n_rows)))
-
     def export_emb_rows(self, rows):
         """Embedding rows by explicit local row index — the migration
         export (moved classes are non-contiguous under coarse extents)."""
@@ -659,15 +659,8 @@ class ShardService:
         of one migrating class's stripe)."""
         return {"base": int(self.store.extend_embedding_table(int(n_rows)))}
 
-    def import_emb_rows(self, row0, rows) -> dict:
-        """Overwrite the local embedding rows ``[row0, row0+len)`` with
-        ``rows`` (page-granular RMW into a reserved region)."""
-        rows = np.asarray(rows, dtype=np.float32)
-        self.store.write_embed_rows(int(row0), rows)
-        return {"rows": int(len(rows))}
-
-    def import_adj_chunk(self, l_vids, l_lens, l_nbrs, h_vids, h_lens,
-                         h_pages) -> dict:
+    def _import_adj_chunk(self, l_vids, l_lens, l_nbrs, h_vids, h_lens,
+                          h_pages) -> dict:
         """Import one ``export_adj_chunk`` payload into the LIVE store
         (unlike ``rebuild``, which materialises a fresh one): L vids are
         re-laid through the unit insert path, H chains cloned page-exact.
@@ -705,8 +698,8 @@ class ShardService:
             start_vid=int(start_vid), max_pages=int(max_pages))
         h_pages = np.asarray(chunk["h_pages"], dtype=SLOT_DTYPE)
         l_nbrs = np.asarray(chunk["l_nbrs"], dtype=SLOT_DTYPE)
-        self.import_adj_chunk(chunk["l_vids"], chunk["l_lens"], l_nbrs,
-                              chunk["h_vids"], chunk["h_lens"], h_pages)
+        self._import_adj_chunk(chunk["l_vids"], chunk["l_lens"], l_nbrs,
+                               chunk["h_vids"], chunk["h_lens"], h_pages)
         return {"next_vid": int(chunk["next_vid"]),
                 "done": bool(chunk["done"]),
                 "l": int(len(chunk["l_vids"])),

@@ -31,6 +31,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..concurrency import witness_lock
 from .blockdev import BlockDevice, SLOTS_PER_PAGE, SLOT_DTYPE
 from .sampler import _ramp
 
@@ -209,7 +210,7 @@ class GraphStore:
         self.num_vertices = 0
         self.stats = GraphStoreStats()
         self._free_vids: list[int] = []                # deleted VIDs, reused (paper)
-        self._lock = threading.RLock()
+        self._lock = witness_lock("graphstore._lock", threading.RLock())
         self.cache = None                              # device-DRAM page cache
         self._cache_graph = True
         # device growth relocates the embedding space to the new top; the

@@ -43,6 +43,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..concurrency import witness_lock
 from ..rpc.queues import BackpressureError
 from .blockdev import sleep_us
 from .graphstore import BulkTimeline
@@ -228,12 +229,13 @@ class MutationFirehose:
         self.window_s = float(window_s)
         self.max_window_ops = max(1, int(max_window_ops))
         self.max_log_ops = max(1, int(max_log_ops))
-        self.counters = FirehoseCounters()
-        self._log: list[tuple] = []
-        self._lock = threading.Lock()
+        self.counters = FirehoseCounters()    # guarded-by: _lock
+        self._log: list[tuple] = []           # guarded-by: _lock
+        self._lock = witness_lock("ingest._lock", threading.Lock())
         # one flush at a time: the timer thread and an explicit flush must
         # not interleave their windows (order is the whole contract)
-        self._flush_lock = threading.Lock()
+        self._flush_lock = witness_lock(
+            "ingest._flush_lock", threading.Lock())
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self.last_error: Exception | None = None
@@ -379,8 +381,9 @@ class MutationFirehose:
                     st.add_vertex(args[0], args[1])
                 else:
                     getattr(st, kind)(*args)
-            self.counters.applied += len(window)
-            self.counters.windows += 1
+            with self._lock:
+                self.counters.applied += len(window)
+                self.counters.windows += 1
             return len(window)
 
         per_shard: dict[int, _ShardOps] = {}
@@ -396,8 +399,9 @@ class MutationFirehose:
             items = [(s, "apply_mutations", ops.kwargs())
                      for s, ops in sorted(per_shard.items())]
             outs = st._submit_round(items)
-            self.counters.windows += 1
-            self.counters.subops += sum(o["applied"] for o in outs)
+            with self._lock:
+                self.counters.windows += 1
+                self.counters.subops += sum(o["applied"] for o in outs)
             per_shard.clear()
 
         def vertex(v, embed=None):
@@ -447,11 +451,13 @@ class MutationFirehose:
                     # BARRIER: decomposition reads the current neighbor
                     # set, so everything logged before it applies first
                     dispatch()
-                    self.counters.barriers += 1
+                    with self._lock:
+                        self.counters.barriers += 1
                     st.delete_vertex(op[1])
                 else:
                     raise ValueError(f"unknown firehose op {kind!r}")
                 applied += 1
             dispatch()
-        self.counters.applied += applied
+        with self._lock:
+            self.counters.applied += applied
         return applied

@@ -68,6 +68,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..concurrency import witness_condition, witness_lock
 from ..rpc.queues import BackpressureError, QueueFullError
 from .blockdev import (BlockDevice, DeviceFailedError, SLOTS_PER_PAGE,
                        sleep_us)
@@ -375,14 +376,15 @@ class ShardedGraphStore:
         # as one critical section).  Readers do NOT take it — a hop fetch
         # racing an add_edge may observe the half-inserted undirected edge,
         # the inherent visibility model of an array of devices.
-        self._mutate = threading.RLock()
+        self._mutate = witness_lock("sharded._mutate", threading.RLock())
         # maintenance gate: a streaming shard rebuild holds it for the
         # whole stream, mutations take it FIRST (always _maintenance ->
         # _mutate, never the reverse) and therefore block until the
         # replacement is re-admitted — the survivors stay the exact
         # current state, no replay log — while reads, which take only
         # _mutate, keep flowing throughout the rebuild.
-        self._maintenance = threading.RLock()
+        self._maintenance = witness_lock(
+            "sharded._maintenance", threading.RLock())
         # end-to-end flow control: per-shard in-flight windows + typed
         # backpressure (see FlowControl).  ``health`` is the optional
         # supervisor (serve/supervisor.py attaches itself here); the
@@ -390,9 +392,10 @@ class ShardedGraphStore:
         # duck-typed, so the store layer never imports the serve layer.
         self.flow = flow or FlowControl()
         self.health = None
-        self.backpressure_events = 0
-        self.backpressure_retries = 0
-        self._bp_lock = threading.Lock()     # misc small-state guard
+        self.backpressure_events = 0         # guarded-by: _bp_lock
+        self.backpressure_retries = 0        # guarded-by: _bp_lock
+        self._bp_lock = witness_lock(        # misc small-state guard
+            "sharded._bp_lock", threading.Lock())
         self._rebuilding: set[int] = set()
         self._windows = [
             threading.BoundedSemaphore(self.flow.max_inflight_per_shard)
@@ -401,7 +404,7 @@ class ShardedGraphStore:
         # cumulative simulated array wait (each fetch pays max over shards):
         # the device-model latency, free of host scheduler noise — what the
         # scale-out benchmarks compare across array configurations.
-        self.io_wait_us = 0.0
+        self.io_wait_us = 0.0                # guarded-by: _bp_lock
         # coordinator-side bookkeeping (no synchronous shard peeks): the
         # coordinator is the only writer, so it tracks the global vertex
         # count and feature dim itself and boots them from one stats
@@ -435,7 +438,8 @@ class ShardedGraphStore:
         # so a class flip can quiesce every in-flight read that may hold
         # a pre-flip routing snapshot before the old owner's pages are
         # dropped.  Independent lock — NEVER held together with _mutate.
-        self._rd_cv = threading.Condition(threading.Lock())
+        self._rd_cv = witness_condition(
+            "sharded._rd_cv", threading.Condition(threading.Lock()))
         self._rd_active = 0
         self._rd_barrier = False
         # per-class write gates during a copy window + reshard state.
@@ -981,7 +985,8 @@ class ShardedGraphStore:
         finally:
             self._release_windows(slots)
         if pay:
-            self.io_wait_us += worst
+            with self._bp_lock:
+                self.io_wait_us += worst
             sleep_us(worst)
         return outs, worst
 
@@ -1694,11 +1699,14 @@ class ReplicatedGraphStore(ShardedGraphStore):
         # counting as device load.
         self.stats_staleness_s = float(stats_staleness_s)
         self.rebuild_chunk_pages = int(rebuild_chunk_pages)
-        self.gossip_pulls = 0
-        self._gossip_lock = threading.Lock()
-        self._gossip_reads = np.zeros(self.n_shards)
-        self._gossip_depth = np.zeros(self.n_shards)
-        self._gossip_t = -np.inf
+        self.gossip_pulls = 0                      # guarded-by: _gossip_lock
+        self._gossip_lock = witness_lock(
+            "sharded._gossip_lock", threading.Lock())
+        self._gossip_reads = np.zeros(self.n_shards)   # guarded-by: _gossip_lock
+        self._gossip_depth = np.zeros(self.n_shards)   # guarded-by: _gossip_lock
+        self._gossip_t = -np.inf                   # guarded-by: _gossip_lock
+        self._gossip_inflight = False              # guarded-by: _gossip_lock
+        self._read_base = np.zeros(0)              # guarded-by: _gossip_lock
         self._read_base = self._refresh_gossip(force=True).copy()
 
     # ------------------------------------------------------------- topology
@@ -1786,10 +1794,24 @@ class ReplicatedGraphStore(ShardedGraphStore):
         command-queue depth the selection penalises."""
         now = time.perf_counter()
         with self._gossip_lock:
-            if not (force or (now - self._gossip_t) > self.stats_staleness_s):
+            stale = force or (now - self._gossip_t) > self.stats_staleness_s
+            if not stale or (self._gossip_inflight and not force):
+                # fresh enough, or another thread is already mid-pull:
+                # bounded-staleness gossip tolerates the current snapshot
                 return self._gossip_reads
+            self._gossip_inflight = True
+        # the counters round fans out through the shard queues — an RPC
+        # must never run under the leaf _gossip_lock, or every reader
+        # selecting replicas serializes behind the network
+        try:
             outs = self._submit_round(
                 [(s, "counters", {}) for s in range(self.n_shards)])
+        except BaseException:
+            with self._gossip_lock:
+                self._gossip_inflight = False
+            raise
+        with self._gossip_lock:
+            self._gossip_inflight = False
             self._gossip_reads = np.array(
                 [float(c["read_pages"]) for c in outs])
             self._gossip_depth = np.array(
@@ -1960,7 +1982,8 @@ class ReplicatedGraphStore(ShardedGraphStore):
         # mutations only ever wait out the (fast) planning math.
         with self._mutate:
             block, desc, worst = self._plan_and_fetch_spread(vids_arr)
-        self.io_wait_us += worst
+        with self._bp_lock:
+            self.io_wait_us += worst
         sleep_us(worst)
         return block, desc
 

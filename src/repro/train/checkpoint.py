@@ -76,7 +76,8 @@ class Checkpointer:
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write)
+            self._thread = threading.Thread(target=write,
+                                            name="checkpoint-writer")
             self._thread.start()
 
     def wait(self):

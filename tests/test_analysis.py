@@ -1,0 +1,223 @@
+"""Static-analysis toolchain: the fixture corpus (every seeded
+violation flagged with the right rule id, zero false positives on the
+known-good file), the runtime lock-order witness, and the repo-wide
+acceptance gate (``tools/analyze.py`` must be clean on this tree)."""
+import re
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from analysis import core, guarded, lockorder, rpcsurface, threads  # noqa: E402
+from repro import concurrency as conc                               # noqa: E402
+
+FIXTURES = REPO / "tools" / "analysis" / "fixtures"
+
+_FX_SPECS = (
+    conc.LockSpec("fx.a", 10, "lock",
+                  (("fx_good", "_a"), ("fx_bad_lockorder", "_a"))),
+    conc.LockSpec("fx.b", 20, "lock",
+                  (("fx_good", "_b"), ("fx_bad_lockorder", "_b"))),
+    conc.LockSpec("fx.r", 25, "rlock", (("fx_good", "_r"),)),
+    conc.LockSpec("fx.leaf", 30, "lock",
+                  (("fx_good", "_leaf"), ("fx_bad_lockorder", "_leaf")),
+                  leaf=True),
+    conc.LockSpec("fx.mu", 40, "lock",
+                  (("fx_good", "_mu"), ("fx_bad_guarded", "_mu"))),
+    conc.LockSpec("fx.x", 50, "lock", (("fx_bad_lockorder", "_x"),)),
+    conc.LockSpec("fx.y", 60, "lock", (("fx_bad_lockorder", "_y"),)),
+)
+
+
+def _fx_cfg():
+    return core.AnalysisConfig(
+        specs=_FX_SPECS, sanctioned={}, same_name_ok={},
+        never_together={frozenset({"fx.x", "fx.y"}): "fixture pair"},
+        with_funcs={}, attr_types={})
+
+
+def _fx_modules(*names):
+    by_name = {m.modname: m for m in core.load_package(FIXTURES, REPO)}
+    return [by_name[n] for n in names]
+
+
+def _expected(mod):
+    """(rule, line) pairs parsed from ``# expect: R1[, R2]`` markers."""
+    out = set()
+    for i, text in enumerate(mod.source.splitlines(), start=1):
+        m = re.search(r"#\s*expect:\s*([A-Z]+\d+(?:\s*,\s*[A-Z]+\d+)*)",
+                      text)
+        if m:
+            for rule in m.group(1).split(","):
+                out.add((rule.strip(), i))
+    return out
+
+
+def _run_fixture_passes(mods):
+    cfg = _fx_cfg()
+    out = []
+    out += lockorder.run(cfg, mods)
+    out += guarded.run(cfg, mods)
+    out += threads.run(cfg, mods)
+    out += rpcsurface.run(cfg, mods)
+    return out
+
+
+# ------------------------------------------------------------- fixtures
+def test_good_fixture_is_clean():
+    mods = _fx_modules("fx_good")
+    findings = [f for f in _run_fixture_passes(mods) if not f.suppressed]
+    assert findings == [], [f.render() for f in findings]
+
+
+@pytest.mark.parametrize("name", ["fx_bad_lockorder", "fx_bad_guarded",
+                                  "fx_bad_threads", "fx_rpc"])
+def test_bad_fixture_exact_findings(name):
+    mods = _fx_modules(name)
+    expected = _expected(mods[0])
+    assert expected, f"{name} has no expect markers"
+    active = [f for f in _run_fixture_passes(mods) if not f.suppressed]
+    got = {(f.rule, f.line) for f in active}
+    missing = expected - got
+    extra = got - expected
+    assert not missing, f"seeded violations not flagged: {sorted(missing)}"
+    assert not extra, \
+        "false positives: " + "; ".join(
+            f.render() for f in active if (f.rule, f.line) not in expected)
+
+
+def test_inline_suppressions_are_recorded_not_active():
+    mods = _fx_modules("fx_bad_lockorder", "fx_bad_guarded")
+    findings = _run_fixture_passes(mods)
+    sup = [f for f in findings if f.suppressed]
+    # one reviewed inversion + one reviewed unguarded read
+    assert {f.rule for f in sup} == {"LO001", "GB002"}
+
+
+def test_baseline_round_trip(tmp_path):
+    mods = _fx_modules("fx_bad_guarded")
+    gb = [f for f in guarded.run(_fx_cfg(), mods) if not f.suppressed]
+    assert gb
+    bl = tmp_path / "baseline.txt"
+    bl.write_text("# justification line\n"
+                  + "\n".join(f.key() for f in gb) + "\n")
+    core.apply_baseline(gb, core.load_baseline(bl))
+    assert all(f.suppressed for f in gb)
+
+
+# ------------------------------------------------------ registry sanity
+def test_registry_ranks_strictly_ascending_and_sites_unique():
+    ranks = [s.rank for s in conc.LOCK_ORDER]
+    assert ranks == sorted(ranks) and len(set(ranks)) == len(ranks)
+    sites = [site for s in conc.LOCK_ORDER for site in s.sites]
+    assert len(sites) == len(set(sites))
+
+
+def test_lock_table_matches_docs():
+    table = conc.render_lock_table()
+    doc = (REPO / "docs" / "concurrency.md").read_text()
+    assert table in doc, \
+        "docs/concurrency.md lock table drifted: run " \
+        "`python tools/analyze.py --write-docs`"
+
+
+# ------------------------------------------------------------ acceptance
+def test_repo_is_clean_under_full_analysis():
+    """The tree itself must carry zero unsuppressed findings — the same
+    gate the static-analysis CI job enforces."""
+    import analyze
+    findings = analyze.run_all()
+    active = [f for f in findings if not f.suppressed]
+    assert active == [], [f.render() for f in active]
+
+
+def test_every_registered_site_is_witness_wrapped():
+    """Each registry site whose module creates the primitive must route
+    it through witness_lock/witness_condition (else the runtime witness
+    silently skips it).  _mig_cv shares _mutate's wrapped RLock and the
+    _windows semaphores are counted, not order-checked."""
+    exempt = {("sharded", "_mig_cv"), ("sharded", "_windows"),
+              ("endpoint", "_lock")}   # alias site: created in graphstore
+    src = {m.modname: m for m in core.load_package(REPO / "src" / "repro",
+                                                   REPO)}
+    for spec in conc.LOCK_ORDER:
+        for modname, attr in spec.sites:
+            if (modname, attr) in exempt:
+                continue
+            text = src[modname].source
+            pat = rf"self\.{re.escape(attr)}\s*=\s*witness_"
+            assert re.search(pat, text), \
+                f"{modname}.{attr} ({spec.name}) is not witness-wrapped"
+
+
+# --------------------------------------------------------------- witness
+@pytest.fixture
+def witness():
+    conc.set_witness(True)
+    conc.reset_witness()
+    yield conc
+    conc.reset_witness()
+    conc.set_witness(False)
+
+
+def test_witness_clean_nesting_records_edges_only(witness):
+    outer = conc.witness_lock("graphstore._lock", threading.RLock())
+    inner = conc.witness_lock("blockdev._lock", threading.Lock())
+    with outer:
+        with inner:
+            pass
+    rep = conc.witness_report()
+    assert rep["violations"] == []
+    assert ("graphstore._lock", "blockdev._lock") in [
+        tuple(e) for e in rep["edges"]]
+    conc.assert_clean()
+
+
+def test_witness_trips_on_deliberate_inversion(witness):
+    outer = conc.witness_lock("blockdev._lock", threading.Lock())
+    inner = conc.witness_lock("graphstore._lock", threading.RLock())
+    with outer:              # rank 70 first...
+        with inner:          # ...then rank 60: inversion
+            pass
+    with pytest.raises(AssertionError, match="inversion"):
+        conc.assert_clean()
+
+
+def test_witness_trips_under_leaf_and_exclusion(witness):
+    leaf = conc.witness_lock("supervisor._lock", threading.Lock())
+    other = conc.witness_lock("queues._work", threading.Condition())
+    with leaf:
+        with other:
+            pass
+    kinds = {v["kind"] for v in conc.witness_report()["violations"]}
+    assert "leaf" in kinds
+
+    conc.reset_witness()
+    rd = conc.witness_condition(
+        "sharded._rd_cv", threading.Condition(threading.Lock()))
+    mut = conc.witness_lock("sharded._mutate", threading.RLock())
+    with rd:
+        with mut:
+            pass
+    kinds = {v["kind"] for v in conc.witness_report()["violations"]}
+    assert "exclusion" in kinds
+
+
+def test_witness_reentrant_same_instance_is_silent(witness):
+    r = conc.witness_lock("sharded._mutate", threading.RLock())
+    with r:
+        with r:
+            pass
+    assert conc.witness_report()["violations"] == []
+
+
+def test_witness_off_returns_raw_objects():
+    conc.set_witness(False)
+    raw = threading.Lock()
+    assert conc.witness_lock("supervisor._lock", raw) is raw
+    rawc = threading.Condition()
+    assert conc.witness_condition("queues.cv", rawc) is rawc

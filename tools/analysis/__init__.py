@@ -1,0 +1,13 @@
+"""Repo-aware static analysis passes over ``src/repro``.
+
+Entry point: ``tools/analyze.py``.  The passes:
+
+  * ``lockorder``  — LO001..LO006 against ``repro.concurrency.LOCK_ORDER``
+  * ``guarded``    — GB001/GB002 for ``# guarded-by:`` annotations
+  * ``threads``    — TL001..TL003 thread-lifecycle lint
+  * ``rpcsurface`` — RPC001..RPC004 ShardService surface consistency
+
+Shared AST machinery (module loading, class/call-graph index, the
+held-lock-set walker, findings, baselines) lives in ``core``.
+"""
+from . import core, guarded, lockorder, rpcsurface, threads  # noqa: F401

@@ -1,0 +1,8 @@
+"""Seeded fixture corpus for ``tests/test_analysis.py``.
+
+``fx_bad_*`` modules seed exactly the violations their ``# expect:``
+comments name; ``fx_good.py`` exercises the trickier clean idioms
+(aliases, re-entrancy, requires-lock, transitive calls) and must
+produce ZERO findings.  These files are parsed by the analyzer, never
+imported or executed.
+"""

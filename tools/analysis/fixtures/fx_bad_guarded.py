@@ -1,0 +1,21 @@
+"""Seeded guarded-by violations."""
+import threading
+
+
+class BadGuarded:
+    def __init__(self):
+        self._mu = threading.Lock()         # rank 40
+        self._count = 0                     # guarded-by: _mu
+
+    def locked_write(self):
+        with self._mu:
+            self._count += 1                # fine
+
+    def unlocked_write(self):
+        self._count += 1                    # expect: GB001
+
+    def unlocked_read(self):
+        return self._count                  # expect: GB002
+
+    def reviewed_read(self):
+        return self._count                  # unguarded-ok: fixture test

@@ -1,0 +1,67 @@
+"""Seeded lock-order violations.  Each violating line carries an
+``# expect: <rule>`` marker the test harness reads back."""
+import threading
+import time
+
+
+class Bad:
+    def __init__(self):
+        self._a = threading.Lock()          # rank 10
+        self._b = threading.Lock()          # rank 20
+        self._leaf = threading.Lock()       # rank 30, LEAF
+        self._x = threading.Lock()          # rank 50 (exclusion with _y)
+        self._y = threading.Lock()          # rank 60 (exclusion with _x)
+        self._rogue = threading.Lock()      # expect: LO005
+        self.cb = None
+
+    def inversion(self):
+        with self._b:
+            with self._a:                   # expect: LO001
+                pass
+
+    def reacquire(self):
+        with self._a:
+            with self._a:                   # expect: LO002
+                pass
+
+    def acquire_under_leaf(self):
+        with self._leaf:
+            with self._x:                   # expect: LO003
+                pass
+
+    def callback_under_leaf(self):
+        hook = self.cb
+        with self._leaf:
+            hook()                          # expect: LO003
+
+    def block_under_leaf(self):
+        with self._leaf:
+            time.sleep(0.01)                # expect: LO004
+
+    def exclusion(self):
+        with self._x:
+            with self._y:                   # expect: LO006
+                pass
+
+    # the inversion must also be caught THROUGH a call
+    def transitive_inversion(self):
+        with self._b:
+            self._takes_a()                 # expect: LO001
+
+    def _takes_a(self):
+        with self._a:
+            pass
+
+    # ...and a transitive blocking call under a leaf
+    def transitive_block(self):
+        with self._leaf:
+            self._sleeps()                  # expect: LO004
+
+    def _sleeps(self):
+        time.sleep(0.01)
+
+    # suppression: same inversion, reviewed inline
+    def suppressed_inversion(self):
+        with self._b:
+            with self._a:                   # lock-order: ok fixture test
+                pass

@@ -1,0 +1,15 @@
+"""Seeded thread-lifecycle violations."""
+import threading
+import time
+
+
+class BadThreads:
+    def __init__(self):
+        self._stop = threading.Event()
+        # non-daemon, never joined anywhere in this module, and a
+        # persistent self-bound worker with no name
+        self._t = threading.Thread(target=self._spin)  # expect: TL001, TL003
+
+    def _spin(self):
+        while True:                         # expect: TL002
+            time.sleep(0.01)

@@ -1,0 +1,70 @@
+"""Known-good fixture: every tricky-but-legal idiom the lock-order,
+guarded-by and thread-lifecycle passes must NOT flag."""
+import threading
+import time
+
+
+class Good:
+    def __init__(self):
+        self._a = threading.Lock()          # rank 10
+        self._b = threading.Lock()          # rank 20
+        self._r = threading.RLock()         # rank 25, reentrant
+        self._leaf = threading.Lock()       # rank 30, LEAF
+        self._mu = threading.Lock()         # rank 40
+        self._state = 0                     # guarded-by: _mu
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="good-worker")
+
+    # ascending rank nesting is legal
+    def ordered(self):
+        with self._a:
+            with self._b:
+                pass
+
+    # re-entrant re-acquisition of an RLock is legal
+    def reenter(self):
+        with self._r:
+            self._reenter_inner()
+
+    def _reenter_inner(self):
+        with self._r:
+            pass
+
+    # a local alias of a lock attribute still resolves
+    def aliased(self):
+        mu = self._mu
+        with mu:
+            self._state += 1
+
+    # blocking is fine while holding a NON-leaf lock
+    def block_under_nonleaf(self):
+        with self._b:
+            time.sleep(0.001)
+
+    # leaf lock held for a tiny critical section only
+    def leaf_ok(self):
+        with self._leaf:
+            x = 1
+        return x
+
+    # a helper documented as called-with-lock-held
+    def locked_path(self):
+        with self._mu:
+            self._mutate_locked()
+
+    def _mutate_locked(self):  # requires-lock: _mu
+        self._state += 1
+
+    # transitive: calling a helper that takes a HIGHER-ranked lock
+    def transitive_ok(self):
+        with self._a:
+            self._takes_b()
+
+    def _takes_b(self):
+        with self._b:
+            pass
+
+    def _worker(self):
+        while not self._stop.is_set():
+            time.sleep(0.001)

@@ -1,0 +1,49 @@
+"""Seeded RPC-surface violations around a miniature service/client
+pair shaped like the real ``ShardService`` / ``RopShardEndpoint``."""
+
+
+class ShardService:
+    def __init__(self, store):
+        self.store = store
+
+    def ok_method(self, vid) -> dict:
+        return {"vid": int(vid)}
+
+    def dead_method(self) -> dict:          # expect: RPC002
+        return {}
+
+    def bad_default(self, rows=[]) -> dict:  # expect: RPC003
+        return {"n": len(rows)}
+
+    def var_args(self, *args) -> dict:      # expect: RPC003
+        return {}
+
+
+class RopShardEndpoint:
+    def __init__(self, client):
+        self.client = client
+
+    def _map_error(self, e):
+        return RuntimeError(str(e))
+
+    def call(self, method, **kwargs):       # expect: RPC004
+        return self.client.call(method, **kwargs)
+
+    def call_result(self, handle):
+        try:
+            return self.client.result(handle)
+        except RuntimeError as e:
+            raise self._map_error(e) from None
+
+    def fetch_result(self, handle):
+        try:
+            return self.client.result(handle)
+        except RuntimeError as e:
+            raise self._map_error(e) from None
+
+
+def caller(ep):
+    ep.call("ok_method", vid=1)
+    ep.call("bad_default")
+    ep.call("var_args")
+    ep.call("missing_method")               # expect: RPC001

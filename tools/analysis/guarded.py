@@ -1,0 +1,107 @@
+"""Guarded-by pass: enforce ``# guarded-by: <lock-attr>`` annotations.
+
+An annotation on an attribute's initialisation line in ``__init__``::
+
+    self._pending = []          # guarded-by: _cond
+
+declares that every later ``self._pending`` access *inside that class*
+must happen while the named lock is held (a ``with self._cond:``
+region, a ``# requires-lock: _cond`` helper, or a context-manager the
+config knows holds it).  Rules:
+
+  * **GB001** annotated attribute WRITTEN outside its lock
+  * **GB002** annotated attribute READ outside its lock
+
+Intentional lock-free snapshot reads either carry an inline
+``# unguarded-ok: <reason>`` or an entry in the reviewed baseline
+(``tools/analysis/guarded_baseline.txt``) — each with a one-line
+justification.  The pass checks only annotated attributes accessed as
+``self.<attr>`` within the declaring class, so it has no false
+positives by construction; cross-class mutation must go through the
+owning class's methods (which is the convention the annotations
+document).
+"""
+from __future__ import annotations
+
+import ast
+
+from .core import (AnalysisConfig, Finding, FunctionWalker, GUARDED_TOKEN,
+                   ModuleInfo, PackageIndex, UNGUARDED_TOKEN)
+
+
+def collect_annotations(cfg: AnalysisConfig, mod: ModuleInfo
+                        ) -> dict[tuple[str, str], str]:
+    """(class, attr) -> lock name, from ``# guarded-by:`` comments on
+    ``self.<attr> = ...`` lines."""
+    out: dict[tuple[str, str], str] = {}
+    for cls in mod.tree.body:
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        for node in ast.walk(cls):
+            if not isinstance(node, (ast.Assign, ast.AugAssign,
+                                     ast.AnnAssign)):
+                continue
+            c = mod.comment(node.lineno)
+            if GUARDED_TOKEN not in c:
+                continue
+            lock_attr = c.split(GUARDED_TOKEN, 1)[1].strip().split()[0]
+            spec = cfg.resolve_attr(mod.modname, lock_attr)
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for tgt in targets:
+                if isinstance(tgt, ast.Attribute) \
+                        and isinstance(tgt.value, ast.Name) \
+                        and tgt.value.id == "self":
+                    if spec is not None:
+                        out[(cls.name, tgt.attr)] = spec.name
+    return out
+
+
+class _Checker(FunctionWalker):
+    def __init__(self, cfg, index, fi, annotations, findings):
+        super().__init__(cfg, index, fi)
+        self.annotations = annotations
+        self.findings = findings
+
+    def on_access(self, attr, is_store, node):
+        if self.fi.cls is None:
+            return
+        lock = self.annotations.get((self.fi.cls, attr))
+        if lock is None or lock in self.held:
+            return
+        if self.fi.node.name == "__init__":
+            return                      # construction precedes sharing
+        line = node.lineno
+        rule = "GB001" if is_store else "GB002"
+        f = Finding(rule, self.fi.module.rel, line, self.fi.key,
+                    f"self.{attr} ({'write' if is_store else 'read'}) "
+                    f"outside its guard {lock}")
+        if UNGUARDED_TOKEN in self.fi.module.comment(line):
+            f.suppressed = True
+        self.findings.append(f)
+
+
+def run(cfg: AnalysisConfig, modules: list[ModuleInfo]) -> list[Finding]:
+    index = PackageIndex(modules)
+    findings: list[Finding] = []
+    for mod in modules:
+        annotations = collect_annotations(cfg, mod)
+        if not annotations:
+            continue
+        for fi in index.functions.values():
+            if fi.module is not mod or fi.cls is None:
+                continue
+            w = _Checker(cfg, index, fi, annotations, findings)
+            try:
+                w.run()
+            except RecursionError:
+                pass
+    # deduplicate repeated hits on the same line/attr (e.g. `a = b = x`)
+    seen: set[tuple] = set()
+    out = []
+    for f in findings:
+        k = (f.rule, f.path, f.line, f.message)
+        if k not in seen:
+            seen.add(k)
+            out.append(f)
+    return out

@@ -1,0 +1,197 @@
+"""Lock-order pass: check every acquisition in the package against the
+``LOCK_ORDER`` registry rank order.
+
+Rules:
+
+  * **LO001** rank inversion — acquiring a lock whose rank is below a
+    lock already held (directly, or transitively through a resolved
+    intra-package call).  Rank order is total, so passing LO001
+    everywhere also proves the acquisition graph acyclic.
+  * **LO002** re-acquiring a held non-reentrant lock (self-deadlock).
+  * **LO003** acquiring any lock — or invoking an opaque callback —
+    while holding a LEAF lock.
+  * **LO004** blocking call (endpoint RPC, ``sleep``/``sleep_us``,
+    ``join``, ``Event.wait``) while holding a LEAF lock.
+  * **LO005** a ``threading`` lock/condition/semaphore assigned to a
+    ``self`` attribute that the registry does not name.
+  * **LO006** exclusion pair (``NEVER_TOGETHER``) held together.
+
+Suppress a single line with ``# lock-order: ok <reason>``; sanctioned
+edges live in ``repro.concurrency.SANCTIONED_EDGES``.
+"""
+from __future__ import annotations
+
+import ast
+
+from .core import (AnalysisConfig, Finding, FunctionWalker, ModuleInfo,
+                   PackageIndex, SUPPRESS_TOKEN, build_summaries)
+
+_LOCK_CTORS = {"Lock", "RLock", "Condition", "Semaphore",
+               "BoundedSemaphore"}
+
+
+class _Checker(FunctionWalker):
+    def __init__(self, cfg, index, fi, summaries, findings):
+        super().__init__(cfg, index, fi)
+        self.summaries = summaries
+        self.findings = findings
+
+    # ------------------------------------------------------------ helpers
+    def _emit(self, rule: str, node: ast.AST, msg: str) -> None:
+        line = getattr(node, "lineno", self.fi.node.lineno)
+        f = Finding(rule, self.fi.module.rel, line, self.fi.key, msg)
+        if SUPPRESS_TOKEN in self.fi.module.comment(line):
+            f.suppressed = True
+        self.findings.append(f)
+
+    def _check_edge(self, new: str, node: ast.AST,
+                    via: str | None = None) -> None:
+        tail = f" (via {via})" if via else ""
+        nspec = self.cfg.by_name[new]
+        for held in self.held:
+            if frozenset({held, new}) in self.cfg.never_together:
+                if held != new:
+                    self._emit("LO006", node,
+                               f"exclusion pair held together: {held} "
+                               f"with {new}{tail}")
+                continue
+            if held == new:
+                if via is None and not nspec.reentrant \
+                        and new not in self.cfg.same_name_ok:
+                    self._emit("LO002", node,
+                               f"re-acquiring non-reentrant {new} "
+                               f"already held{tail}")
+                continue
+            if (held, new) in self.cfg.sanctioned:
+                continue
+            hspec = self.cfg.by_name[held]
+            if hspec.leaf:
+                self._emit("LO003", node,
+                           f"acquires {new} while holding LEAF "
+                           f"{held}{tail}")
+            elif hspec.rank > nspec.rank:
+                self._emit("LO001", node,
+                           f"rank inversion: acquires {new} (rank "
+                           f"{nspec.rank}) while holding {held} (rank "
+                           f"{hspec.rank}){tail}")
+
+    # -------------------------------------------------------------- hooks
+    def on_acquire(self, lockname, node):
+        self._check_edge(lockname, node)
+
+    def on_blocking(self, desc, node):
+        for held in self.held:
+            if self.cfg.by_name[held].leaf:
+                self._emit("LO004", node,
+                           f"blocking call {desc} while holding LEAF "
+                           f"{held}")
+
+    def on_opaque_call(self, desc, node):
+        for held in self.held:
+            if self.cfg.by_name[held].leaf:
+                self._emit("LO003", node,
+                           f"opaque {desc} invoked while holding LEAF "
+                           f"{held} (a callback may acquire anything)")
+
+    def on_call(self, target, node):
+        if not self.held:
+            return
+        summ = self.summaries.get(target.key)
+        if summ is None:
+            # nested function: summarize on the fly
+            sub_summaries = dict(self.summaries)
+            from .core import FuncSummary
+            probe = _Collector(self.cfg, self.index, target,
+                               sub_summaries)
+            summ = FuncSummary()
+            try:
+                probe.run()
+                summ = probe.out
+            except RecursionError:
+                return
+        for lockname in sorted(summ.acquires):
+            if lockname in self.held and \
+                    self.cfg.by_name[lockname].reentrant:
+                continue
+            self._check_edge(lockname, node, via=target.key)
+        if summ.blocks:
+            self.on_blocking(f"call into {target.key}", node)
+        if summ.opaque:
+            self.on_opaque_call(f"callback via {target.key}", node)
+
+
+class _Collector(FunctionWalker):
+    """Summary collector for nested functions hit during checking."""
+
+    def __init__(self, cfg, index, fi, summaries):
+        super().__init__(cfg, index, fi)
+        self.summaries = summaries
+        from .core import FuncSummary
+        self.out = FuncSummary()
+
+    def on_acquire(self, lockname, node):
+        self.out.acquires.add(lockname)
+
+    def on_blocking(self, desc, node):
+        self.out.blocks = True
+
+    def on_opaque_call(self, desc, node):
+        self.out.opaque = True
+
+    def on_call(self, target, node):
+        if target.key in self.summaries:
+            self.out.merge(self.summaries[target.key])
+
+
+def _check_registered(cfg: AnalysisConfig, mod: ModuleInfo,
+                      findings: list) -> None:
+    """LO005: every threading primitive assigned to a self attribute
+    must be a registered site (or a registered alias like _mig_cv)."""
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        tgt = node.targets[0]
+        if not (isinstance(tgt, ast.Attribute)
+                and isinstance(tgt.value, ast.Name)
+                and tgt.value.id == "self"):
+            continue
+        call = node.value
+        # peel `witness_lock("name", threading.X(...))` wrappers
+        if isinstance(call, ast.Call) and isinstance(
+                call.func, (ast.Name, ast.Attribute)):
+            fname = call.func.id if isinstance(call.func, ast.Name) \
+                else call.func.attr
+            if fname in ("witness_lock", "witness_condition") \
+                    and len(call.args) == 2:
+                call = call.args[1]
+        if not (isinstance(call, ast.Call)
+                and isinstance(call.func, ast.Attribute)
+                and isinstance(call.func.value, ast.Name)
+                and call.func.value.id == "threading"
+                and call.func.attr in _LOCK_CTORS):
+            continue
+        if cfg.resolve_attr(mod.modname, tgt.attr) is None:
+            f = Finding("LO005", mod.rel, node.lineno, "",
+                        f"threading.{call.func.attr} assigned to "
+                        f"self.{tgt.attr} is not in the LOCK_ORDER "
+                        f"registry")
+            if SUPPRESS_TOKEN in mod.comment(node.lineno):
+                f.suppressed = True
+            findings.append(f)
+
+
+def run(cfg: AnalysisConfig, modules: list[ModuleInfo]) -> list[Finding]:
+    index = PackageIndex(modules)
+    summaries = build_summaries(cfg, index)
+    findings: list[Finding] = []
+    for mod in modules:
+        _check_registered(cfg, mod, findings)
+    for fi in index.functions.values():
+        w = _Checker(cfg, index, fi, summaries, findings)
+        try:
+            w.run()
+        except RecursionError:
+            pass
+    # comprehension-based semaphore lists (`self._windows = [...]`) are
+    # not Call nodes — LO005 intentionally sees only direct ctor calls.
+    return findings

@@ -1,0 +1,182 @@
+"""RPC-surface pass: the ``ShardService`` command vocabulary must stay
+consistent across the server dispatch table and both endpoint clients.
+
+Rules:
+
+  * **RPC001** a string-literal method name at a call site
+    (``.call("x")`` / ``.call_submit("x")`` / a ``(shard, "x", kwargs)``
+    round tuple) that is not a public ``ShardService`` method — a typo
+    would only explode at runtime on the remote path.
+  * **RPC002** a public ``ShardService`` method no call site in the
+    repo ever invokes and that is not in the reviewed
+    ``surface_only`` table (operator/diagnostic RPCs) — dead surface.
+  * **RPC003** a public ``ShardService`` method whose parameter
+    defaults are not wire-type constants (None/bool/int/float/str) —
+    the serializer vocabulary cannot round-trip them.
+  * **RPC004** a ``RopShardEndpoint`` result path (``call`` /
+    ``call_result`` / ``fetch_result``) that does not map remote
+    errors through ``_map_error`` — remote ``DeviceFailedError`` would
+    lose its type and the supervisor its failure signal.
+"""
+from __future__ import annotations
+
+import ast
+
+from .core import AnalysisConfig, Finding, ModuleInfo
+
+SERVICE_CLASS = "ShardService"
+ROP_CLASS = "RopShardEndpoint"
+ERROR_MAPPED = ("call", "call_result", "fetch_result")
+
+# Public service methods that are intentionally operator/diagnostic
+# surface (invoked from examples, benchmarks or tests — not from the
+# coordinator's own code paths).  Reviewed: each carries its reason.
+SURFACE_ONLY: dict[str, str] = {
+    "export_adjacency": "oracle/validation dump used by tests only",
+    "fail": "fault-injection drill entry point (examples/CI)",
+    "clear_cache": "operator cache reset (examples/benchmarks)",
+}
+
+
+def _service_class(modules: list[ModuleInfo]):
+    for mod in modules:
+        for node in mod.tree.body:
+            if isinstance(node, ast.ClassDef) and \
+                    node.name == SERVICE_CLASS:
+                return mod, node
+    return None, None
+
+
+def _collect_call_names(modules: list[ModuleInfo]) -> dict[str, list]:
+    """method-name -> [(rel, line), ...] from endpoint call sites."""
+    used: dict[str, list] = {}
+
+    def note(name, mod, node):
+        used.setdefault(name, []).append((mod.rel, node.lineno))
+
+    for mod in modules:
+        # the bare (shard, "name", kwargs) round-tuple idiom only lives
+        # in the store/serve layers; applying it repo-wide would snag
+        # unrelated 3-tuples with a string member.
+        tuples_ok = "store/" in mod.rel or "serve/" in mod.rel
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and isinstance(
+                    node.func, ast.Attribute) and node.func.attr in (
+                        "call", "call_submit") and node.args:
+                a0 = node.args[0]
+                if isinstance(a0, ast.Constant) and isinstance(
+                        a0.value, str) and a0.value.isidentifier():
+                    note(a0.value, mod, a0)
+            elif tuples_ok and isinstance(node, ast.Tuple) \
+                    and len(node.elts) == 3:
+                mid = node.elts[1]
+                if isinstance(mid, ast.Constant) \
+                        and isinstance(mid.value, str) \
+                        and mid.value.isidentifier() \
+                        and isinstance(node.elts[2],
+                                       (ast.Dict, ast.Call, ast.Name)):
+                    note(mid.value, mod, mid)
+    return used
+
+
+_WIRE_CONST = (type(None), bool, int, float, str)
+
+
+def _folds_to_wire_const(node: ast.AST) -> bool:
+    """True for expressions built purely from wire-type constants
+    (``1 << 18``, ``-1``, ``60.0 * 5`` ...)."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, _WIRE_CONST)
+    if isinstance(node, ast.UnaryOp):
+        return _folds_to_wire_const(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _folds_to_wire_const(node.left) \
+            and _folds_to_wire_const(node.right)
+    return False
+
+
+def run(cfg: AnalysisConfig, modules: list[ModuleInfo],
+        extra_modules: list[ModuleInfo] | None = None) -> list[Finding]:
+    findings: list[Finding] = []
+    svc_mod, svc = _service_class(modules)
+    if svc is None:
+        return findings
+    public = {n.name: n for n in svc.body
+              if isinstance(n, ast.FunctionDef)
+              and not n.name.startswith("_")}
+
+    used = _collect_call_names(modules)
+    used_everywhere = dict(used)
+    for name, sites in _collect_call_names(extra_modules or []).items():
+        used_everywhere.setdefault(name, []).extend(sites)
+
+    # RPC001 — call-site vocabulary must resolve to the service surface
+    for name, sites in used.items():
+        if name not in public:
+            for rel, line in sites:
+                findings.append(Finding(
+                    "RPC001", rel, line, "",
+                    f'call site names "{name}", which is not a public '
+                    f"{SERVICE_CLASS} method"))
+
+    # RPC002 — the surface must be reachable (or reviewed surface-only)
+    for name, node in public.items():
+        if name not in used_everywhere and name not in SURFACE_ONLY:
+            findings.append(Finding(
+                "RPC002", svc_mod.rel, node.lineno,
+                f"{svc_mod.modname}.{SERVICE_CLASS}.{name}",
+                f"public service method {name} has no call site and no "
+                f"surface_only entry"))
+
+    # RPC003 — wire-safe parameter defaults.  A module-level
+    # `_NAME = <constant>` counts: it serializes like the literal.
+    mod_consts: set[str] = set()
+    for stmt in svc_mod.tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and _folds_to_wire_const(stmt.value):
+            mod_consts.add(stmt.targets[0].id)
+    for name, node in public.items():
+        args = node.args
+        for d in list(args.defaults) + [d for d in args.kw_defaults
+                                        if d is not None]:
+            ok = (isinstance(d, ast.Constant)
+                  and isinstance(d.value, _WIRE_CONST)) \
+                or (isinstance(d, ast.Name) and d.id in mod_consts)
+            if not ok:
+                findings.append(Finding(
+                    "RPC003", svc_mod.rel, d.lineno,
+                    f"{svc_mod.modname}.{SERVICE_CLASS}.{name}",
+                    f"parameter default in {name} is not a wire-type "
+                    f"constant (None/bool/int/float/str)"))
+        if args.vararg is not None or args.kwarg is not None:
+            findings.append(Finding(
+                "RPC003", svc_mod.rel, node.lineno,
+                f"{svc_mod.modname}.{SERVICE_CLASS}.{name}",
+                f"{name} takes *args/**kwargs — not an explicit wire "
+                f"signature"))
+
+    # RPC004 — RoP result paths route errors through _map_error
+    for mod in modules:
+        for node in mod.tree.body:
+            if not (isinstance(node, ast.ClassDef)
+                    and node.name == ROP_CLASS):
+                continue
+            for meth in node.body:
+                if not (isinstance(meth, ast.FunctionDef)
+                        and meth.name in ERROR_MAPPED):
+                    continue
+                mapped = any(
+                    isinstance(sub, ast.Call)
+                    and isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr == "_map_error"
+                    for h in [x for x in ast.walk(meth)
+                              if isinstance(x, ast.ExceptHandler)]
+                    for sub in ast.walk(h))
+                if not mapped:
+                    findings.append(Finding(
+                        "RPC004", mod.rel, meth.lineno,
+                        f"{mod.modname}.{ROP_CLASS}.{meth.name}",
+                        f"{meth.name} does not map remote errors via "
+                        f"_map_error in an except handler"))
+    return findings

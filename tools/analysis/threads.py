@@ -1,0 +1,131 @@
+"""Thread-lifecycle lint.
+
+Rules:
+
+  * **TL001** a ``threading.Thread`` that is neither ``daemon=True``
+    nor provably ``.join()``ed (by the name/attribute it was assigned
+    to, anywhere in the module).
+  * **TL002** a thread target (resolved within the module) that loops
+    (``while``/``for``) without consulting a stop ``Event``
+    (``.is_set()`` / ``<stop>.wait(...)``) — an unstoppable loop.
+  * **TL003** a thread stored on ``self`` (a persistent worker) created
+    without ``name=`` — anonymous workers make stacks and the runtime
+    witness unreadable.
+
+Suppress a line with ``# lock-order: ok <reason>`` (shared token).
+"""
+from __future__ import annotations
+
+import ast
+
+from .core import (AnalysisConfig, Finding, ModuleInfo, SUPPRESS_TOKEN,
+                   _attr_chain)
+
+
+def _is_thread_ctor(call: ast.Call) -> bool:
+    f = call.func
+    return (isinstance(f, ast.Attribute) and f.attr == "Thread"
+            and isinstance(f.value, ast.Name)
+            and f.value.id == "threading") or \
+           (isinstance(f, ast.Name) and f.id == "Thread")
+
+
+def _kw(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _target_func(call: ast.Call, mod: ModuleInfo):
+    """Resolve ``target=self._worker`` / ``target=loop`` to a function
+    node within the module."""
+    tgt = _kw(call, "target")
+    if tgt is None:
+        return None
+    names = []
+    chain = _attr_chain(tgt)
+    if chain:
+        names.append(chain[-1])
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef) and node.name in names:
+            return node
+    return None
+
+
+def _loops_without_stop(fn: ast.FunctionDef) -> ast.stmt | None:
+    """First unbounded-looking loop that never consults a stop event."""
+    src_names = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.While, ast.For)):
+            ok = False
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call) and isinstance(
+                        sub.func, ast.Attribute) and sub.func.attr in (
+                            "is_set", "wait"):
+                    ok = True
+                if isinstance(sub, ast.Attribute) and "stop" in sub.attr:
+                    ok = True
+                if isinstance(sub, (ast.Break, ast.Return, ast.Raise)):
+                    ok = True           # bounded by an explicit exit
+            if isinstance(node, ast.While) and not ok:
+                return node
+    del src_names
+    return None
+
+
+def run(cfg: AnalysisConfig, modules: list[ModuleInfo]) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in modules:
+        joined: set[str] = set()        # names .join() is called on
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and isinstance(
+                    node.func, ast.Attribute) and node.func.attr == "join":
+                chain = _attr_chain(node.func.value)
+                if chain:
+                    joined.add(chain[-1])
+                elif isinstance(node.func.value, ast.Subscript):
+                    # `self._rebuild_threads[s].join()` etc. — credit the
+                    # container attribute
+                    inner = _attr_chain(node.func.value.value)
+                    if inner:
+                        joined.add(inner[-1])
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.value, ast.Call)
+                    and _is_thread_ctor(node.value)):
+                continue
+            call = node.value
+            line = node.lineno
+            suppressed = SUPPRESS_TOKEN in mod.comment(line)
+            tgt = node.targets[0]
+            chain = _attr_chain(tgt)
+            bind = chain[-1] if chain else None
+            persistent = chain is not None and chain[0] == "self"
+            daemon = _kw(call, "daemon")
+            is_daemon = isinstance(daemon, ast.Constant) \
+                and daemon.value is True
+
+            def emit(rule, msg):
+                findings.append(Finding(rule, mod.rel, line, "", msg,
+                                        suppressed=suppressed))
+
+            if not is_daemon and (bind is None or bind not in joined):
+                emit("TL001", f"non-daemon Thread bound to "
+                     f"{bind or '<expr>'} is never joined in this "
+                     f"module")
+            if persistent and _kw(call, "name") is None:
+                emit("TL003", f"persistent worker self.{bind} created "
+                     f"without name=")
+            fn = _target_func(call, mod)
+            if fn is not None:
+                loop = _loops_without_stop(fn)
+                if loop is not None:
+                    findings.append(Finding(
+                        "TL002", mod.rel, loop.lineno, fn.name,
+                        f"thread target {fn.name} loops without "
+                        f"checking a stop Event",
+                        suppressed=SUPPRESS_TOKEN in
+                        mod.comment(loop.lineno)))
+    return findings
